@@ -1,0 +1,36 @@
+"""Shared benchmark helpers.
+
+Fidelity benchmarks price the chains the VM actually executes with the
+paper's measured constants (repro.core.cost); wall-clock rows additionally
+time our JAX implementations on this host (relative comparisons only — the
+container is CPU).  Output format: ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+Row = Tuple[str, float, str]
+
+# calibrated effective payload bandwidth: paper Fig. 10 reports a 64 KB
+# get in 16.22 us ~= 5% above a single READ's RTT -> ~38.6 Gb/s effective
+# (IB wire 92 Gb/s minus PCIe/metadata overheads at this message size)
+EFF_PAYLOAD_GBPS = 38.6
+
+
+def transfer_us(n_bytes: float) -> float:
+    return n_bytes * 8.0 / (EFF_PAYLOAD_GBPS * 1e3)
+
+
+def timeit_us(fn: Callable, n: int = 20, warmup: int = 3) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def emit(rows: List[Row]):
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")

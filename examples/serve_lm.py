@@ -1,0 +1,59 @@
+"""End-to-end driver: serve a small LM with batched requests.
+
+The decode path's KV cache is the RedN distributed KV store (DESIGN.md):
+every decode step is a batched *get* against the cache.  The engine also
+exercises isolation (token buckets per tenant) and failure resiliency
+(the host driver dies mid-serving; device state keeps decoding).
+
+Run: PYTHONPATH=src python examples/serve_lm.py [--steps 24]
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.models import model as M
+from repro.serve import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=24)
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    args = ap.parse_args()
+
+    cfg = registry.smoke_config(args.arch)
+    print(f"serving {cfg.name}: {cfg.num_layers}L d={cfg.d_model}")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, s_max=64, n_slots=8, n_clients=3,
+                      rate_per_us=0.5, burst=4.0)
+
+    # admission: 3 tenants, tenant 0 is greedy
+    requests = [(0, 11), (0, 12), (0, 13), (0, 14), (0, 15),
+                (1, 21), (2, 31)]
+    admitted = eng.admit([c for c, _ in requests])
+    slot = 0
+    for ok, (client, token) in zip(admitted, requests):
+        status = "admitted" if ok else "THROTTLED"
+        print(f"  tenant {client} request(token={token}): {status}")
+        if ok and slot < eng.n_slots:
+            eng.add_request(slot, client, token)
+            slot += 1
+
+    print(f"decoding {args.steps} steps for {slot} sequences ...")
+    for i in range(args.steps):
+        toks = eng.step()
+        if i == args.steps // 2:
+            eng.crash_host_driver()
+            print(f"  step {i}: HOST DRIVER CRASHED "
+                  f"(alive={eng.host_alive()}) — serving continues")
+        if i % 8 == 0:
+            print(f"  step {i}: tokens={toks[:slot].tolist()}")
+    eng.restart_host_driver()
+    print(f"stats: {eng.stats}")
+    print("done — zero decode interruptions through the crash.")
+
+
+if __name__ == "__main__":
+    main()

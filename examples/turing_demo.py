@@ -1,0 +1,49 @@
+"""Turing-completeness demo: a stored-program computer made of RDMA verbs.
+
+Loads ADDLEQ guest programs into the chain interpreter (Appendix A made
+constructive) and runs them: every guest instruction executes as ~26 RDMA
+verbs — indirect mov fetches, a patched ADD, Calc-verb clamps for the
+conditional branch, and WQ recycling for nontermination.
+
+Run: PYTHONPATH=src python examples/turing_demo.py
+"""
+import numpy as np
+
+from repro.core import turing
+
+
+def main():
+    interp = turing.build_interpreter()
+    print(f"interpreter: {interp.lap_words} verbs per guest instruction")
+
+    print("== guest: add(17, 25) ==")
+    st = interp.load(turing.guest_add(interp, 17, 25))
+    out = interp.run(st, max_steps=interp.lap_words * 20)
+    mem = np.asarray(out.mem)
+    print(f"  result = {mem[interp.data_base + 1]}   "
+          f"(halted={bool(out.halted)}, verbs executed={int(out.steps)})")
+
+    print("== guest: multiply(7, 6) via a guest-level loop ==")
+    st = interp.load(turing.guest_multiply(interp, 7, 6))
+    out = interp.run(st, max_steps=interp.lap_words * 100)
+    mem = np.asarray(out.mem)
+    print(f"  result = {mem[interp.data_base + 2]}   "
+          f"(halted={bool(out.halted)}, verbs executed={int(out.steps)})")
+
+    print("== guest: countdown(5) — conditional branch + halt ==")
+    st = interp.load(turing.guest_countdown(interp, 5))
+    out = interp.run(st, max_steps=interp.lap_words * 40)
+    mem = np.asarray(out.mem)
+    print(f"  counter = {mem[interp.data_base]}   "
+          f"(halted={bool(out.halted)})")
+
+    print("== nontermination (T3): an infinite guest loop ==")
+    d, i0 = interp.data_base, interp.instr_base
+    st = interp.load(turing.AddleqProgram([(d, d + 1, i0)],
+                                          {d: 0, d + 1: 0}))
+    out = interp.run(st, max_steps=500)
+    print(f"  after 500 fuel: halted={bool(out.halted)} (still running)")
+
+
+if __name__ == "__main__":
+    main()

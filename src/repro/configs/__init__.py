@@ -1,0 +1,3 @@
+"""Assigned-architecture configs + the paper's own workload config."""
+from .registry import (ARCHS, LONG_OK, SHAPES, get_config, input_specs,  # noqa: F401
+                       shape_supported, smoke_config)

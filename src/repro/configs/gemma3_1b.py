@@ -1,0 +1,7 @@
+"""Assigned architecture config (see archs.py for the exact fields)."""
+from .archs import GEMMA3_1B as CONFIG  # noqa: F401
+from .archs import smoke_of
+
+
+def smoke_config():
+    return smoke_of(CONFIG)

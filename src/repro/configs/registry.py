@@ -1,0 +1,95 @@
+"""Registry: arch lookup, smoke configs, per-shape abstract input specs.
+
+The four assigned input shapes (per arch):
+  train_4k    : seq_len=4096,   global_batch=256   -> train_step
+  prefill_32k : seq_len=32768,  global_batch=32    -> prefill_step
+  decode_32k  : seq_len=32768,  global_batch=128   -> serve_step (1 token)
+  long_500k   : seq_len=524288, global_batch=1     -> serve_step; only for
+                sub-quadratic archs (SSM / hybrid / SWA / mostly-local) —
+                skips recorded in DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import model as model_lib
+from ..models.config import ModelConfig
+from . import archs
+
+ARCHS: Tuple[str, ...] = tuple(archs.CONFIGS.keys())
+
+SHAPES: Dict[str, Dict] = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+# long-context decode applicability (DESIGN.md §4): window-bounded or O(1)
+# state archs run; pure-full-attention archs skip.
+LONG_OK = {
+    "mixtral-8x7b": True,            # SWA everywhere
+    "llama4-maverick-400b-a17b": False,   # NoPE layers are full-attention
+    "qwen3-1.7b": False,
+    "smollm-135m": False,
+    "glm4-9b": False,
+    "gemma3-1b": True,               # 5:1 local; global layers seq-sharded
+    "seamless-m4t-medium": False,
+    "phi-3-vision-4.2b": False,
+    "rwkv6-7b": True,                # O(1) recurrent state
+    "recurrentgemma-9b": True,       # RG-LRU + local(2048)
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    return archs.CONFIGS[name]
+
+
+def smoke_config(name: str) -> ModelConfig:
+    return archs.smoke_of(archs.CONFIGS[name])
+
+
+def shape_supported(name: str, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k" and not LONG_OK[name]:
+        return False, "full-attention arch: 500k dense decode skipped"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: str,
+                dtype=jnp.int32) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    Returns {'kind', 'batch'| 'token'/'caches'/'lengths', ...} matching the
+    entry point's signature; no device allocation happens here.
+    """
+    info = SHAPES[shape]
+    b, s = info["batch"], info["seq"]
+    if info["kind"] in ("train", "prefill"):
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "targets": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "loss_mask": jax.ShapeDtypeStruct((b, s), jnp.bfloat16),
+        }
+        if cfg.is_encdec:
+            src = int(s * cfg.encoder_seq_ratio)
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (b, src, cfg.frontend_dim), jnp.bfloat16)
+        if cfg.frontend == "vision" and cfg.frontend_tokens:
+            batch["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
+        return dict(kind=info["kind"], batch=batch, seq=s, global_batch=b)
+
+    # decode: one new token against an s-long cache
+    caches = model_lib.abstract_cache(cfg, b, s)
+    return dict(
+        kind="decode",
+        token=jax.ShapeDtypeStruct((b,), jnp.int32),
+        caches=caches,
+        lengths=jax.ShapeDtypeStruct((b,), jnp.int32),
+        enc_lengths=(jax.ShapeDtypeStruct((b,), jnp.int32)
+                     if cfg.is_encdec else None),
+        seq=s, global_batch=b)

@@ -1,0 +1,6 @@
+"""RedN core: the paper's computational framework (self-modifying RDMA
+chains, Turing-complete constructs) re-hosted on JAX/TPU."""
+from . import assembler, constructs, cost, isa, machine  # noqa: F401
+from .assembler import Program, WQBuilder, WRRef  # noqa: F401
+from .machine import (MachineSpec, VMState, deliver, enable, init_state,  # noqa: F401
+                      ring, run, run_batch, step, total_time_us)

@@ -1,0 +1,257 @@
+"""RedN programming constructs (paper §3.3–§3.4, Appendix A).
+
+``if`` — Fig. 4: a CAS whose destination is the packed ``opcode|id`` control
+word of a later (managed) WR.  The comparison ``x == y`` piggybacks on the
+``opcode == NOOP`` check because ``NOOP`` encodes as 0 in the high bits, so a
+raw 24-bit operand *is* the packed comparand.  On success the swap rewrites
+``NOOP -> WRITE`` and the converted WR performs the then-branch.
+
+``while`` (unrolled) — Fig. 5: the iteration body replicated with statically
+baked addresses; per-iteration budget 1 copy + 1 atomic + 3 WAIT/ENABLE
+(Table 2).
+
+``while`` with ``break`` — Fig. 6: the converted WRITE overwrites the *next*
+iteration's conditional WR with a response-WRITE whose completion is
+suppressed, so (a) the response fires and (b) the following iteration's WAIT
+never satisfies — subsequent iterations are never executed.
+
+``while`` (recycled) — §3.4: a single circular managed WQ that re-ENABLEs
+itself; monotonic wqe_counts are maintained with an ADD per lap and the
+self-modified conditional WR is re-armed with restore READs.  Our VM fetches
+WRs at execution inside the enabled window, so one crawling-window ENABLE
+subsumes the paper's tail WAIT+ENABLE pair; the per-lap verb budget is
+reported by the benchmarks next to Table 2's.
+
+``mov`` emulation — Appendix A: immediate / indirect / indexed addressing
+from WRITE + doorbell-ordered self-patching (+ ADD for indexed), sufficient
+to emulate Dolan's mov-machine; together with WQ-recycling nontermination
+this is the Turing-completeness construction (see ``turing.py`` for a
+running stored-program interpreter built from it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+from . import isa
+from .assembler import Program, WQBuilder, WRRef
+
+
+# ---------------------------------------------------------------------------
+# if (Fig. 4)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class IfRefs:
+    cas: WRRef
+    cond_wr: WRRef      # R2: the NOOP that becomes the then-branch WRITE
+    enable: WRRef
+    x_ctrl_addr: int    # scatter x here (24-bit) -> pack(NOOP, x)
+    y_opa_addr: int     # scatter/patch y here (24-bit comparand)
+
+
+def emit_if(ctl: WQBuilder, mod: WQBuilder, *, y: int = 0, x: int = 0,
+            then_src: int, then_dst: int, then_len: int = 1,
+            wait_for: Optional[WRRef] = None,
+            converted_signaled: bool = True) -> IfRefs:
+    """Emit Fig. 4's conditional: ``if (x == y) then WRITE(src->dst)``.
+
+    ``x`` sits in the conditional WR's id field (24-bit, may be scattered at
+    runtime via ``x_ctrl_addr``); ``y`` in the CAS old field (``y_opa_addr``).
+    """
+    flags_kw = dict(signaled=converted_signaled)
+    cond = mod.post(isa.NOOP, id_=x, src=then_src, dst=then_dst,
+                    ln=then_len, tag="if.cond", **flags_kw)
+    if wait_for is not None:
+        ctl.wait_for(wait_for, tag="if.wait_input")
+    cas = ctl.cas(dst=cond.ctrl_addr, old=isa.pack_ctrl(isa.NOOP, y),
+                  new=isa.pack_ctrl(isa.WRITE, 0), tag="if.cas")
+    en = ctl.enable(mod, upto=mod.n_posted, tag="if.enable")
+    return IfRefs(cas=cas, cond_wr=cond, enable=en,
+                  x_ctrl_addr=cond.ctrl_addr, y_opa_addr=cas.addr("opa"))
+
+
+# ---------------------------------------------------------------------------
+# while, unrolled (Fig. 5) and with break (Fig. 6)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class WhileRefs:
+    cond_wrs: List[WRRef]          # C_i per iteration (+ tail slot if break)
+    cas_wrs: List[WRRef]
+    x_opa_addrs: List[int]         # scatter the searched x into each CAS here
+    ctrl_addrs: List[int]          # A[i] lands here (pack(NOOP, A[i]))
+
+
+def emit_while_search_unrolled(
+        prog: Program, body: WQBuilder, ctl: WQBuilder, mod: WQBuilder, *,
+        n_iters: int, keys: Optional[Sequence[int]] = None, x: int = 0,
+        resp_region: int, resp_payloads: Sequence[int],
+        use_break: bool = False) -> WhileRefs:
+    """Unrolled search: respond with ``resp_payloads[i]`` when x == keys[i].
+
+    keys[i] may be None/static — at runtime a READ (emitted by the caller,
+    e.g. the hash-lookup program) typically patches ``ctrl_addrs[i]``.
+    Per-iteration verbs: 1C (cond NOOP) + 1A (CAS) + 3E (WAIT body, WAIT ctl,
+    ENABLE ctl) — Table 2's ``while/unrolled`` row.
+    """
+    assert len(resp_payloads) == n_iters
+    cond_wrs: List[WRRef] = []
+    cas_wrs: List[WRRef] = []
+    x_opa_addrs: List[int] = []
+    ctrl_addrs: List[int] = []
+
+    # payload words holding each iteration's response value
+    payload_addrs = [prog.word(int(v)) for v in resp_payloads]
+
+    # conditional WRs, one per iteration (+ tail response placeholder when
+    # breaking: C_{i+1} is rewritten wholesale into the response WRITE)
+    slots = n_iters + (1 if use_break else 0)
+    for i in range(slots):
+        if i < n_iters:
+            key_i = 0 if keys is None else int(keys[i]) & isa.ID_MASK
+            if use_break:
+                cond_wrs.append(mod.post(isa.NOOP, id_=key_i, tag=f"while.c{i}"))
+            else:
+                cond_wrs.append(mod.post(
+                    isa.NOOP, id_=key_i, src=payload_addrs[i],
+                    dst=resp_region, ln=1, tag=f"while.c{i}"))
+        else:
+            cond_wrs.append(mod.post(isa.NOOP, tag="while.tail"))
+
+    if use_break:
+        # prepared 8-word WR templates: converting C_i makes it WRITE this
+        # template over C_{i+1} -> C_{i+1} becomes a completion-suppressed
+        # response WRITE (Fig. 6: one converted verb both responds and
+        # starves the next iteration's WAIT).
+        for i in range(n_iters):
+            tmpl = prog.alloc(isa.WR_WORDS, [
+                isa.pack_ctrl(isa.WRITE, 0), isa.FLAG_SUPPRESS_COMPLETION,
+                payload_addrs[i], resp_region, 1, 0, 0, -1])
+            # retarget C_i's (latent) WRITE at the next conditional WR
+            wr = mod.wrs[cond_wrs[i].slot]
+            wr["src"], wr["dst"], wr["ln"] = tmpl, cond_wrs[i + 1].base, 8
+
+    # driving chain: body CASes gated on mod completions; ctl releases mod
+    for i in range(n_iters):
+        if i > 0:
+            body.wait(mod, i, tag=f"while.gate{i}")
+        cas = body.cas(dst=cond_wrs[i].ctrl_addr,
+                       old=isa.pack_ctrl(isa.NOOP, x),
+                       new=isa.pack_ctrl(isa.WRITE, 0), tag=f"while.cas{i}")
+        cas_wrs.append(cas)
+        x_opa_addrs.append(cas.addr("opa"))
+        ctrl_addrs.append(cond_wrs[i].ctrl_addr)
+        ctl.wait(body, cas.completion_count, tag=f"while.sync{i}")
+        ctl.enable(mod, upto=i + 1, tag=f"while.en{i}")
+    if use_break:
+        # release the tail slot so a break at the last iteration can respond
+        ctl.wait(body, cas_wrs[-1].completion_count, tag="while.sync_tail")
+        ctl.enable(mod, upto=n_iters + 1, tag="while.en_tail")
+
+    return WhileRefs(cond_wrs, cas_wrs, x_opa_addrs, ctrl_addrs)
+
+
+# ---------------------------------------------------------------------------
+# while, recycled (§3.4) — unbounded loop with zero CPU involvement
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RecycledLoopRefs:
+    wq: WQBuilder
+    cas: WRRef
+    cond_wr: WRRef
+    lap_words: int
+    x_opa_addr: int
+
+
+def emit_recycled_predicate_loop(
+        prog: Program, *, data_addr: int, x: int,
+        then_src: int, then_dst: int, wq_size: int = 8,
+        max_mem: Optional[int] = None) -> RecycledLoopRefs:
+    """A self-recycling managed WQ evaluating ``if (mem[data] == x)`` forever.
+
+    Layout per lap (crawling enable window):
+      0 CAS        (A)  predicate -> converts slot 2
+      1 ENABLE     (E)  release the rest of the lap (doorbell barrier: the
+                        CAS has completed, so slot 2's rewrite is coherent)
+      2 cond WR    (C)  NOOP or converted then-WRITE
+      3 READ       (C)  restore slot 2's pristine template (re-arm)
+      4 READ       (C)  re-fetch the guarded datum into the CAS comparand
+      5 ADD        (A)  bump slot 1's monotonic enable watermark (+wq_size) —
+                        the wqe_count maintenance §3.4 describes
+      6 NOOP pad / 7 NOOP pad (wrap)
+
+    Budget: 3C + 2A + 1E (+2 pad) per lap; the paper's ConnectX layout is
+    3C + 2A + 4E — our managed window subsumes its tail WAIT+ENABLE pair
+    because the VM fetches at execution within the enabled window (see
+    module docstring).  Benchmarks report both.
+    """
+    wq = prog.add_wq(wq_size, ordering=isa.ORD_DOORBELL, managed=True,
+                     recycled=True, initial_enable=2)
+    cond = None
+    # slot 0: CAS. Its comparand (opa) is refreshed each lap from data_addr
+    # by the slot-4 READ; initial value x.
+    cas = wq.cas(dst=0, old=isa.pack_ctrl(isa.NOOP, x),
+                 new=isa.pack_ctrl(isa.WRITE, 0), tag="loop.cas")
+    # crawling window: each lap's ENABLE must reach past the *next* lap's
+    # ENABLE slot, otherwise the window closes exactly at the wrap boundary
+    en = wq.enable(wq, upto=wq_size + 2, tag="loop.enable")
+    cond = wq.post(isa.NOOP, id_=0, src=then_src, dst=then_dst, ln=1,
+                   tag="loop.cond")
+    # fix CAS target now that cond exists
+    wq.wrs[cas.slot]["dst"] = cond.ctrl_addr
+
+    pristine = prog.alloc(isa.WR_WORDS, [
+        isa.pack_ctrl(isa.NOOP, 0), 0, then_src, then_dst, 1, 0, 0, -1])
+    wq.read(src=pristine, dst=cond.base, ln=isa.WR_WORDS, tag="loop.restore")
+    # refresh the observed datum into the cond WR's id (so the NEXT lap's CAS
+    # compares pack(NOOP, mem[data]) against pack(NOOP, x))
+    wq.read(src=data_addr, dst=cond.ctrl_addr, ln=1, tag="loop.refetch")
+    wq.add(dst=en.addr("opa"), addend=wq_size, tag="loop.bump")
+    while wq.n_posted < wq_size:
+        wq.noop(signaled=False, tag="loop.pad")
+    return RecycledLoopRefs(wq=wq, cas=cas, cond_wr=cond, lap_words=wq_size,
+                            x_opa_addr=cas.addr("opa"))
+
+
+# ---------------------------------------------------------------------------
+# mov emulation (Appendix A)
+# ---------------------------------------------------------------------------
+
+def emit_mov_imm(wq: WQBuilder, value: int, r_dst: int) -> WRRef:
+    """mov R_dst, C  ->  WRITE_IMM C R_dst."""
+    return wq.write_imm(dst=r_dst, value=value, tag="mov.imm")
+
+
+def emit_mov_indirect(ctl: WQBuilder, mod: WQBuilder, r_src: int,
+                      r_dst: int) -> WRRef:
+    """mov R_dst, [R_src]: patch W2.src with *R_src, then W2 copies."""
+    w2 = mod.write(src=0, dst=r_dst, ln=1, tag="mov.ind.w2")
+    ctl.write(src=r_src, dst=w2.addr("src"), ln=1, tag="mov.ind.patch")
+    ctl.enable(mod, upto=mod.n_posted, tag="mov.ind.enable")
+    return w2
+
+
+def emit_mov_indexed(ctl: WQBuilder, mod: WQBuilder, r_src: int, r_off: int,
+                     r_dst: int) -> WRRef:
+    """mov R_dst, [R_src + R_off]: patch, ADD the offset, then copy."""
+    addw = mod.add(dst=0, addend=0, tag="mov.idx.add")      # dst/opa patched
+    w3 = mod.write(src=0, dst=r_dst, ln=1, tag="mov.idx.w3")
+    mod.wrs[addw.slot]["dst"] = w3.addr("src")
+    ctl.write(src=r_src, dst=w3.addr("src"), ln=1, tag="mov.idx.patch_src")
+    ctl.write(src=r_off, dst=addw.addr("opa"), ln=1, tag="mov.idx.patch_off")
+    # two-step enable: the ADD must complete before W3 is released
+    ctl.enable(mod, upto=addw.slot + 1, tag="mov.idx.en_add")
+    ctl.wait(mod, addw.completion_count, tag="mov.idx.wait_add")
+    ctl.enable(mod, upto=w3.slot + 1, tag="mov.idx.en_w3")
+    return w3
+
+
+def emit_mov_store_indirect(ctl: WQBuilder, mod: WQBuilder, r_src: int,
+                            r_dst_ptr: int) -> WRRef:
+    """mov [R_dst], R_src (store form): patch W2.dst with *R_dst_ptr."""
+    w2 = mod.write(src=r_src, dst=0, ln=1, tag="mov.st.w2")
+    ctl.write(src=r_dst_ptr, dst=w2.addr("dst"), ln=1, tag="mov.st.patch")
+    ctl.enable(mod, upto=mod.n_posted, tag="mov.st.enable")
+    return w2

@@ -1,0 +1,121 @@
+"""RedN work-request ISA — the TPU-native 32-bit adaptation.
+
+The paper (RedN, §3) drives a ConnectX RNIC whose work requests (WRs) are
+64-byte WQEs fetched over PCIe, and whose conditional trick CASes the 64-bit
+word holding a WQE's ``opcode`` and (free) ``id`` fields.  On TPU the natural
+word is 32 bits (VPU lanes are 32-bit; int64 is emulated), so this ISA packs
+``opcode:8 | id:24`` into one int32 word.  The operand limit per single CAS
+is therefore 24 bits (paper: 48); wider operands chain multiple CAS exactly
+as RedN §3.5 prescribes ("we can chain together multiple CAS operations to
+handle different segments of a larger operand").
+
+Memory model
+------------
+A flat, word-addressed ``int32`` memory holds *everything*: the work queues
+themselves (the "code region"), data, registers and message buffers.  Code
+living in plain memory is what makes chains self-modifying — a WRITE/CAS/ADD
+whose destination is a field of a later WR edits the program, exactly as the
+RNIC's WQEs live in registered host memory.
+
+Work request layout (8 words)
+-----------------------------
+==== ===========================================================
+word meaning
+==== ===========================================================
+0    packed ``opcode << 24 | (id & 0xFFFFFF)`` — the CAS target
+1    flags (bit0: SUPPRESS_COMPLETION — the `break` trick flips it)
+2    src address (word index); CAS/ADD: return-old address or -1
+3    dst address (word index)
+4    length in words (copy verbs), <= MAX_COPY
+5    operand A: CAS ``old`` / immediate / addend / WAIT count
+6    operand B: CAS ``new`` / WAIT+ENABLE target WQ / SEND target WQ
+7    aux: RECV scatter-table address / free scratch
+==== ===========================================================
+
+Verbs
+-----
+The verb set is exactly what RedN uses on ConnectX-5: data movement
+(WRITE/WRITE_IMM/READ/SEND/RECV), atomics (CAS/ADD), Mellanox "Calc" verbs
+(MAX/MIN — used for inequality predicates, Table 3), and the cross-channel
+ordering verbs (WAIT/ENABLE).  HALT is a *simulation-only* pseudo-verb (it
+marks the point where the client observes the final completion; it is not
+required for Turing completeness — quiescence and WQ recycling provide
+termination/nontermination).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# --- opcodes ---------------------------------------------------------------
+NOOP = 0
+WRITE = 1        # copy mem[src:src+len] -> mem[dst:dst+len] (posted)
+WRITE_IMM = 2    # mem[dst] = opa (immediate)
+READ = 3         # copy mem[src:src+len] -> mem[dst:dst+len] (non-posted cost)
+SEND = 4         # opb >= 0: enqueue payload on WQ opb's message queue
+                 # opb <  0: deliver payload to response region at dst
+RECV = 5         # pop one message; scatter words per table at aux
+CAS = 6          # old=mem[dst]; if old==opa: mem[dst]=opb; if src>=0 mem[src]=old
+ADD = 7          # old=mem[dst]; mem[dst]=old+opa;          if src>=0 mem[src]=old
+MAX = 8          # mem[dst] = max(mem[dst], opa)   (ConnectX Calc verb)
+MIN = 9          # mem[dst] = min(mem[dst], opa)   (ConnectX Calc verb)
+WAIT = 10        # block WQ until completions[opb] >= opa
+ENABLE = 11      # enable_limit[opb] = max(enable_limit[opb], opa)
+HALT = 12        # simulation pseudo-verb: stop the machine
+
+NUM_OPCODES = 13
+
+OPCODE_NAMES = [
+    "NOOP", "WRITE", "WRITE_IMM", "READ", "SEND", "RECV", "CAS", "ADD",
+    "MAX", "MIN", "WAIT", "ENABLE", "HALT",
+]
+
+# --- WR field indices (word offsets within the 8-word WR) -------------------
+WR_WORDS = 8
+F_CTRL = 0       # packed opcode|id
+F_FLAGS = 1
+F_SRC = 2
+F_DST = 3
+F_LEN = 4
+F_OPA = 5
+F_OPB = 6
+F_AUX = 7
+
+FIELD_NAMES = {
+    "ctrl": F_CTRL, "flags": F_FLAGS, "src": F_SRC, "dst": F_DST,
+    "len": F_LEN, "opa": F_OPA, "opb": F_OPB, "aux": F_AUX,
+}
+
+# --- flags ------------------------------------------------------------------
+FLAG_SUPPRESS_COMPLETION = 1  # bit0: do NOT generate a completion event
+
+# --- copy / scatter bounds ---------------------------------------------------
+MAX_COPY = 16      # max words moved by one copy verb inside the VM
+                   # (bulk values move outside the VM; the VM moves metadata,
+                   #  mirroring how the RNIC moves WQE-sized control data)
+MAX_SCATTER = 16   # paper: "RECVs can only perform 16 scatters" (§5.3)
+MSG_WORDS = 16     # message payload words per SEND
+
+ID_MASK = 0x00FFFFFF
+ID_BITS = 24
+
+
+def pack_ctrl(opcode: int, id_val: int = 0) -> int:
+    """Pack opcode|id into the int32 control word (sign-safe for int32)."""
+    v = ((opcode & 0x7F) << ID_BITS) | (int(id_val) & ID_MASK)
+    return int(np.int32(v))
+
+
+def unpack_opcode(ctrl: int) -> int:
+    return (int(ctrl) >> ID_BITS) & 0x7F
+
+
+def unpack_id(ctrl: int) -> int:
+    return int(ctrl) & ID_MASK
+
+
+# --- WQ ordering modes (cost model; §3.1 Fig. 2) -----------------------------
+ORD_WQ = 0          # default work-queue order (prefetch allowed)
+ORD_COMPLETION = 1  # completion order (WAIT-chained)
+ORD_DOORBELL = 2    # doorbell order (managed WQ, fetch one-by-one)
+
+ORDERING_NAMES = ["wq", "completion", "doorbell"]

@@ -1,0 +1,317 @@
+"""The RedN chain VM — a jittable discrete-event interpreter for RDMA
+work-request chains (RedN §3).
+
+This is the functional model of "what the RNIC's processing units do":
+
+* one PU per work queue (paper §3.5 "each WQ is allocated a single RNIC PU");
+* WQs are circular buffers of 8-word WRs living *inside* the flat memory
+  image, so chains can modify their own code (self-modifying WRs, §3.2);
+* ``WAIT`` blocks a WQ until another WQ's completion counter reaches a
+  threshold (completion ordering, Fig. 2a);
+* managed WQs execute only up to a monotonic ``enable_limit`` raised by
+  ``ENABLE`` (doorbell ordering, Fig. 2b) — the instruction barrier that
+  makes self-modification coherent, and the wrap-around mechanism behind WQ
+  recycling (§3.4): ENABLE/WAIT counts are *monotonic*, which is exactly why
+  recycled loops must ADD to their own wqe_count fields each lap;
+* scheduling is min-clock-first over eligible WQs, so the per-WQ latency
+  clocks (priced by ``cost.py``) interleave like concurrent PUs;
+* the machine stops on quiescence (no WQ eligible) or fuel exhaustion —
+  nontermination (Turing requirement T3) is expressed by recycled WQs that
+  never quiesce.
+
+Everything is `lax`-traceable: `run()` is a `lax.while_loop` and the whole
+machine can be `jax.jit`-ed and `jax.vmap`-ed (batched clients — the
+benchmark harness runs thousands of independent QP contexts this way).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from . import cost, isa
+
+
+class MachineSpec(NamedTuple):
+    """Static machine geometry (specializes the jitted step)."""
+    mem_words: int
+    wq_bases: tuple            # word address of WR slot 0, per WQ
+    wq_sizes: tuple            # WR slots per WQ (circular)
+    orderings: tuple           # isa.ORD_* per WQ (cost model)
+    managed: tuple             # bool per WQ (ENABLE-gated)
+    msg_capacity: int = 8      # inbound message slots per WQ
+
+    @property
+    def num_wqs(self) -> int:
+        return len(self.wq_bases)
+
+
+class VMState(NamedTuple):
+    """Dynamic machine state — a pytree of arrays (vmap-able)."""
+    mem: jnp.ndarray            # i32[mem_words + MAX_COPY guard]
+    head: jnp.ndarray           # i32[N] monotonic executed count
+    tail: jnp.ndarray           # i32[N] monotonic posted count (doorbell)
+    enable_limit: jnp.ndarray   # i32[N] monotonic ENABLE watermark
+    completions: jnp.ndarray    # i32[N] signaled-completion count
+    last_comp_time: jnp.ndarray  # f32[N] clock of latest completion
+    msg_buf: jnp.ndarray        # i32[N, CAP, MSG_WORDS]
+    msg_head: jnp.ndarray       # i32[N]
+    msg_tail: jnp.ndarray       # i32[N]
+    clock: jnp.ndarray          # f32[N] per-PU latency clock (us)
+    steps: jnp.ndarray          # i32[] WRs executed
+    halted: jnp.ndarray         # bool[]
+    verb_counts: jnp.ndarray    # i32[NUM_OPCODES] executed-verb histogram
+    responses: jnp.ndarray      # i32[] count of SEND-to-client responses
+
+
+def init_state(spec: MachineSpec, mem_image: np.ndarray,
+               tails: Sequence[int], enable_limits: Sequence[int]) -> VMState:
+    n = spec.num_wqs
+    mem = np.zeros(spec.mem_words + isa.MAX_COPY, dtype=np.int32)
+    mem[: len(mem_image)] = mem_image
+    return VMState(
+        mem=jnp.asarray(mem),
+        head=jnp.zeros(n, jnp.int32),
+        tail=jnp.asarray(np.asarray(tails, np.int32)),
+        enable_limit=jnp.asarray(np.asarray(enable_limits, np.int32)),
+        completions=jnp.zeros(n, jnp.int32),
+        last_comp_time=jnp.zeros(n, jnp.float32),
+        msg_buf=jnp.zeros((n, spec.msg_capacity, isa.MSG_WORDS), jnp.int32),
+        msg_head=jnp.zeros(n, jnp.int32),
+        msg_tail=jnp.zeros(n, jnp.int32),
+        clock=jnp.zeros(n, jnp.float32),
+        steps=jnp.zeros((), jnp.int32),
+        halted=jnp.zeros((), jnp.bool_),
+        verb_counts=jnp.zeros(isa.NUM_OPCODES, jnp.int32),
+        responses=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# host-side doorbells (the client/driver API)
+# ---------------------------------------------------------------------------
+
+def ring(state: VMState, wq: int, count: int = 1) -> VMState:
+    """Ring the doorbell: post `count` already-written WRs on `wq`."""
+    return state._replace(tail=state.tail.at[wq].add(count))
+
+
+def deliver(state: VMState, wq: int, payload) -> VMState:
+    """Client SEND arriving at `wq`'s QP: lands in the message queue and is
+    consumed by a pre-posted RECV (Fig. 3's trigger)."""
+    pay = jnp.zeros(isa.MSG_WORDS, jnp.int32)
+    pay = pay.at[: len(payload)].set(jnp.asarray(payload, jnp.int32))
+    slot = state.msg_tail[wq] % state.msg_buf.shape[1]
+    return state._replace(
+        msg_buf=state.msg_buf.at[wq, slot].set(pay),
+        msg_tail=state.msg_tail.at[wq].add(1),
+    )
+
+
+def enable(state: VMState, wq: int, absolute_count: int) -> VMState:
+    """Host-side ENABLE (used when the trigger comes from the driver)."""
+    new = jnp.maximum(state.enable_limit[wq], absolute_count)
+    return state._replace(enable_limit=state.enable_limit.at[wq].set(new))
+
+
+# ---------------------------------------------------------------------------
+# the step function
+# ---------------------------------------------------------------------------
+
+def _masked_copy(mem, src, dst, ln):
+    """mem[dst:dst+ln] = mem[src:src+ln] for ln <= MAX_COPY (guarded)."""
+    ln = jnp.clip(ln, 0, isa.MAX_COPY)
+    blk = lax.dynamic_slice(mem, (src,), (isa.MAX_COPY,))
+    cur = lax.dynamic_slice(mem, (dst,), (isa.MAX_COPY,))
+    out = jnp.where(jnp.arange(isa.MAX_COPY) < ln, blk, cur)
+    return lax.dynamic_update_slice(mem, out, (dst,))
+
+
+def _maybe_store(mem, addr, value):
+    """mem[addr] = value if addr >= 0 (atomic return-old path)."""
+    safe = jnp.maximum(addr, 0)
+    cur = mem[safe]
+    return mem.at[safe].set(jnp.where(addr >= 0, value, cur))
+
+
+def _eligibility(spec: MachineSpec, s: VMState):
+    """Per-WQ: (eligible, ctrl-word addr of the head WR)."""
+    bases = jnp.asarray(spec.wq_bases, jnp.int32)
+    sizes = jnp.asarray(spec.wq_sizes, jnp.int32)
+    managed = jnp.asarray(spec.managed, jnp.bool_)
+
+    idx = s.head % sizes
+    addr = bases + idx * isa.WR_WORDS
+    limit = jnp.where(managed, jnp.minimum(s.tail, s.enable_limit), s.tail)
+    has_work = s.head < limit
+
+    ctrl = s.mem[addr]
+    opcode = (ctrl >> isa.ID_BITS) & 0x7F
+    opa = s.mem[addr + isa.F_OPA]
+    opb = s.mem[addr + isa.F_OPB]
+
+    tgt = jnp.clip(opb, 0, spec.num_wqs - 1)
+    wait_ok = jnp.where(opcode == isa.WAIT, s.completions[tgt] >= opa, True)
+    recv_ok = jnp.where(opcode == isa.RECV, s.msg_tail > s.msg_head, True)
+    eligible = has_work & wait_ok & recv_ok & ~s.halted
+    return eligible, addr, opcode
+
+
+def step(spec: MachineSpec, s: VMState) -> VMState:
+    eligible, addrs, opcodes = _eligibility(spec, s)
+    any_eligible = jnp.any(eligible)
+    w = jnp.argmin(jnp.where(eligible, s.clock, jnp.inf)).astype(jnp.int32)
+
+    addr = addrs[w]
+    ctrl = s.mem[addr + isa.F_CTRL]
+    opcode = jnp.clip((ctrl >> isa.ID_BITS) & 0x7F, 0, isa.NUM_OPCODES - 1)
+    flags = s.mem[addr + isa.F_FLAGS]
+    src = s.mem[addr + isa.F_SRC]
+    dst = s.mem[addr + isa.F_DST]
+    ln = s.mem[addr + isa.F_LEN]
+    opa = s.mem[addr + isa.F_OPA]
+    opb = s.mem[addr + isa.F_OPB]
+    aux = s.mem[addr + isa.F_AUX]
+    tgt = jnp.clip(opb, 0, spec.num_wqs - 1)
+
+    # --- verb semantics, dispatched via lax.switch -------------------------
+    def do_noop(s):
+        return s
+
+    def do_write(s):
+        return s._replace(mem=_masked_copy(s.mem, src, dst, ln))
+
+    def do_write_imm(s):
+        return s._replace(mem=s.mem.at[jnp.maximum(dst, 0)].set(opa))
+
+    def do_read(s):
+        return s._replace(mem=_masked_copy(s.mem, src, dst, ln))
+
+    def do_send(s):
+        # opb >= 0: inter-QP message; opb < 0: response to the client
+        payload = lax.dynamic_slice(
+            jnp.concatenate([s.mem, jnp.zeros(isa.MSG_WORDS, jnp.int32)]),
+            (jnp.maximum(src, 0),), (isa.MSG_WORDS,))
+        slot = s.msg_tail[tgt] % s.msg_buf.shape[1]
+        to_qp = s._replace(
+            msg_buf=s.msg_buf.at[tgt, slot].set(payload),
+            msg_tail=s.msg_tail.at[tgt].add(1))
+        to_client = s._replace(
+            mem=_masked_copy(s.mem, src, dst, ln),
+            responses=s.responses + 1)
+        return jax.tree_util.tree_map(
+            lambda a, b: jnp.where(opb >= 0, a, b), to_qp, to_client)
+
+    def do_recv(s):
+        slot = s.msg_head[w] % s.msg_buf.shape[1]
+        payload = s.msg_buf[w, slot]
+        n = jnp.clip(s.mem[jnp.maximum(aux, 0)], 0, isa.MAX_SCATTER)
+
+        def scatter(i, mem):
+            d = mem[jnp.maximum(aux, 0) + 1 + i]
+            d = jnp.maximum(d, 0)
+            return mem.at[d].set(jnp.where(i < n, payload[i], mem[d]))
+
+        mem = lax.fori_loop(0, isa.MAX_SCATTER, scatter, s.mem)
+        return s._replace(mem=mem, msg_head=s.msg_head.at[w].add(1))
+
+    def do_cas(s):
+        old = s.mem[jnp.maximum(dst, 0)]
+        newv = jnp.where(old == opa, opb, old)
+        mem = s.mem.at[jnp.maximum(dst, 0)].set(newv)
+        return s._replace(mem=_maybe_store(mem, src, old))
+
+    def do_add(s):
+        old = s.mem[jnp.maximum(dst, 0)]
+        mem = s.mem.at[jnp.maximum(dst, 0)].set(old + opa)
+        return s._replace(mem=_maybe_store(mem, src, old))
+
+    def do_max(s):
+        old = s.mem[jnp.maximum(dst, 0)]
+        return s._replace(mem=s.mem.at[jnp.maximum(dst, 0)].set(
+            jnp.maximum(old, opa)))
+
+    def do_min(s):
+        old = s.mem[jnp.maximum(dst, 0)]
+        return s._replace(mem=s.mem.at[jnp.maximum(dst, 0)].set(
+            jnp.minimum(old, opa)))
+
+    def do_wait(s):
+        # eligibility already guaranteed completions[tgt] >= opa;
+        # the clock sync happens below.
+        return s
+
+    def do_enable(s):
+        new = jnp.maximum(s.enable_limit[tgt], opa)
+        return s._replace(enable_limit=s.enable_limit.at[tgt].set(new))
+
+    def do_halt(s):
+        return s._replace(halted=jnp.ones((), jnp.bool_))
+
+    branches = [do_noop, do_write, do_write_imm, do_read, do_send, do_recv,
+                do_cas, do_add, do_max, do_min, do_wait, do_enable, do_halt]
+    new = lax.switch(opcode, branches, s)
+
+    # --- bookkeeping: head, completions, clock, stats ----------------------
+    # Pre-posted chains parked on a WAIT/RECV (the paper's "pre-post
+    # chains, client triggers" pattern) don't pay the doorbell+fetch at
+    # trigger time — the WQE was fetched when the chain was posted.
+    orderings = jnp.asarray(spec.orderings, jnp.int32)
+    parked = (opcode == isa.WAIT) | (opcode == isa.RECV)
+    first = s.head[w] == 0
+    fetch = jnp.where(
+        first & parked, 0.0,
+        jnp.where(first, cost.DOORBELL_BASE,
+                  jnp.asarray(cost.FETCH_BY_ORDERING)[orderings[w]]))
+    exec_cost = jnp.asarray(cost.EXEC_COST)[opcode]
+    t = s.clock[w] + fetch + exec_cost
+    # WAIT synchronizes with the producer's completion time (Fig 2a)
+    t = jnp.where(opcode == isa.WAIT, jnp.maximum(t, new.last_comp_time[tgt]), t)
+
+    signaled = (flags & isa.FLAG_SUPPRESS_COMPLETION) == 0
+    completions = new.completions.at[w].add(jnp.where(signaled, 1, 0))
+    last_ct = new.last_comp_time.at[w].set(
+        jnp.where(signaled, t, new.last_comp_time[w]))
+
+    new = new._replace(
+        head=new.head.at[w].add(1),
+        completions=completions,
+        last_comp_time=last_ct,
+        clock=new.clock.at[w].set(t),
+        steps=new.steps + 1,
+        verb_counts=new.verb_counts.at[opcode].add(1),
+    )
+    # if nothing was eligible, this step is a no-op (guards vmap batches
+    # where some machines quiesce before others)
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(any_eligible, a, b), new, s)
+
+
+def quiescent(spec: MachineSpec, s: VMState) -> jnp.ndarray:
+    eligible, _, _ = _eligibility(spec, s)
+    return ~jnp.any(eligible)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2))
+def run(spec: MachineSpec, state: VMState, max_steps: int = 4096) -> VMState:
+    """Run until quiescence / HALT / fuel exhaustion."""
+
+    def cond(s):
+        return (~s.halted) & (~quiescent(spec, s)) & (s.steps < max_steps)
+
+    return lax.while_loop(cond, lambda s: step(spec, s), state)
+
+
+def run_batch(spec: MachineSpec, states: VMState,
+              max_steps: int = 4096) -> VMState:
+    """vmapped run — a fleet of independent QP contexts (batched clients)."""
+    return jax.vmap(lambda s: run(spec, s, max_steps))(states)
+
+
+def total_time_us(state: VMState) -> jnp.ndarray:
+    """End-to-end chain latency: the latest PU clock."""
+    return jnp.max(state.clock)

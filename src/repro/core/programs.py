@@ -1,0 +1,403 @@
+"""RedN offload programs: the paper's use-cases as verb chains.
+
+* :func:`build_rpc_echo` — Fig. 3's offloaded RPC handler: a client SEND
+  triggers a pre-posted RECV whose scatter list injects the argument into
+  the posted chain (self-modifying, data-dependent execution).
+* :class:`HashLookupOffload` — Fig. 9's hash-table *get*: RECV scatters the
+  key into the CAS comparand and the bucket address into the READ; the READ
+  pulls ``[key, pad, val_ptr]`` straight onto the response WR's
+  ``[ctrl, flags, src]`` fields (our bucket layout mirrors the WR field
+  layout so one READ performs both of Fig. 9's patches); the CAS converts
+  the response NOOP into the value-returning WRITE only on a key match.
+  Sequential (RedN-Seq) and parallel (RedN-Parallel) probe variants.
+* :class:`ListTraversalOffload` — Fig. 12's linked-list walk, unrolled, with
+  the optional Fig. 6-style break.
+* :func:`build_recycled_get_server` — a §3.4 WQ-recycled *get* server: the
+  chain loops forever (RECV-triggered laps, self-re-arming), which is what
+  survives host process/OS crashes in §5.6.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import isa, machine
+from .assembler import Program, WRRef
+
+EMPTY_KEY = 0          # bucket key 0 == empty; live keys are 1..2^24-1
+MISS_SENTINEL = 0      # response region default (paper: "default value 0")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 3 — RPC offload
+# ---------------------------------------------------------------------------
+
+def build_rpc_echo(mem_words: int = 1024, bias: int = 1000):
+    """RPC handler computing ``f(arg) = arg + bias`` entirely on the chain.
+
+    The client's SEND carries ``arg``; the RECV scatter injects it into an
+    ADD's immediate field (self-modifying) and the chain responds with the
+    sum — the minimal data-dependent offload of Fig. 3.
+    """
+    p = Program(mem_words)
+    acc = p.word(bias, "acc")
+    resp = p.word(0, "resp")
+
+    rq = p.add_wq(4)
+    wq = p.add_wq(8, ordering=isa.ORD_DOORBELL)
+    wq.wait(rq, 1, tag="rpc.trigger")                    # pre-posted chain
+    add = wq.add(dst=acc, addend=0, tag="rpc.add")       # addend patched
+    wq.send(src=acc, ln=1, dst_region=resp, target_qp=-1, tag="rpc.resp")
+    tbl = p.scatter_table([add.addr("opa")])
+    rq.recv(scatter_table=tbl, tag="rpc.recv")
+
+    spec, state = p.finalize()
+    return spec, state, dict(resp=resp, acc=acc, bias=bias, recv_wq=rq.index,
+                             chain_wq=wq.index)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 9 — hash-table get
+# ---------------------------------------------------------------------------
+
+BUCKET_WORDS = 3       # [key, pad(=flags default 0), val_ptr]
+
+
+@dataclasses.dataclass
+class HashLookupOffload:
+    prog: Program
+    spec: machine.MachineSpec
+    state0: machine.VMState
+    n_buckets: int
+    val_len: int
+    table_base: int
+    values_base: int
+    resp_region: int
+    recv_wq: int
+    parallel: bool
+    kv: Dict[int, Tuple[int, List[int]]]
+
+    # -- hashes (client-side, like the paper: the client computes bucket
+    #    addresses and sends them with the key) ------------------------------
+    def h1(self, key: int) -> int:
+        return key % self.n_buckets
+
+    def h2(self, key: int) -> int:
+        return (key * 2654435761 >> 8) % self.n_buckets
+
+    def bucket_addr(self, b: int) -> int:
+        return self.table_base + b * BUCKET_WORDS
+
+    # -- host-side set path (the server CPU populates; gets are offloaded) --
+    def insert(self, key: int, value: Sequence[int]) -> bool:
+        assert 0 < key <= isa.ID_MASK and len(value) <= self.val_len
+        for b in (self.h1(key), self.h2(key)):
+            cur = self.kv.get(b)
+            if cur is None or cur[0] == key:
+                self.kv[b] = (key, list(value))
+                return True
+        return False   # displacement is the kvstore layer's job
+
+    def materialize(self) -> machine.VMState:
+        """Fresh machine state with the current table contents."""
+        mem = np.asarray(self.state0.mem).copy()
+        for b, (key, value) in self.kv.items():
+            vslot = self.values_base + b * self.val_len
+            a = self.bucket_addr(b)
+            mem[a], mem[a + 1], mem[a + 2] = key, 0, vslot
+            mem[vslot: vslot + len(value)] = value
+        return self.state0._replace(mem=jnp.asarray(mem))
+
+    # -- the offloaded get ---------------------------------------------------
+    def get(self, key: int, state: Optional[machine.VMState] = None,
+            max_steps: int = 256):
+        st = self.materialize() if state is None else state
+        st = machine.deliver(st, self.recv_wq, [
+            key, key, self.bucket_addr(self.h1(key)),
+            self.bucket_addr(self.h2(key))])
+        out = machine.run(self.spec, st, max_steps)
+        val = np.asarray(out.mem[self.resp_region:
+                                 self.resp_region + self.val_len])
+        return val, out
+
+
+def build_hash_lookup(n_buckets: int = 64, val_len: int = 4,
+                      parallel: bool = True,
+                      mem_words: int = 4096) -> HashLookupOffload:
+    p = Program(mem_words)
+    resp = p.alloc(val_len, [MISS_SENTINEL] * val_len, "resp")
+    values = p.alloc(n_buckets * val_len, name="values")
+    table = p.alloc(n_buckets * BUCKET_WORDS,
+                    [0] * (n_buckets * BUCKET_WORDS), "table")
+
+    rq = p.add_wq(4)
+    probes = []
+    for pi in range(2):
+        # WQ1: probe READ (RECV-patched -> doorbell-ordered)
+        wq1 = p.add_wq(4, ordering=isa.ORD_DOORBELL, managed=True)
+        # WQ2: CAS + response (READ- and CAS-patched)
+        wq2 = p.add_wq(6, ordering=isa.ORD_DOORBELL, managed=True,
+                       initial_enable=3)
+        if pi == 1 and not parallel:
+            # RedN-Seq: second bucket probed only after the first completes
+            wq1.wait(probes[0]["wq2"], 4, tag="hash.seq")
+        wq1.wait(rq, 1, tag=f"hash.trig{pi}")
+        wq1.initial_enable = wq1.n_posted + 1
+        rd = wq1.read(src=0, dst=0, ln=BUCKET_WORDS, tag=f"hash.read{pi}")
+
+        wq2.wait(wq1, rd.completion_count, tag=f"hash.sync{pi}")
+        cas = wq2.cas(dst=0, old=isa.pack_ctrl(isa.NOOP, 0),
+                      new=isa.pack_ctrl(isa.WRITE, 0), tag=f"hash.cas{pi}")
+        wq2.enable(wq2, upto=4, tag=f"hash.en{pi}")
+        # R4: the response — NOOP unless the CAS converts it
+        # (bucket [key, pad, val_ptr] lands on its [ctrl, flags, src])
+        r4 = wq2.post(isa.NOOP, src=0, dst=resp, ln=val_len,
+                      tag=f"hash.resp{pi}")
+        wq1.wrs[rd.slot]["dst"] = r4.ctrl_addr      # READ patches R4
+        wq2.wrs[cas.slot]["dst"] = r4.ctrl_addr     # CAS tests/converts R4
+        probes.append(dict(wq1=wq1, wq2=wq2, rd=rd, cas=cas, r4=r4))
+
+    # RECV scatter: key -> both CAS comparands; bucket addrs -> the READs
+    tbl = p.scatter_table([
+        probes[0]["cas"].addr("opa"), probes[1]["cas"].addr("opa"),
+        probes[0]["rd"].addr("src"), probes[1]["rd"].addr("src")])
+    rq.recv(scatter_table=tbl, tag="hash.recv")
+
+    spec, st0 = p.finalize()
+    return HashLookupOffload(
+        prog=p, spec=spec, state0=st0, n_buckets=n_buckets, val_len=val_len,
+        table_base=table, values_base=values, resp_region=resp,
+        recv_wq=rq.index, parallel=parallel, kv={})
+
+
+# ---------------------------------------------------------------------------
+# Fig. 12 — linked-list traversal
+# ---------------------------------------------------------------------------
+
+NODE_WORDS = 4   # [key, pad, val_ptr, next]
+
+
+@dataclasses.dataclass
+class ListTraversalOffload:
+    prog: Program
+    spec: machine.MachineSpec
+    state0: machine.VMState
+    n_iters: int
+    val_len: int
+    nodes_base: int
+    values_base: int
+    resp_region: int
+    recv_wq: int
+    use_break: bool
+    items: List[Tuple[int, List[int]]]
+
+    def node_addr(self, i: int) -> int:
+        return self.nodes_base + i * NODE_WORDS
+
+    def set_list(self, items: Sequence[Tuple[int, Sequence[int]]]):
+        self.items = [(k, list(v)) for k, v in items]
+
+    def materialize(self) -> machine.VMState:
+        mem = np.asarray(self.state0.mem).copy()
+        for i, (key, value) in enumerate(self.items):
+            a = self.node_addr(i)
+            vslot = self.values_base + i * self.val_len
+            nxt = self.node_addr(i + 1) if i + 1 < len(self.items) else 0
+            mem[a:a + 4] = [key, 0, vslot, nxt]
+            mem[vslot:vslot + len(value)] = value
+        return self.state0._replace(mem=jnp.asarray(mem))
+
+    def get(self, key: int, max_steps: int = 4096):
+        st = self.materialize()
+        st = machine.deliver(st, self.recv_wq,
+                             [self.node_addr(0)] + [key] * self.n_iters)
+        out = machine.run(self.spec, st, max_steps)
+        val = np.asarray(out.mem[self.resp_region:
+                                 self.resp_region + self.val_len])
+        return val, out
+
+
+def build_list_traversal(n_iters: int = 8, val_len: int = 2,
+                         use_break: bool = False,
+                         mem_words: int = 8192) -> ListTraversalOffload:
+    """Unrolled list walk (Fig. 12).
+
+    Per iteration: ``drv`` patches and performs the node READ (filling the
+    response WR's ctrl/flags/src from the node) and advances the cursor;
+    ``exe`` CASes the response WR's control word against the searched key;
+    ``mod`` holds the conditional response WRs.  With ``use_break`` a hit
+    rewrites the *next* iteration's conditional WR into a completion-
+    suppressed response WRITE, so its missing completion starves both the
+    ``exe`` and ``drv`` chains — no further iterations execute (Fig. 6).
+    """
+    p = Program(mem_words)
+    resp = p.alloc(val_len, [MISS_SENTINEL] * val_len, "resp")
+    values = p.alloc(n_iters * val_len, name="values")
+    nodes = p.alloc(n_iters * NODE_WORDS, [0] * (n_iters * NODE_WORDS),
+                    "nodes")
+    cur = p.word(0, "cur")
+
+    rq = p.add_wq(4)
+    drv = p.add_wq(10 * n_iters + 4, ordering=isa.ORD_COMPLETION)
+    exe = p.add_wq(4 * n_iters + 4, ordering=isa.ORD_DOORBELL)
+    mod = p.add_wq(2 * n_iters + 2, ordering=isa.ORD_DOORBELL, managed=True)
+
+    per_iter = 2 if use_break else 1     # mod WRs per iteration
+    cas_opa_addrs = []
+    for i in range(n_iters):
+        # --- mod: the conditional WR (and, in break mode, the adjacent
+        #     event WR the next iteration gates on — Fig. 6's layout) -------
+        if use_break:
+            # C_i converted -> WRITE(template over E_i): E_i becomes a
+            # completion-suppressed response WRITE. Response fires AND the
+            # missing completion starves iteration i+1 before it can touch
+            # anything.
+            tmpl = p.alloc(isa.WR_WORDS, [
+                isa.pack_ctrl(isa.WRITE, 0), isa.FLAG_SUPPRESS_COMPLETION,
+                0, resp, val_len, 0, 0, -1])
+            c_i = mod.post(isa.NOOP, src=tmpl,
+                           dst=mod.future_wr_addr(1, "ctrl"), ln=8,
+                           tag=f"list.c{i}")
+            mod.post(isa.NOOP, tag=f"list.e{i}")      # E_i (the gate event)
+        else:
+            # C_i converted -> WRITE(value -> response region) directly
+            c_i = mod.post(isa.NOOP, src=0, dst=resp, ln=val_len,
+                           tag=f"list.c{i}")
+
+        # --- drv: patch + node READ + cursor advance ------------------------
+        if i == 0:
+            drv.wait(rq, 1, tag="list.trig")
+        else:
+            drv.wait(mod, per_iter * i, tag=f"list.gate{i}")
+        # node [key, pad(, val_ptr)] -> C_i.[ctrl, flags(, src)]; in break
+        # mode C_i.src must keep pointing at the template, so the READ stops
+        # after flags and the value pointer is forwarded into the template.
+        drv.write(src=cur, dst=drv.future_wr_addr(1, "src"), ln=1,
+                  tag=f"list.patch{i}")
+        drv.read(src=0, dst=c_i.ctrl_addr, ln=(2 if use_break else 3),
+                 tag=f"list.node{i}")
+        if use_break:
+            drv.write(src=cur, dst=drv.future_wr_addr(2, "src"), ln=1,
+                      tag=f"list.patch_v{i}")
+            drv.add(dst=drv.future_wr_addr(1, "src"), addend=2,
+                    tag=f"list.voff{i}")
+            drv.read(src=0, dst=tmpl + 2, ln=1, tag=f"list.val{i}")
+        # advance: cursor <- node.next
+        drv.write(src=cur, dst=drv.future_wr_addr(2, "src"), ln=1,
+                  tag=f"list.patch_n{i}")
+        drv.add(dst=drv.future_wr_addr(1, "src"), addend=3,
+                tag=f"list.off{i}")
+        rdn = drv.read(src=0, dst=cur, ln=1, tag=f"list.next{i}")
+
+        # --- exe: the conditional (gated on the full drv iteration) ---------
+        if i > 0:
+            exe.wait(mod, per_iter * i, tag=f"list.syncm{i}")
+        exe.wait(drv, rdn.completion_count, tag=f"list.sync{i}")
+        cas = exe.cas(dst=c_i.ctrl_addr, old=isa.pack_ctrl(isa.NOOP, 0),
+                      new=isa.pack_ctrl(isa.WRITE, 0), tag=f"list.cas{i}")
+        exe.enable(mod, upto=per_iter * (i + 1), tag=f"list.en{i}")
+        cas_opa_addrs.append(cas.addr("opa"))
+
+    # RECV: first-node address -> cursor; x -> every CAS comparand
+    tbl = p.scatter_table([cur] + cas_opa_addrs)
+    rq.recv(scatter_table=tbl, tag="list.recv")
+
+    spec, st0 = p.finalize()
+    return ListTraversalOffload(
+        prog=p, spec=spec, state0=st0, n_iters=n_iters, val_len=val_len,
+        nodes_base=nodes, values_base=values, resp_region=resp,
+        recv_wq=rq.index, use_break=use_break, items=[])
+
+
+# ---------------------------------------------------------------------------
+# §3.4 / §5.6 — WQ-recycled get server (survives host failures)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RecycledGetServer:
+    prog: Program
+    spec: machine.MachineSpec
+    state: machine.VMState
+    n_buckets: int
+    val_len: int
+    table_base: int
+    values_base: int
+    resp_region: int
+    loop_wq: int
+    lap_words: int
+    laps_addr: int
+    kv: Dict[int, Tuple[int, List[int]]]
+
+    def h1(self, key: int) -> int:
+        return key % self.n_buckets
+
+    def bucket_addr(self, b: int) -> int:
+        return self.table_base + b * BUCKET_WORDS
+
+    def insert(self, key: int, value: Sequence[int]):
+        self.kv[self.h1(key)] = (key, list(value))
+
+    def load(self):
+        mem = np.asarray(self.state.mem).copy()
+        for b, (key, value) in self.kv.items():
+            vslot = self.values_base + b * self.val_len
+            a = self.bucket_addr(b)
+            mem[a:a + 3] = [key, 0, vslot]
+            mem[vslot:vslot + len(value)] = value
+        self.state = self.state._replace(mem=jnp.asarray(mem))
+
+    def serve(self, key: int, max_steps: int = 64):
+        """One request against the *persistent* loop state — no host-side
+        re-arming ever happens (that is §5.6's resiliency story)."""
+        st = machine.deliver(self.state, self.loop_wq,
+                             [key, self.bucket_addr(self.h1(key))])
+        st = st._replace(steps=jnp.zeros((), jnp.int32))
+        out = machine.run(self.spec, st, max_steps)
+        val = np.asarray(out.mem[self.resp_region:
+                                 self.resp_region + self.val_len])
+        self.state = out
+        return val
+
+
+def build_recycled_get_server(n_buckets: int = 32, val_len: int = 2,
+                              mem_words: int = 4096) -> RecycledGetServer:
+    """Single-bucket get server on ONE recycled WQ (lap layout in code)."""
+    p = Program(mem_words)
+    resp = p.alloc(val_len, [MISS_SENTINEL] * val_len, "resp")
+    zeros = p.alloc(val_len, [0] * val_len, "zeros")
+    values = p.alloc(n_buckets * val_len, name="values")
+    table = p.alloc(n_buckets * BUCKET_WORDS,
+                    [0] * (n_buckets * BUCKET_WORDS), "table")
+    laps = p.word(0, "laps")
+
+    size = 12
+    wq = p.add_wq(size, ordering=isa.ORD_DOORBELL, managed=True,
+                  recycled=True, initial_enable=5)
+    rv = wq.recv(scatter_table=0, tag="srv.recv")           # table patched in
+    wq.read(src=zeros, dst=resp, ln=val_len, tag="srv.clear")
+    rd = wq.read(src=0, dst=0, ln=BUCKET_WORDS, tag="srv.read")
+    cas = wq.cas(dst=0, old=isa.pack_ctrl(isa.NOOP, 0),
+                 new=isa.pack_ctrl(isa.WRITE, 0), tag="srv.cas")
+    en = wq.enable(wq, upto=size + 5, tag="srv.enable")
+    r4 = wq.post(isa.NOOP, src=0, dst=resp, ln=val_len, tag="srv.resp")
+    pristine = p.alloc(isa.WR_WORDS, [
+        isa.pack_ctrl(isa.NOOP, 0), 0, 0, resp, val_len, 0, 0, -1])
+    wq.read(src=pristine, dst=r4.base, ln=isa.WR_WORDS, tag="srv.rearm")
+    wq.add(dst=laps, addend=1, tag="srv.laps")
+    wq.add(dst=en.addr("opa"), addend=size, tag="srv.bump")
+    while wq.n_posted < size:
+        wq.noop(signaled=False, tag="srv.pad")
+
+    wq.wrs[rd.slot]["dst"] = r4.ctrl_addr
+    wq.wrs[cas.slot]["dst"] = r4.ctrl_addr
+    tbl = p.scatter_table([cas.addr("opa"), rd.addr("src")])
+    wq.wrs[rv.slot]["aux"] = tbl
+
+    spec, st0 = p.finalize()
+    return RecycledGetServer(
+        prog=p, spec=spec, state=st0, n_buckets=n_buckets, val_len=val_len,
+        table_base=table, values_base=values, resp_region=resp,
+        loop_wq=wq.index, lap_words=size, laps_addr=laps, kv={})

@@ -1,0 +1,3 @@
+"""Deterministic synthetic data pipelines (token streams + KV workloads)."""
+from .pipeline import (TokenPipeline, kv_request_stream,  # noqa: F401
+                       make_lm_batch)

@@ -1,0 +1,2 @@
+"""Distribution: logical-axis sharding rules, collectives, fault tolerance,
+pipeline parallelism, gradient compression."""

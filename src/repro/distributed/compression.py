@@ -1,0 +1,51 @@
+"""Gradient compression with error feedback (distributed-optimization
+trick for the DP all-reduce at 1000+ node scale).
+
+int8 per-tensor-scaled quantization: the DP reduce moves 4x fewer bytes;
+the quantization residual is carried in an error-feedback buffer so the
+update remains unbiased over time (Seide et al. / EF-SGD style).
+Under GSPMD the reduce itself is implicit — compressing the gradient
+*before* it crosses the data axis is expressed by quantize -> psum-in-int
+-> dequantize inside the step when run under shard_map; under plain jit we
+quantize/dequantize around the optimizer, which models the same wire
+format and (crucially) the same numerics.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error(params) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def compress_with_feedback(grads, error) -> Tuple[Any, Any, Any]:
+    """Returns (decompressed_grads, new_error, wire_bytes_ratio)."""
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize_int8(corrected)
+        deq = dequantize_int8(q, s)
+        return deq, corrected - deq
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = tdef.flatten_up_to(error)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    deq = tdef.unflatten([o[0] for o in outs])
+    new_e = tdef.unflatten([o[1] for o in outs])
+    return deq, new_e, 0.25

@@ -1,0 +1,58 @@
+"""GPipe-style pipeline parallelism over the pod axis.
+
+Multi-pod training can treat each pod as a pipeline stage: layer groups
+are sharded over 'pod', microbatches stream through a collective_permute
+ring.  Forward below; jax.grad differentiates through the ppermute ring
+(its transpose is the reverse ring), yielding GPipe's full-forward /
+full-backward schedule; remat on the stage fn bounds activation memory.
+
+Schedule: T = M + S - 1 ticks; at tick t, stage s executes microbatch
+t - s (when in range).  Per tick every device runs the stage fn once on
+its current buffer and passes the result to stage s+1.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def gpipe(stage_fn: Callable, stage_params, x_microbatches, *,
+          axis_name: str, n_stages: int):
+    """stage_fn(params_for_stage, x) -> y; all stages shape-preserving.
+
+    stage_params: local stage's params (already sharded over `axis_name`).
+    x_microbatches: (M, b, ...) — every stage holds the full microbatch
+    array; stage 0 injects them in order.  Returns (M, b, ...) outputs as
+    produced by the last stage (valid on stage S-1; other stages hold
+    zeros — callers psum or slice).
+    """
+    m = x_microbatches.shape[0]
+    stage = lax.axis_index(axis_name) % n_stages
+    ticks = m + n_stages - 1
+
+    def tick(carry, t):
+        buf, outs = carry
+        # stage 0 picks up microbatch t (if any); others use the ring input
+        inject = x_microbatches[jnp.clip(t, 0, m - 1)]
+        cur = jnp.where(stage == 0, inject, buf)
+        active = (t - stage >= 0) & (t - stage < m)
+        y = stage_fn(stage_params, cur)
+        y = jnp.where(active, y, jnp.zeros_like(y))
+        # last stage records its finished microbatch
+        mb_idx = jnp.clip(t - (n_stages - 1), 0, m - 1)
+        record = active & (stage == n_stages - 1)
+        outs = outs.at[mb_idx].set(
+            jnp.where(record, y, outs[mb_idx]))
+        # ring: s -> s+1 (within each pipeline replica)
+        nxt = lax.ppermute(
+            y, axis_name,
+            [(s, (s + 1) % n_stages) for s in range(n_stages)])
+        return (nxt, outs), None
+
+    buf0 = jnp.zeros_like(x_microbatches[0])
+    outs0 = jnp.zeros_like(x_microbatches)
+    (_, outs), _ = lax.scan(tick, (buf0, outs0), jnp.arange(ticks))
+    return outs

@@ -1,0 +1,111 @@
+"""Logical-axis sharding: model code annotates tensors with *logical* axis
+names; a rule set maps them to mesh axes (or nothing, on a single device).
+
+Baseline rules (the paper-faithful starting point recorded in
+EXPERIMENTS.md §Perf; hillclimbs override per-arch):
+
+  batch     -> (pod, data)     data parallelism across pods and the DP axis
+  ff        -> model           Megatron MLP tensor parallelism
+  vocab     -> model           sharded embedding/logits + distributed CE
+  heads     -> model           ONLY when num_heads % |model| == 0
+  kv_seq    -> model           decode caches shard over sequence (uniform
+                               across GQA widths — works even for MQA kv=1)
+  long_seq  -> (data, model)   the 500k decode cache
+  fsdp      -> data            ZeRO-style parameter/optimizer sharding
+
+Rules are a plain dict {logical_name: mesh axis | tuple | None}; ``shard``
+applies ``with_sharding_constraint`` only when a mesh is active, so the
+same model code runs on one CPU device (smoke tests), under the 256-chip
+dry-run, and on the 512-chip multi-pod mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, Tuple[str, ...], None]
+
+_state = threading.local()
+
+
+def default_rules(mesh: Optional[Mesh]) -> Dict[str, Axis]:
+    if mesh is None:
+        return {}
+    axes = set(mesh.axis_names)
+    batch = tuple(a for a in ("pod", "data") if a in axes) or None
+    rules: Dict[str, Axis] = {
+        "batch": batch,
+        "ff": "model" if "model" in axes else None,
+        "vocab": "model" if "model" in axes else None,
+        "heads": None,           # opt-in per arch (divisibility)
+        "kv_heads": None,
+        "kv_seq": "model" if "model" in axes else None,
+        "long_seq": tuple(a for a in ("data", "model") if a in axes) or None,
+        "fsdp": "data" if "data" in axes else None,
+        "experts": None,         # EP is a hillclimb option
+        "d_model": None,
+        "seq": None,
+    }
+    return rules
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[Dict[str, Axis]] = None,
+             **overrides):
+    """Activate a mesh + logical rules for model code in this thread."""
+    r = default_rules(mesh)
+    if rules:
+        r.update(rules)
+    r.update(overrides)
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (mesh, r)
+    try:
+        yield r
+    finally:
+        _state.ctx = prev
+
+
+def current() -> Tuple[Optional[Mesh], Dict[str, Axis]]:
+    ctx = getattr(_state, "ctx", None)
+    return ctx if ctx is not None else (None, {})
+
+
+def spec(*logical: Optional[str]) -> P:
+    """PartitionSpec from logical axis names under the active rules."""
+    _, rules = current()
+    return P(*[rules.get(name) if name else None for name in logical])
+
+
+def shard(x, *logical: Optional[str]):
+    """with_sharding_constraint under the active mesh (no-op without one)."""
+    mesh, rules = current()
+    if mesh is None:
+        return x
+    resolved = [rules.get(name) if name else None for name in logical]
+    if all(r is None for r in resolved):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved)))
+
+
+def named_sharding(*logical: Optional[str]) -> Optional[NamedSharding]:
+    mesh, _ = current()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec(*logical))
+
+
+def tree_shardings(tree_of_logical, mesh: Mesh,
+                   rules: Dict[str, Axis]):
+    """Map a pytree of logical-axis tuples to NamedShardings."""
+    def one(axes):
+        return NamedSharding(
+            mesh, P(*[rules.get(a) if a else None for a in axes]))
+    return jax.tree_util.tree_map(
+        one, tree_of_logical,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))

@@ -1,0 +1,148 @@
+"""Sharding-spec inference for parameter / optimizer / batch / cache trees.
+
+Maps tree paths to logical axes by parameter name, then resolves logical
+axes through the active rule set.  Every concrete dimension is checked for
+divisibility — a logical axis that doesn't divide is dropped (recorded by
+the dry-run as a 'replicated' fallback rather than a compile error).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# trailing-dims logical axes by parameter leaf name
+_BY_NAME: Dict[str, Tuple] = {
+    "embedding": ("vocab", "fsdp"),
+    "lm_head": ("fsdp", "vocab"),
+    "wq": ("fsdp", "tp"), "wk": ("fsdp", "tp"), "wv": ("fsdp", "tp"),
+    "wo": ("tp", "fsdp"),
+    "w_gate": ("fsdp", "tp"), "w_up": ("fsdp", "tp"),
+    "w_down": ("tp", "fsdp"),
+    "router": ("fsdp", None),
+    "shared": None,            # nested dict handled by leaf names
+    "wr": ("fsdp", "tp"), "wg": ("fsdp", "tp"),
+    "ck": ("fsdp", "tp"), "cv": ("tp", "fsdp"), "cr": ("fsdp", "tp"),
+    "wA": ("fsdp", None), "wB": (None, None),
+    "w_x": ("fsdp", "tp"), "w_out": ("tp", "fsdp"),
+    "w_i": ("fsdp", "tp"), "w_r": ("fsdp", "tp"),
+    "conv": (None, "tp"), "lam": ("tp",),
+    "frontend_proj": (None, None),
+}
+# MoE expert tensors carry a leading E dim before (d, f)
+_MOE_NAMES = {"w_gate", "w_up", "w_down"}
+
+_LOGICAL_TO_RULE = {"vocab": "vocab", "tp": "ff", "fsdp": "fsdp",
+                    "experts": "experts"}
+
+
+def _leaf_name(path) -> str:
+    """Deepest path key with a known spec — lets the same inference cover
+    optimizer-state trees (…/mu/<param path>/q) and quantized leaves."""
+    last = ""
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            k = str(entry.key)
+            if not last:
+                last = k
+            if k in _BY_NAME:
+                return k
+    return last
+
+
+def _path_keys(path):
+    return [str(entry.key) for entry in path if hasattr(entry, "key")]
+
+
+def _resolve(axes, shape, rules, mesh) -> P:
+    """Logical trailing axes -> PartitionSpec with divisibility checks."""
+    ndim = len(shape)
+    full = (None,) * (ndim - len(axes)) + tuple(axes)
+    out = []
+    for dim, logical in zip(shape, full):
+        mesh_axis = None
+        if logical is not None:
+            mesh_axis = rules.get(_LOGICAL_TO_RULE.get(logical, logical))
+        if mesh_axis is not None:
+            size = int(np.prod([mesh.shape[a] for a in (
+                (mesh_axis,) if isinstance(mesh_axis, str) else mesh_axis)]))
+            if dim % size != 0:
+                mesh_axis = None
+        out.append(mesh_axis)
+    return P(*out)
+
+
+def param_specs(abstract_params, mesh: Mesh, rules: Dict):
+    """PartitionSpec tree for a parameter tree."""
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        keys = _path_keys(path)
+        axes = _BY_NAME.get(name)
+        if axes is None:
+            axes = ()                      # norms, scalars -> replicated
+        if (name in _MOE_NAMES and "moe" in keys and "shared" not in keys
+                and len(axes) == 2):
+            # expert tensors (..., E, d, f): the leading E dim maps to the
+            # 'experts' rule (None in the baseline; the EP hillclimb maps
+            # it to the data axis)
+            axes = ("experts",) + tuple(axes)
+        return _resolve(axes, leaf.shape, rules, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, abstract_params)
+
+
+def param_shardings(abstract_params, mesh: Mesh, rules: Dict):
+    specs = param_specs(abstract_params, mesh, rules)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(batch_tree, mesh: Mesh, rules: Dict):
+    """Shard dim 0 (global batch) over the batch axes when divisible."""
+
+    def one(leaf):
+        axes = rules.get("batch")
+        if axes is None:
+            return P()
+        size = int(np.prod([mesh.shape[a] for a in (
+            (axes,) if isinstance(axes, str) else axes)]))
+        if leaf.shape and leaf.shape[0] % size == 0 and leaf.shape[0] > 1:
+            return P(*((axes,) + (None,) * (len(leaf.shape) - 1)))
+        return P()
+
+    return jax.tree_util.tree_map(one, batch_tree)
+
+
+def cache_specs(cache_tree, mesh: Mesh, rules: Dict, *,
+                long_context: bool = False):
+    """Decode caches: batch on dim 0, sequence-shard k/v on dim 2."""
+    seq_rule = rules.get("long_seq" if long_context else "kv_seq")
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        batch_axes = rules.get("batch")
+        specs = [None] * leaf.ndim
+        if batch_axes is not None and leaf.shape:
+            size = int(np.prod([mesh.shape[a] for a in (
+                (batch_axes,) if isinstance(batch_axes, str)
+                else batch_axes)]))
+            if leaf.shape[0] % size == 0 and leaf.shape[0] > 1:
+                specs[0] = batch_axes
+        if name in ("k", "v", "ck", "cv", "ks", "vs") and leaf.ndim == 4 \
+                and seq_rule is not None:
+            size = int(np.prod([mesh.shape[a] for a in (
+                (seq_rule,) if isinstance(seq_rule, str) else seq_rule)]))
+            if leaf.shape[2] % size == 0:
+                specs[2] = seq_rule
+        return P(*specs)
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def to_shardings(spec_tree, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel directory contains the TPU kernel (``pl.pallas_call`` with
+explicit BlockSpec VMEM tiling), a jitted wrapper (``ops.py``) and a
+pure-jnp oracle (``ref.py``).  On this CPU container kernels are validated
+in ``interpret=True`` mode; model code selects implementations via
+``impl=`` ('ref' | 'interpret' | 'pallas').
+
+Paper-side kernels: ``hopscotch`` (the Fig. 9 offload's probe stage as a
+TPU-native batched gather/compare) and ``chain_vm`` (a NIC-PU-per-client
+WR-chain interpreter).  Model-side kernels: ``flash_attention``,
+``decode_attention`` (the KV *get* of serving), ``rwkv6`` and ``rglru``
+(the attention-free recurrences of the assigned archs).
+"""

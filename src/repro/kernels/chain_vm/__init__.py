@@ -1,0 +1,2 @@
+from .ops import run_chains  # noqa: F401
+from .ref import run_chain_reference  # noqa: F401

@@ -1,0 +1,61 @@
+"""The NIC-PU-per-client chain executor as a Pallas kernel.
+
+Each grid cell is one client QP context: its memory image (code region =
+the WR chain, data region, response region) is staged HBM->VMEM, a fori
+loop fetches and executes WRs in order (lax.switch over the opcode), and
+the mutated image is written back.  This is the closest TPU analogue of a
+ConnectX PU walking a managed WQ: fetch-at-execute within the image makes
+self-modifying chains coherent by construction (the paper needs WAIT/
+ENABLE to get the same guarantee past the RNIC's WQE prefetch).
+
+The kernel is scalar/VPU-bound (as the real thing is PU-bound, Table 3) —
+its job is offload semantics, not FLOPs; the hopscotch kernel covers the
+dense-probe fast path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ...core import isa
+from .ref import step_wr
+
+
+def _vm_kernel(mem_ref, out_ref, *, wq_base: int, n_wrs: int,
+               max_steps: int):
+    mem0 = mem_ref[0]
+
+    def body(i, carry):
+        m, head, halted = carry
+        addr = wq_base + (head % n_wrs) * isa.WR_WORDS
+        m2, h2 = step_wr(m, addr)
+        m = jnp.where(halted, m, m2)
+        head = head + jnp.where(halted, 0, 1)
+        return (m, head, halted | h2)
+
+    mem, _, _ = jax.lax.fori_loop(
+        0, max_steps, body,
+        (mem0, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.bool_)))
+    out_ref[0] = mem
+
+
+def run_chains_pallas(mems, *, wq_base: int, n_wrs: int, max_steps: int,
+                      interpret: bool = False):
+    """mems: (n_clients, M) int32 — one image per client QP."""
+    n_clients, m = mems.shape
+    kernel = functools.partial(_vm_kernel, wq_base=wq_base, n_wrs=n_wrs,
+                               max_steps=max_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_clients,),
+        in_specs=[pl.BlockSpec((1, m), lambda ci: (ci, 0))],
+        out_specs=pl.BlockSpec((1, m), lambda ci: (ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_clients, m), jnp.int32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(mems)

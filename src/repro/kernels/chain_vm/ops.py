@@ -1,0 +1,27 @@
+"""Chain-VM wrapper: batch of client chains, implementation-selected."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import run_chains_pallas
+from .ref import run_chain_reference
+
+
+@functools.partial(jax.jit, static_argnames=("wq_base", "n_wrs",
+                                             "max_steps", "impl"))
+def run_chains(mems, *, wq_base: int, n_wrs: int, max_steps: int = 64,
+               impl: Optional[str] = None):
+    """Execute one single-WQ chain per row of ``mems`` (n_clients, M)."""
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        out, _ = jax.vmap(
+            lambda m: run_chain_reference(m, wq_base, n_wrs, max_steps))(mems)
+        return out
+    return run_chains_pallas(mems, wq_base=wq_base, n_wrs=n_wrs,
+                             max_steps=max_steps,
+                             interpret=(impl == "interpret"))

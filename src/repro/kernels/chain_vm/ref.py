@@ -1,0 +1,76 @@
+"""Oracle for the single-WQ chain executor: a pure-jnp in-order interpreter
+over the same 8-word WR ISA as repro.core (opcode subset: no WAIT/ENABLE/
+SEND/RECV — a single queue is totally ordered, and triggers are applied by
+scattering the request into memory before execution, exactly what the
+RECV's scatter list would do)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ...core import isa
+
+
+def _copy(mem, src, dst, ln):
+    ln = jnp.clip(ln, 0, isa.MAX_COPY)
+    blk = lax.dynamic_slice(mem, (src,), (isa.MAX_COPY,))
+    cur = lax.dynamic_slice(mem, (dst,), (isa.MAX_COPY,))
+    out = jnp.where(jnp.arange(isa.MAX_COPY) < ln, blk, cur)
+    return lax.dynamic_update_slice(mem, out, (dst,))
+
+
+def step_wr(mem, wr_addr):
+    """Execute the WR at wr_addr; returns (mem, halted)."""
+    ctrl = mem[wr_addr + isa.F_CTRL]
+    opcode = jnp.clip((ctrl >> isa.ID_BITS) & 0x7F, 0, isa.NUM_OPCODES - 1)
+    src = mem[wr_addr + isa.F_SRC]
+    dst = mem[wr_addr + isa.F_DST]
+    ln = mem[wr_addr + isa.F_LEN]
+    opa = mem[wr_addr + isa.F_OPA]
+    opb = mem[wr_addr + isa.F_OPB]
+    d = jnp.maximum(dst, 0)
+
+    def noop(m):
+        return m
+
+    def write(m):
+        return _copy(m, src, d, ln)
+
+    def write_imm(m):
+        return m.at[d].set(opa)
+
+    def cas(m):
+        old = m[d]
+        return m.at[d].set(jnp.where(old == opa, opb, old))
+
+    def add(m):
+        return m.at[d].add(opa)
+
+    def max_(m):
+        return m.at[d].max(opa)
+
+    def min_(m):
+        return m.at[d].min(opa)
+
+    branches = [noop, write, write_imm, write, noop, noop, cas, add,
+                max_, min_, noop, noop, noop]
+    mem = lax.switch(opcode, branches, mem)
+    return mem, opcode == isa.HALT
+
+
+def run_chain_reference(mem, wq_base: int, n_wrs: int, max_steps: int):
+    """Run up to max_steps WRs of a single circular WQ starting at slot 0."""
+
+    def body(carry, _):
+        m, head, halted = carry
+        addr = wq_base + (head % n_wrs) * isa.WR_WORDS
+        m2, h2 = step_wr(m, addr)
+        m = jnp.where(halted, m, m2)        # frozen once halted
+        head = head + jnp.where(halted, 0, 1)
+        return (m, head, halted | h2), None
+
+    (mem, head, halted), _ = lax.scan(
+        body, (mem, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.bool_)),
+        None, length=max_steps)
+    return mem, head

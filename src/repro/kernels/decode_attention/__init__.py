@@ -1,0 +1,2 @@
+from .ops import combine_partials, decode_attention, decode_partial  # noqa: F401
+from .ref import decode_partial_reference, decode_reference  # noqa: F401

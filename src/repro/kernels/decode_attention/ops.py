@@ -1,0 +1,45 @@
+"""Jitted decode-attention wrappers with implementation selection."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import decode_partial_pallas
+from .ref import (combine_partials_reference, decode_partial_reference,
+                  decode_reference)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "kpos_offset",
+                                             "scale", "impl", "block_k"))
+def decode_partial(q, k, v, lengths, *, window: int = 0,
+                   kpos_offset: int = 0, scale: Optional[float] = None,
+                   impl: Optional[str] = None, block_k: int = 512):
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return decode_partial_reference(q, k, v, lengths, window=window,
+                                        kpos_offset=kpos_offset, scale=scale)
+    return decode_partial_pallas(q, k, v, lengths, window=window,
+                                 kpos_offset=kpos_offset, scale=scale,
+                                 block_k=block_k,
+                                 interpret=(impl == "interpret"))
+
+
+def combine_partials(parts):
+    return combine_partials_reference(parts)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale", "impl",
+                                             "block_k"))
+def decode_attention(q, k, v, lengths, *, window: int = 0,
+                     scale: Optional[float] = None,
+                     impl: Optional[str] = None, block_k: int = 512):
+    """Full (single-shard) decode: normalize the partial triple."""
+    if impl == "ref":
+        return decode_reference(q, k, v, lengths, window=window, scale=scale)
+    acc, m, l = decode_partial(q, k, v, lengths, window=window, scale=scale,
+                               impl=impl, block_k=block_k)
+    return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)

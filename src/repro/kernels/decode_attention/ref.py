@@ -1,0 +1,65 @@
+"""Oracle for single-token decode attention over a (possibly sharded) cache.
+
+The *partial* form returns un-normalized ``(acc, m, l)`` per shard so the
+distributed layer can merge across sequence shards — the flash-decoding
+identity:  softmax over the union == combine of per-shard partials with
+``m* = max m_s; l* = sum l_s e^{m_s-m*}; acc* = sum acc_s e^{m_s-m*}``.
+
+This is the TPU re-hosting of the paper's "execute the get where the data
+lives": each cache shard computes its partial locally (one collective phase
+for the combine) instead of shipping the cache to the querier.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_partial_reference(q, k, v, lengths, *, window: int = 0,
+                             kpos_offset: int = 0,
+                             scale: Optional[float] = None):
+    """q: (B,H,1,D); k,v: (B,KH,S,D) — one shard's cache slice.
+
+    lengths: (B,) GLOBAL valid length; kpos_offset: this shard's first
+    global position.  Returns acc (B,H,1,D) f32, m (B,H,1,1), l (B,H,1,1).
+    """
+    b, h, _, d = q.shape
+    _, kh, s, _ = k.shape
+    g = h // kh
+    scale = scale if scale is not None else d ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = jnp.repeat(k.astype(jnp.float32), g, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), g, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    kpos = jnp.arange(s) + kpos_offset
+    mask = kpos[None, None, None, :] < lengths[:, None, None, None]
+    if window > 0:
+        mask &= kpos[None, None, None, :] >= (
+            lengths[:, None, None, None] - window)
+    logits = jnp.where(mask, logits, NEG_INF)
+    m = jnp.max(logits, -1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, -1, keepdims=True)
+    acc = jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+    return acc, m, l
+
+
+def combine_partials_reference(parts):
+    """parts: list of (acc, m, l). Returns normalized output (B,H,1,D)."""
+    m_star = parts[0][1]
+    for _, m, _ in parts[1:]:
+        m_star = jnp.maximum(m_star, m)
+    l_star = sum(l * jnp.exp(m - m_star) for _, m, l in parts)
+    acc_star = sum(a * jnp.exp(m - m_star) for a, m, _ in parts)
+    return (acc_star / jnp.maximum(l_star, 1e-30))
+
+
+def decode_reference(q, k, v, lengths, *, window: int = 0,
+                     scale: Optional[float] = None):
+    acc, m, l = decode_partial_reference(q, k, v, lengths, window=window,
+                                         scale=scale)
+    return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)

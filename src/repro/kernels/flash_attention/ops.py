@@ -1,0 +1,252 @@
+"""Jitted wrapper: implementation selection + a blocked pure-JAX fallback.
+
+``impl``:
+  'pallas'     — the TPU kernel (requires a TPU backend)
+  'interpret'  — the same kernel body interpreted on CPU (tests)
+  'ref'        — the O(S^2)-materializing oracle (small shapes only)
+  'blocked'    — lax.scan flash attention in pure JAX: numerically the
+                 kernel's algorithm, compilable on every backend — this is
+                 what the dry-run lowers when kernels can't (CPU) lower.
+  None         — 'pallas' on TPU else 'blocked'
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ...distributed.sharding import shard
+from .kernel import flash_attention_pallas
+from .ref import NEG_INF, attention_reference
+
+
+def _pin(x):
+    """Re-pin the batch axis inside custom_vjp bodies: GSPMD propagation
+    does not cross custom_vjp boundaries, and an unpinned backward lets the
+    partitioner all-gather the batch (observed: 16x activation blow-up)."""
+    return shard(x, "batch", *([None] * (x.ndim - 1)))
+
+
+def _pin_h(x):
+    """Pin (batch, heads) on rank-4 (B,H,S,D) tensors — active only when
+    the 'heads' rule maps to a mesh axis (the tpattn hillclimb)."""
+    if x.ndim == 4:
+        return shard(x, "batch", "heads", None, None)
+    return _pin(x)
+
+
+def _blocked_jax(q, k, v, *, mode, window, lengths, q_offset, scale,
+                 block_k: int = 512):
+    """Chunked flash attention with lax.scan over KV blocks (O(S) memory).
+
+    Memory discipline (these matter for remat'd training):
+    * masking is ADDITIVE at the smallest broadcastable shape — a
+      ``jnp.where(mask, s, -inf)`` would checkpoint a (B,H,Sq,BK) bool per
+      scan step (19 GB for the train_4k cells);
+    * GQA is a grouped einsum over (B, KH, G, ...) — ``jnp.repeat`` of K/V
+      would checkpoint H-broadcast copies of the cache per step;
+    * gradients flow through a custom VJP (the flash backward): naive
+      autodiff of the scan stacks (nk, B, KH, G, Sq, BK) score residuals —
+      77 GB on the train_4k cells — whereas the flash backward saves only
+      (out, lse) and recomputes p per block.
+    """
+    out, _ = _blocked_fwd_pass(q, k, v, mode=mode, window=window,
+                               lengths=lengths, q_offset=q_offset,
+                               scale=scale, block_k=block_k)
+    return out
+
+
+def _block_bias(mode, ki, bk, sk, window, qpos, lengths):
+    """Additive mask bias for KV block ki (smallest broadcastable shape)."""
+    kpos = ki * bk + jnp.arange(bk)
+    if mode == "causal":
+        ok = kpos[None, :] <= qpos[:, None]
+        if window > 0:
+            ok &= kpos[None, :] > qpos[:, None] - window
+        ok &= (kpos < sk)[None, :]
+        return jnp.where(ok, 0.0, NEG_INF)[None, None, None]   # (Sq,BK)
+    if mode == "length":
+        ok = kpos[None, :] < lengths[:, None]
+        if window > 0:
+            ok &= kpos[None, :] >= lengths[:, None] - window
+        ok &= (kpos < sk)[None, :]
+        return jnp.where(ok, 0.0, NEG_INF)[:, None, None, None]
+    ok = (kpos < sk)[None, :]
+    return jnp.where(ok, 0.0, NEG_INF)[None, None, None]
+
+
+def _blocked_fwd_pass(q, k, v, *, mode, window, lengths, q_offset, scale,
+                      block_k):
+    b, h, sq, d = q.shape
+    _, kh, sk, _ = k.shape
+    g = h // kh
+    scale = scale if scale is not None else d ** -0.5
+    bk = min(block_k, sk)
+    nk = -(-sk // bk)
+    pad = nk * bk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+
+    qf = (q.astype(jnp.float32) * scale).reshape(b, kh, g, sq, d)
+    kf = k.astype(jnp.float32).reshape(b, kh, nk, bk, d)
+    vf = v.astype(jnp.float32).reshape(b, kh, nk, bk, d)
+    qpos = jnp.arange(sq) + q_offset
+
+    if lengths is None:
+        lengths = jnp.full((b,), sk, jnp.int32)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kb, vb, ki = blk          # (B,KH,BK,D) x2, ()
+        s = jnp.einsum("bkgqd,bkcd->bkgqc", qf, kb)   # (B,KH,G,Sq,BK)
+        s = s + _block_bias(mode, ki, bk, sk, window, qpos, lengths)
+
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, -1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum("bkgqc,bkcd->bkgqd", p, vb)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kh, g, sq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kh, g, sq, 1), jnp.float32)
+    a0 = jnp.zeros((b, kh, g, sq, d), jnp.float32)
+    kts = jnp.moveaxis(kf, 2, 0)
+    vts = jnp.moveaxis(vf, 2, 0)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (kts, vts, jnp.arange(nk)))
+    out = acc / jnp.maximum(l, 1e-30)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))          # (B,KH,G,Sq,1)
+    return out.reshape(b, h, sq, d).astype(q.dtype), lse
+
+
+def _make_blocked_vjp(mode, window, q_offset, scale, block_k,
+                      gqa: str = "grouped"):
+    """Flash attention with the flash *backward*: saves (q,k,v,out,lse),
+    recomputes p per KV block — O(S) residual memory.
+
+    gqa='grouped' (default): K/V stay at KV-head resolution and queries
+    group as (B, KH, G, ...) — minimal memory, but the KH*G reshape is not
+    representable when heads shard over the model axis.
+    gqa='repeat' (the tpattn hillclimb): K/V repeat to H heads up front so
+    every tensor keeps a clean (B, H@model, ...) layout; dK/dV reduce over
+    the group axis at the end.
+    """
+
+    def expand(k, v, g):
+        if gqa == "repeat" and g > 1:
+            return (_pin_h(jnp.repeat(k, g, axis=1)),
+                    _pin_h(jnp.repeat(v, g, axis=1)))
+        return k, v
+
+    @jax.custom_vjp
+    def attn(q, k, v, lengths):
+        g = q.shape[1] // k.shape[1]
+        ke, ve = expand(_pin_h(k), _pin_h(v), g)
+        out, _ = _blocked_fwd_pass(_pin_h(q), ke, ve, mode=mode,
+                                   window=window, lengths=lengths,
+                                   q_offset=q_offset, scale=scale,
+                                   block_k=block_k)
+        return _pin_h(out)
+
+    def fwd(q, k, v, lengths):
+        g = q.shape[1] // k.shape[1]
+        ke, ve = expand(_pin_h(k), _pin_h(v), g)
+        out, lse = _blocked_fwd_pass(_pin_h(q), ke, ve, mode=mode,
+                                     window=window, lengths=lengths,
+                                     q_offset=q_offset, scale=scale,
+                                     block_k=block_k)
+        out = _pin_h(out)
+        return out, (q, k, v, lengths, out, lse)
+
+    def bwd(res, do):
+        q, k, v, lengths, out, lse = res
+        q, out, do = (_pin_h(x) for x in (q, out, do))
+        lse = _pin(lse)
+        g_orig = q.shape[1] // k.shape[1]
+        k, v = expand(_pin_h(k), _pin_h(v), g_orig)
+        b, h, sq, d = q.shape
+        _, kh, sk, _ = k.shape
+        g = h // kh
+        sc = scale if scale is not None else d ** -0.5
+        bk = min(block_k, sk)
+        nk = -(-sk // bk)
+        pad = nk * bk - sk
+        kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))) if pad else k
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))) if pad else v
+        qf = (q.astype(jnp.float32) * sc).reshape(b, kh, g, sq, d)
+        dof = do.astype(jnp.float32).reshape(b, kh, g, sq, d)
+        outf = out.astype(jnp.float32).reshape(b, kh, g, sq, d)
+        kts = jnp.moveaxis(
+            kp.astype(jnp.float32).reshape(b, kh, nk, bk, d), 2, 0)
+        vts = jnp.moveaxis(
+            vp.astype(jnp.float32).reshape(b, kh, nk, bk, d), 2, 0)
+        qpos = jnp.arange(sq) + q_offset
+        lens = lengths if lengths is not None \
+            else jnp.full((b,), sk, jnp.int32)
+        delta = jnp.sum(dof * outf, axis=-1, keepdims=True)  # (B,KH,G,Sq,1)
+
+        def bstep(dq, blk):
+            kb, vb, ki = blk
+            s = jnp.einsum("bkgqd,bkcd->bkgqc", qf, kb)
+            s = s + _block_bias(mode, ki, bk, sk, window, qpos, lens)
+            p = jnp.exp(s - lse)                         # (B,KH,G,Sq,BK)
+            dv_b = jnp.einsum("bkgqc,bkgqd->bkcd", p, dof)
+            dp = jnp.einsum("bkgqd,bkcd->bkgqc", dof, vb)
+            ds = p * (dp - delta)
+            dq = dq + jnp.einsum("bkgqc,bkcd->bkgqd", ds, kb) * sc
+            dk_b = jnp.einsum("bkgqc,bkgqd->bkcd", ds, qf)
+            return dq, (dk_b, dv_b)
+
+        dq0 = _pin(jnp.zeros((b, kh, g, sq, d), jnp.float32))
+        dq, (dks, dvs) = jax.lax.scan(bstep, dq0,
+                                      (kts, vts, jnp.arange(nk)))
+        dq = _pin_h(dq.reshape(b, h, sq, d).astype(q.dtype))
+        dk = jnp.moveaxis(dks, 0, 2).reshape(b, kh, nk * bk, d)
+        dv = jnp.moveaxis(dvs, 0, 2).reshape(b, kh, nk * bk, d)
+        dk = dk[:, :, :sk]
+        dv = dv[:, :, :sk]
+        if gqa == "repeat" and g_orig > 1:
+            # reduce the repeated heads back to KV-head resolution
+            kh0 = kh // g_orig
+            dk = dk.reshape(b, kh0, g_orig, sk, d).sum(axis=2)
+            dv = dv.reshape(b, kh0, g_orig, sk, d).sum(axis=2)
+        dk = _pin(dk.astype(res[1].dtype))
+        dv = _pin(dv.astype(res[2].dtype))
+        import numpy as _np
+        dlen = _np.zeros(lens.shape, jax.dtypes.float0)
+        return dq, dk, dv, dlen
+
+    attn.defvjp(fwd, bwd)
+    return attn
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mode", "window", "q_offset", "scale", "impl",
+                     "block_q", "block_k", "gqa"))
+def flash_attention(q, k, v, *, mode: str = "causal", window: int = 0,
+                    lengths: Optional[jnp.ndarray] = None,
+                    q_offset: int = 0, scale: Optional[float] = None,
+                    impl: Optional[str] = None, block_q: int = 128,
+                    block_k: int = 256, gqa: str = "grouped"):
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "blocked"
+    if impl == "ref":
+        return attention_reference(q, k, v, mode=mode, window=window,
+                                   lengths=lengths, q_offset=q_offset,
+                                   scale=scale)
+    if impl == "blocked":
+        fn = _make_blocked_vjp(mode, window, q_offset, scale, block_k,
+                               gqa=gqa)
+        if lengths is None:
+            lengths = jnp.full((q.shape[0],), k.shape[2], jnp.int32)
+        return fn(q, k, v, lengths)
+    return flash_attention_pallas(
+        q, k, v, mode=mode, window=window, lengths=lengths,
+        q_offset=q_offset, scale=scale, block_q=block_q, block_k=block_k,
+        interpret=(impl == "interpret"))

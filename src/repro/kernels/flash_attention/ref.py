@@ -1,0 +1,60 @@
+"""Pure-jnp oracle for blocked attention (causal / sliding-window / length).
+
+Shapes: q (B, H, Sq, D); k, v (B, KH, Sk, D) with H % KH == 0 (GQA).
+``mode``:
+  'full'    — no mask (encoder / cross-attention)
+  'causal'  — position i attends to j <= i (+ optional window)
+  'length'  — decode: attend to j < lengths[b] (Sq is typically 1)
+``window`` — sliding window size w: j > i - w (0 = unlimited).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_reference(q, k, v, *, mode: str = "causal", window: int = 0,
+                        lengths: Optional[jnp.ndarray] = None,
+                        q_offset: int = 0, scale: Optional[float] = None):
+    b, h, sq, d = q.shape
+    _, kh, sk, _ = k.shape
+    assert h % kh == 0
+    g = h // kh
+    scale = scale if scale is not None else d ** -0.5
+
+    qf = q.astype(jnp.float32) * scale
+    kf = jnp.repeat(k.astype(jnp.float32), g, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), g, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), jnp.bool_)
+    if mode == "causal":
+        mask = kpos[None, :] <= qpos[:, None]
+        if window > 0:
+            mask &= kpos[None, :] > qpos[:, None] - window
+    elif mode == "length":
+        # decode: the cache holds lengths[b] valid entries (including the
+        # current token); attend to j < length, and with a sliding window
+        # only to the last `window` of them.
+        assert lengths is not None
+        mask = jnp.broadcast_to(mask, (b, sq, sk))
+        mask = mask & (kpos[None, None, :] < lengths[:, None, None])
+        if window > 0:
+            mask = mask & (kpos[None, None, :]
+                           >= lengths[:, None, None] - window)
+        logits = jnp.where(mask[:, None], logits, NEG_INF)
+        p = jnp.exp(logits - jnp.max(logits, -1, keepdims=True))
+        p = p / (jnp.sum(p, -1, keepdims=True) + 1e-30)
+        return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)
+    elif mode != "full":
+        raise ValueError(mode)
+
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    p = jnp.exp(logits - jnp.max(logits, -1, keepdims=True))
+    p = p / (jnp.sum(p, -1, keepdims=True) + 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)

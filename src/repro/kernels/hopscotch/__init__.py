@@ -1,0 +1,2 @@
+from .ops import hopscotch_lookup  # noqa: F401
+from .ref import lookup_reference  # noqa: F401

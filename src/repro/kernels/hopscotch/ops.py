@@ -1,0 +1,31 @@
+"""Hopscotch lookup wrapper with implementation selection."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from .kernel import hopscotch_lookup_pallas
+from .ref import lookup_reference
+
+
+@functools.partial(jax.jit, static_argnames=("neighborhood", "impl",
+                                             "block_q", "block_n"))
+def hopscotch_lookup(keys, values, queries, neighborhood: int = 8, *,
+                     impl: Optional[str] = None, block_q: int = 128,
+                     block_n: int = 1024):
+    """Batched get: returns (found (B,), values (B, V)); misses are zeros.
+
+    One neighborhood wrap-around caveat: a key whose neighborhood crosses
+    the table end appears in both the first and last table tiles; the
+    one-hot accumulation handles it for free (each bucket is compared in
+    exactly one tile).
+    """
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return lookup_reference(keys, values, queries, neighborhood)
+    return hopscotch_lookup_pallas(keys, values, queries, neighborhood,
+                                   block_q=block_q, block_n=block_n,
+                                   interpret=(impl == "interpret"))

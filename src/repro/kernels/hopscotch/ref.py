@@ -1,0 +1,11 @@
+"""Oracle for the batched hopscotch probe (delegates to the kvstore's
+pure-jnp lookup, which the host-side table construction also tests)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...kvstore import hopscotch as _h
+
+
+def lookup_reference(keys, values, queries, neighborhood: int):
+    return _h.lookup(keys, values, queries, neighborhood)

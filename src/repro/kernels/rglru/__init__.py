@@ -1,0 +1,2 @@
+from .ops import rglru  # noqa: F401
+from .ref import rglru_reference  # noqa: F401

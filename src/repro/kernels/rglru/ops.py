@@ -1,0 +1,67 @@
+"""RG-LRU wrapper: 'pallas' | 'interpret' | 'chunked' | 'scan' | 'assoc'."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import _chunk_math, rglru_pallas
+from .ref import rglru_reference
+
+
+def _chunked_jax(a, u, chunk: int):
+    b, t, d = a.shape
+    c = min(chunk, t)
+    assert t % c == 0
+    nc = t // c
+    af, uf = a.astype(jnp.float32), u.astype(jnp.float32)
+
+    def per_batch(ab, ub):
+        ac = ab.reshape(nc, c, d)
+        uc = ub.reshape(nc, c, d)
+
+        def step(h0, xs):
+            ax, ux = xs
+            h, hn = _chunk_math(ax, ux, h0)
+            return hn, h
+
+        hT, hs = jax.lax.scan(step, jnp.zeros((1, d), jnp.float32), (ac, uc))
+        return hs.reshape(t, d), hT[0]
+
+    h, hT = jax.vmap(per_batch)(af, uf)
+    return h.astype(a.dtype), hT
+
+
+def _assoc_scan(a, u):
+    """Blelloch associative scan over (a, u) pairs — O(log T) depth."""
+    af, uf = a.astype(jnp.float32), u.astype(jnp.float32)
+
+    def op(x, y):
+        ax, ux = x
+        ay, uy = y
+        return ax * ay, uy + ay * ux
+
+    As, Us = jax.lax.associative_scan(op, (af, uf), axis=1)
+    return Us.astype(a.dtype), Us[:, -1].astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "chunk"))
+def rglru(a, u, *, impl: Optional[str] = None, chunk: int = 32):
+    """Returns (h (B,T,D), final state (B,D))."""
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "chunked"
+    if impl == "scan":
+        return rglru_reference(a, u)
+    if impl == "assoc":
+        return _assoc_scan(a, u)
+    if impl == "chunked":
+        return _chunked_jax(a, u, chunk)
+    return rglru_pallas(a, u, chunk=chunk, interpret=(impl == "interpret"))
+
+
+def rglru_decode_step(a1, u1, h):
+    """Single-token decode: a1, u1, h: (B, D)."""
+    h = a1.astype(jnp.float32) * h + u1.astype(jnp.float32)
+    return h.astype(a1.dtype), h

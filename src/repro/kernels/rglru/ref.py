@@ -1,0 +1,28 @@
+"""Oracle for the RG-LRU recurrence (Griffin / RecurrentGemma).
+
+    h_t = a_t . h_{t-1} + sqrt(1 - a_t^2) . (i_t . x_t)
+
+The layer computes the gates; the kernel sees the recurrence coefficient
+``a`` (B, T, D) in (0, 1) and the gated input ``u = sqrt(1-a^2) . i . x``
+(B, T, D), and produces h (B, T, D) plus the final state (B, D).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_reference(a, u, h0=None):
+    b, t, d = a.shape
+    af, uf = a.astype(jnp.float32), u.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((b, d), jnp.float32)
+
+    def step(h, xs):
+        at, ut = xs
+        h = at * h + ut
+        return h, h
+
+    hT, hs = jax.lax.scan(step, h0, (jnp.moveaxis(af, 1, 0),
+                                     jnp.moveaxis(uf, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1).astype(a.dtype), hT

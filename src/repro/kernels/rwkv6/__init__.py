@@ -1,0 +1,2 @@
+from .ops import wkv6  # noqa: F401
+from .ref import wkv6_reference  # noqa: F401

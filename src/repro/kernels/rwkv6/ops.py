@@ -1,0 +1,68 @@
+"""WKV6 wrapper: 'pallas' | 'interpret' | 'chunked' (pure-JAX, same math,
+compiles on every backend — the model/dry-run path) | 'scan' (oracle)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import _chunk_math, wkv6_pallas
+from .ref import wkv6_reference
+
+
+def _chunked_jax(r, k, v, w, u, chunk: int):
+    b, h, t, n = r.shape
+    m = v.shape[-1]
+    c = min(chunk, t)
+    assert t % c == 0
+    nc = t // c
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def per_head(rh, kh, vh, wh, uh):
+        # (T,N)->(NC,C,N) chunks; scan over chunks, vectorized inside
+        rc = rh.reshape(nc, c, n)
+        kc = kh.reshape(nc, c, n)
+        vc = vh.reshape(nc, c, m)
+        wc = wh.reshape(nc, c, n)
+
+        def step(S, xs):
+            rx, kx, vx, wx = xs
+            o, S2 = _chunk_math(rx, kx, vx, wx, uh, S)
+            return S2, o
+
+        S0 = jnp.zeros((n, m), jnp.float32)
+        ST, o = jax.lax.scan(step, S0, (rc, kc, vc, wc))
+        return o.reshape(t, m), ST
+
+    # vmap over B then H; u indexed by head on the inner vmap
+    o, ST = jax.vmap(
+        lambda rb, kb, vb, wb: jax.vmap(per_head)(rb, kb, vb, wb, uf))(
+            rf, kf, vf, wf)
+    return o.astype(r.dtype), ST
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "chunk"))
+def wkv6(r, k, v, w, u, *, impl: Optional[str] = None, chunk: int = 32):
+    """Returns (o (B,H,T,M), final_state (B,H,N,M))."""
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "chunked"
+    if impl == "scan":
+        return wkv6_reference(r, k, v, w, u)
+    if impl == "chunked":
+        return _chunked_jax(r, k, v, w, u, chunk)
+    return wkv6_pallas(r, k, v, w, u, chunk=chunk,
+                       interpret=(impl == "interpret"))
+
+
+def wkv6_decode_step(r1, k1, v1, w1, u, state):
+    """Single-token decode: r1,k1,w1 (B,H,N); v1 (B,H,M); state (B,H,N,M)."""
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r1, k1, v1, w1))
+    uf = u.astype(jnp.float32)
+    kv = kf[..., :, None] * vf[..., None, :]
+    att = state + uf[None, :, :, None] * kv
+    o = jnp.einsum("bhn,bhnm->bhm", rf, att)
+    new_state = wf[..., :, None] * state + kv
+    return o.astype(r1.dtype), new_state

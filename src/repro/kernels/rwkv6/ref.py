@@ -1,0 +1,34 @@
+"""Oracle for the RWKV6 (Finch) WKV recurrence with data-dependent decay.
+
+Per head with key dim N and value dim M:
+    o_t = r_t @ (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+r, k, w: (B, H, T, N); v: (B, H, T, M); u: (H, N); w in (0, 1).
+Returns o: (B, H, T, M) and the final state (B, H, N, M).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_reference(r, k, v, w, u, state0=None):
+    b, h, t, n = r.shape
+    m = v.shape[-1]
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    if state0 is None:
+        state0 = jnp.zeros((b, h, n, m), jnp.float32)
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs                       # (B,H,N) x3, (B,H,M)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,N,M)
+        att = S + uf[None, :, :, None] * kv
+        ot = jnp.einsum("bhn,bhnm->bhm", rt, att)
+        S = wt[..., :, None] * S + kv
+        return S, ot
+
+    xs = (jnp.moveaxis(rf, 2, 0), jnp.moveaxis(kf, 2, 0),
+          jnp.moveaxis(vf, 2, 0), jnp.moveaxis(wf, 2, 0))
+    S, o = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(o, 0, 2).astype(r.dtype), S

@@ -1,0 +1,93 @@
+"""Cuckoo hash table (MemC3-style, 2 hashes x 4-way buckets) — the variant
+RedN's Memcached integration uses (§5.4, citing [24] MemC3)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+EMPTY = 0
+_M1 = 2654435761
+_M2 = 40503
+
+
+def h1(key, n: int):
+    if isinstance(key, (int, np.integer)):
+        return (key * _M1 & 0xFFFFFFFF) % n
+    return ((key.astype(jnp.uint32) * jnp.uint32(_M1))
+            % jnp.uint32(n)).astype(jnp.int32)
+
+
+def h2(key, n: int):
+    if isinstance(key, (int, np.integer)):
+        return ((key ^ (key >> 7)) * _M2 & 0xFFFFFFFF) % n
+    k = key.astype(jnp.uint32)
+    return (((k ^ (k >> 7)) * jnp.uint32(_M2))
+            % jnp.uint32(n)).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class CuckooTable:
+    keys: np.ndarray        # (n_buckets, ways) int32
+    values: np.ndarray      # (n_buckets, ways, val_words) int32
+    max_kicks: int = 64
+
+    @property
+    def n_buckets(self) -> int:
+        return self.keys.shape[0]
+
+    @property
+    def ways(self) -> int:
+        return self.keys.shape[1]
+
+    def insert(self, key: int, value: Sequence[int]) -> bool:
+        assert key != EMPTY
+        n = self.n_buckets
+        cur_key, cur_val = key, np.zeros(self.values.shape[-1], np.int32)
+        cur_val[:len(value)] = value
+        for b in (h1(key, n), h2(key, n)):      # update-in-place
+            for w in range(self.ways):
+                if self.keys[b, w] == key:
+                    self.values[b, w] = cur_val
+                    return True
+        for _ in range(self.max_kicks):
+            for b in (h1(cur_key, n), h2(cur_key, n)):
+                for w in range(self.ways):
+                    if self.keys[b, w] == EMPTY:
+                        self.keys[b, w] = cur_key
+                        self.values[b, w] = cur_val
+                        return True
+            # evict a resident from cur_key's first bucket
+            b = int(h1(cur_key, n))
+            w = np.random.RandomState(cur_key).randint(self.ways)
+            vk, vv = int(self.keys[b, w]), self.values[b, w].copy()
+            self.keys[b, w] = cur_key
+            self.values[b, w] = cur_val
+            cur_key, cur_val = vk, vv
+        return False
+
+    def as_device(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return jnp.asarray(self.keys), jnp.asarray(self.values)
+
+
+def make_table(n_buckets: int, val_words: int, ways: int = 4) -> CuckooTable:
+    return CuckooTable(np.zeros((n_buckets, ways), np.int32),
+                       np.zeros((n_buckets, ways, val_words), np.int32))
+
+
+def lookup(keys: jnp.ndarray, values: jnp.ndarray,
+           queries: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched cuckoo get: probe both buckets x all ways (pure jnp oracle)."""
+    n = keys.shape[0]
+    b1, b2 = h1(queries, n), h2(queries, n)               # (B,)
+    cand = jnp.stack([keys[b1], keys[b2]], axis=1)        # (B, 2, W)
+    vals = jnp.stack([values[b1], values[b2]], axis=1)    # (B, 2, W, V)
+    hit = cand == queries[:, None, None].astype(cand.dtype)
+    found = jnp.any(hit, axis=(1, 2))
+    flat = hit.reshape(hit.shape[0], -1)
+    slot = jnp.argmax(flat, axis=1)
+    vflat = vals.reshape(vals.shape[0], -1, vals.shape[-1])
+    out = jnp.take_along_axis(vflat, slot[:, None, None], axis=1)[:, 0]
+    return found, out * found[:, None].astype(out.dtype)

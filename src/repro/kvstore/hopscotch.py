@@ -1,0 +1,113 @@
+"""Hopscotch hash table (paper §5.2) in JAX arrays.
+
+Inserts (the *set* path) run on the host with displacement, like RedN —
+"the server CPU populates; gets are offloaded".  The batched *get* is pure
+``jnp`` and doubles as the oracle for the Pallas ``hopscotch`` kernel.
+
+Layout: open-addressed array of ``n_buckets``; a key hashing to bucket ``b``
+lives within the neighborhood ``[b, b+H)`` (wrapping).  ``keys[i] == 0``
+means empty.  Values are fixed-width word payloads in a parallel array.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+EMPTY = 0
+_MULT = 2654435761
+
+
+def bucket_of(key, n_buckets: int):
+    """Multiplicative hash (works on python ints and jnp arrays)."""
+    if isinstance(key, (int, np.integer)):
+        return (key * _MULT & 0xFFFFFFFF) % n_buckets
+    k = key.astype(jnp.uint32) * jnp.uint32(_MULT)
+    return (k % jnp.uint32(n_buckets)).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class HopscotchTable:
+    keys: np.ndarray           # (n_buckets,) int32, 0 = empty
+    values: np.ndarray         # (n_buckets, val_words) int32
+    neighborhood: int          # H
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.keys)
+
+    # -- host-side set path ---------------------------------------------------
+    def insert(self, key: int, value: Sequence[int]) -> bool:
+        assert key != EMPTY
+        n, H = self.n_buckets, self.neighborhood
+        home = int(bucket_of(key, n))
+        # update in place if present
+        for d in range(H):
+            i = (home + d) % n
+            if self.keys[i] == key:
+                self.values[i, :len(value)] = value
+                return True
+        # find a free slot by linear probe
+        free = None
+        for d in range(n):
+            i = (home + d) % n
+            if self.keys[i] == EMPTY:
+                free = i
+                dist = d
+                break
+        if free is None:
+            return False
+        # hopscotch displacement: bubble the free slot into the neighborhood
+        while dist >= H:
+            moved = False
+            for back in range(H - 1, 0, -1):
+                cand = (free - back) % n
+                ck = int(self.keys[cand])
+                if ck == EMPTY:
+                    continue
+                c_home = int(bucket_of(ck, n))
+                # distance from cand's home to the free slot (wrapping)
+                if (free - c_home) % n < H:
+                    self.keys[free] = ck
+                    self.values[free] = self.values[cand]
+                    self.keys[cand] = EMPTY
+                    free = cand
+                    dist = (free - home) % n
+                    moved = True
+                    break
+            if not moved:
+                return False      # needs resize; caller's problem
+        self.keys[free] = key
+        self.values[free, :len(value)] = value
+        return True
+
+    def as_device(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return jnp.asarray(self.keys), jnp.asarray(self.values)
+
+
+def make_table(n_buckets: int, val_words: int,
+               neighborhood: int = 8) -> HopscotchTable:
+    return HopscotchTable(np.zeros(n_buckets, np.int32),
+                          np.zeros((n_buckets, val_words), np.int32),
+                          neighborhood)
+
+
+def lookup(keys: jnp.ndarray, values: jnp.ndarray, queries: jnp.ndarray,
+           neighborhood: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched hopscotch get — the pure-jnp oracle.
+
+    Returns (found: bool[B], value: int32[B, val_words]); misses yield 0s.
+    """
+    n = keys.shape[0]
+    home = bucket_of(queries, n)                                  # (B,)
+    offs = jnp.arange(neighborhood, dtype=jnp.int32)              # (H,)
+    idx = (home[:, None] + offs[None, :]) % n                     # (B, H)
+    probed = keys[idx]                                            # (B, H)
+    hit = probed == queries[:, None].astype(probed.dtype)
+    found = jnp.any(hit, axis=1)
+    slot = jnp.argmax(hit, axis=1)
+    rows = jnp.take_along_axis(idx, slot[:, None], axis=1)[:, 0]  # (B,)
+    vals = values[rows] * found[:, None].astype(values.dtype)
+    return found, vals

@@ -1,0 +1,171 @@
+"""Sharded KV store over the device mesh with the paper's three get paths.
+
+* ``redn``      — §5.2: the request is routed to the owner shard, the
+                  *offload chain* (hopscotch probe) executes there, the
+                  value comes back: **1 RTT**, no host involvement.
+* ``one_sided`` — FaRM/Pilaf style: RDMA READ of the H-bucket neighborhood
+                  metadata, client-side match, RDMA READ of the value:
+                  **2 RTTs**, no host involvement, 6x metadata overhead
+                  (neighborhood reads) exactly as §5.2.2 describes.
+* ``two_sided`` — RPC: request routed to the owner, the *host* performs the
+                  lookup, response routed back: 1 RTT + host service time
+                  (the contended resource in §5.5).
+
+All three return identical values (tested); they differ in collective
+phases and in which resource does the work — which is what the fidelity
+benchmarks price.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..rdma import transport
+from . import hopscotch
+
+_SHARD_MULT = 0x9E3779B1
+
+
+def shard_of(key, n_shards: int):
+    if isinstance(key, (int, np.integer)):
+        return ((key ^ (key >> 13)) * _SHARD_MULT & 0xFFFFFFFF) % n_shards
+    k = key.astype(jnp.uint32)
+    return (((k ^ (k >> 13)) * jnp.uint32(_SHARD_MULT))
+            % jnp.uint32(n_shards)).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class ShardedKV:
+    """Host handle: per-shard hopscotch tables + device arrays."""
+    tables: list                       # [HopscotchTable] * n_shards
+    n_shards: int
+    val_words: int
+    neighborhood: int
+
+    @classmethod
+    def build(cls, n_shards: int, buckets_per_shard: int, val_words: int,
+              neighborhood: int = 8) -> "ShardedKV":
+        tables = [hopscotch.make_table(buckets_per_shard, val_words,
+                                       neighborhood)
+                  for _ in range(n_shards)]
+        return cls(tables, n_shards, val_words, neighborhood)
+
+    def set(self, key: int, value: Sequence[int]) -> bool:
+        """Host-side set (the server CPU populates, like the paper)."""
+        return self.tables[int(shard_of(key, self.n_shards))].insert(
+            key, value)
+
+    def device_arrays(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        keys = jnp.stack([jnp.asarray(t.keys) for t in self.tables])
+        vals = jnp.stack([jnp.asarray(t.values) for t in self.tables])
+        return keys, vals     # (S, B), (S, B, V)
+
+
+# ---------------------------------------------------------------------------
+# the three get paths (shard_map bodies; local table slice has leading dim 1)
+# ---------------------------------------------------------------------------
+
+def _redn_get_local(keys, vals, queries, *, n_shards, capacity, axis,
+                    neighborhood, val_words):
+    """RedN path: triggered chain at the owner — 1 RTT."""
+    q = queries.reshape(-1)
+    dest = shard_of(q, n_shards)
+    payload = q[:, None]
+
+    def chain(reqs):      # executes on the owner: the offloaded lookup
+        found, v = hopscotch.lookup(keys[0], vals[0], reqs[:, 0],
+                                    neighborhood)
+        return jnp.concatenate([found[:, None].astype(jnp.int32), v], axis=1)
+
+    resp, dropped = transport.triggered_chain(
+        chain, payload, dest, n_shards, capacity, axis, val_words + 1)
+    return (resp[:, 0] > 0)[None], resp[None, :, 1:], dropped[None]
+
+
+def _one_sided_get_local(keys, vals, queries, *, n_shards, capacity, axis,
+                         neighborhood, val_words):
+    """FaRM-style: READ the neighborhood metadata, match locally, READ the
+    value — 2 RTTs, and H-fold metadata amplification."""
+    q = queries.reshape(-1)
+    n_buckets = keys.shape[1]
+    dest = shard_of(q, n_shards)
+    home = hopscotch.bucket_of(q, n_buckets)
+
+    # RTT 1: one READ of the H-bucket neighborhood (metadata; this is the
+    # 6x-amplified read FaRM pays — H contiguous buckets per request)
+    remote_window = jnp.stack(
+        [jnp.roll(keys[0], -d) for d in range(neighborhood)], axis=1)
+    window = transport.one_sided_read(remote_window, dest, home, axis,
+                                      n_shards, capacity)      # (B, H)
+    hit = window == q[:, None].astype(window.dtype)
+    found = jnp.any(hit, axis=1)
+    slot = jnp.argmax(hit, axis=1).astype(jnp.int32)
+    row = (home + slot) % n_buckets
+
+    # RTT 2: fetch the value row
+    v = transport.one_sided_read(vals[0], dest, row, axis, n_shards,
+                                 capacity)
+    v = v * found[:, None].astype(v.dtype)
+    return found[None], v[None], jnp.zeros((1,), jnp.int32)
+
+
+def _two_sided_get_local(keys, vals, queries, *, n_shards, capacity, axis,
+                         neighborhood, val_words):
+    """RPC: identical wire pattern to redn, but the lookup is attributed to
+    the host CPU (the benchmarks price the host service + contention)."""
+    return _redn_get_local(keys, vals, queries, n_shards=n_shards,
+                           capacity=capacity, axis=axis,
+                           neighborhood=neighborhood, val_words=val_words)
+
+
+_PATHS = dict(redn=_redn_get_local, one_sided=_one_sided_get_local,
+              two_sided=_two_sided_get_local)
+
+# collective phases per path (the fidelity latency model reads these):
+#   redn: dispatch+combine (1 RTT); one_sided: 2x(dispatch+combine);
+#   two_sided: 1 RTT + host service
+RTTS = dict(redn=1, one_sided=2, two_sided=1)
+HOST_SERVICE = dict(redn=False, one_sided=False, two_sided=True)
+
+
+def sharded_get(mesh: Mesh, axis: str, keys: jnp.ndarray, vals: jnp.ndarray,
+                queries: jnp.ndarray, method: str = "redn",
+                neighborhood: int = 8, capacity: Optional[int] = None):
+    """Batched distributed get. queries: (S, B_local) int32 (dim 0 sharded).
+
+    Returns (found (S,B), values (S,B,V), dropped (S,)).
+    """
+    n_shards = mesh.shape[axis]
+    b_local = queries.shape[1]
+    capacity = capacity or b_local
+    fn = functools.partial(
+        _PATHS[method], n_shards=n_shards, capacity=capacity, axis=axis,
+        neighborhood=neighborhood, val_words=vals.shape[-1])
+    spec = P(axis)
+    mapped = jax.shard_map(
+        fn, mesh=mesh, in_specs=(spec, spec, spec),
+        out_specs=(spec, spec, spec), check_vma=False)
+    return mapped(keys, vals, queries)
+
+
+# ---------------------------------------------------------------------------
+# host-reference oracle
+# ---------------------------------------------------------------------------
+
+def reference_get(kv: ShardedKV, queries: np.ndarray):
+    out = np.zeros((len(queries), kv.val_words), np.int32)
+    found = np.zeros(len(queries), bool)
+    for i, q in enumerate(np.asarray(queries).tolist()):
+        t = kv.tables[int(shard_of(q, kv.n_shards))]
+        f, v = hopscotch.lookup(*t.as_device(),
+                                jnp.asarray([q], jnp.int32),
+                                kv.neighborhood)
+        found[i] = bool(f[0])
+        out[i] = np.asarray(v[0])
+    return found, out

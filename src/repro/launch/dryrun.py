@@ -1,0 +1,304 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and the production meshes need 512 placeholder host devices.  Never
+set this flag globally (conftest/pyproject) — smoke tests and benches see
+1 device.
+
+Per cell this driver:
+  1. builds the production mesh ((16,16) single-pod / (2,16,16) multi-pod),
+  2. resolves sharding rules + NamedShardings for params / optimizer /
+     batch / caches,
+  3. ``jax.jit(step, in_shardings, out_shardings).lower(**abstract)`` and
+     ``.compile()`` — proving the distribution config is coherent,
+  4. records ``memory_analysis()`` (fits?), ``cost_analysis()``
+     (FLOPs/bytes) and the parsed collective bytes for §Roofline,
+  5. writes one JSON per cell under results/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all [--multi-pod]
+  python -m repro.launch.dryrun ... --opt profile=<name>   (hillclimbs)
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import registry
+from ..distributed import sharding as shrules
+from ..distributed import specs as specs_lib
+from ..models import model as model_lib
+from ..train import loop as loop_lib
+from ..train import optimizer as opt_lib
+from . import analysis
+from .mesh import make_production_mesh
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def pick_microbatches(cfg, seq: int, global_batch: int, mesh,
+                      rules, budget_bytes: float = 2e9) -> int:
+    """Smallest power-of-2 microbatch count keeping scan-carry activations
+    under budget (the scan saves one residual stream per layer group)."""
+    batch_axes = rules.get("batch") or ()
+    if isinstance(batch_axes, str):
+        batch_axes = (batch_axes,)
+    dp = int(np.prod([mesh.shape[a] for a in batch_axes])) or 1
+    b_local = max(global_batch // dp, 1)
+    carries = max(cfg.n_groups, 1)
+    u = 1
+    while u < b_local:
+        per = (b_local // u) * seq * cfg.d_model * 2 * carries
+        if per <= budget_bytes:
+            break
+        u *= 2
+    return u
+
+
+def build_cell(arch: str, shape: str, multi_pod: bool,
+               opt_profile: str = "baseline"):
+    """Returns (lowered, lower_args, meta).
+
+    opt_profile: '+'-separated hillclimb levers —
+      wincache  window-bounded rolling KV cache for SWA/local layers
+      donate    donate cache (decode) / params+opt (train) buffers
+      rsgrads   constrain per-ubatch grads to param shardings (AR -> RS)
+      bf16wire  bf16 gradient wire format (f32 accumulation stays)
+      ep        expert-parallel param layout for MoE decode (experts over
+                data axis, no FSDP — route tokens, not weights)
+    """
+    tokens = set(opt_profile.split("+"))
+    cfg = registry.get_config(arch)
+    if "wincache" in tokens:
+        cfg = dataclasses.replace(cfg, window_cache=True)
+    if "tpattn" in tokens:
+        cfg = dataclasses.replace(cfg, attn_gqa="repeat")
+    if "kvquant" in tokens:
+        cfg = dataclasses.replace(cfg, kv_quant=True)
+    if "rematdots" in tokens:
+        cfg = dataclasses.replace(cfg, remat="dots")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+
+    overrides = {}
+    spec_info = registry.SHAPES[shape]
+    if spec_info["batch"] < (mesh.shape.get("pod", 1)
+                             * mesh.shape.get("data", 1)):
+        overrides["batch"] = None        # B=1 long-context: no batch shard
+    if multi_pod:
+        overrides["long_seq"] = ("pod", "data", "model")
+    if "ep" in tokens:
+        overrides["experts"] = "data"
+        overrides["fsdp"] = None
+    if "tpattn" in tokens:
+        # q-heads over the model axis (requires H % |model| == 0;
+        # K/V replicate and repeat locally — standard Megatron attention)
+        overrides["heads"] = "model"
+
+    with shrules.use_mesh(mesh, **overrides) as rules:
+        cell = registry.input_specs(cfg, shape)
+        aparams = model_lib.abstract_params(cfg)
+        p_specs = specs_lib.param_specs(aparams, mesh, rules)
+        p_sh = specs_lib.to_shardings(p_specs, mesh)
+
+        if cell["kind"] == "train":
+            # llama4-maverick: 400B params -> int8 Adam moments, no f32
+            # master (fits the single-pod HBM budget; DESIGN.md §5)
+            quant = cfg.total_params > 1e11
+            ocfg = (opt_lib.AdamWConfig(moments_dtype="int8", master=False)
+                    if quant else opt_lib.AdamWConfig())
+            ub = pick_microbatches(cfg, cell["seq"], cell["global_batch"],
+                                   mesh, rules)
+            for t in tokens:        # 'mbN' forces the microbatch count
+                if t.startswith("mb") and t[2:].isdigit():
+                    ub = int(t[2:])
+            gcon = None
+            if "rsgrads" in tokens:
+                def gcon(g, _sh=p_sh):
+                    return jax.tree_util.tree_map(
+                        jax.lax.with_sharding_constraint, g, _sh)
+            step = loop_lib.make_train_step(
+                cfg, ocfg, microbatches=ub, grad_constraint=gcon,
+                wire_dtype="bfloat16" if "bf16wire" in tokens else None)
+            aopt = opt_lib.abstract_init(aparams, ocfg)
+            o_sh = specs_lib.to_shardings(
+                specs_lib.param_specs(aopt, mesh, rules), mesh)
+            b_specs = specs_lib.batch_specs(cell["batch"], mesh, rules)
+            b_sh = specs_lib.to_shardings(b_specs, mesh)
+            fn = jax.jit(step,
+                         in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, None),
+                         donate_argnums=((0, 1) if "donate" in tokens
+                                         else ()))
+            args = (aparams, aopt, cell["batch"])
+            meta = dict(microbatches=ub, quantized_opt=quant)
+        elif cell["kind"] == "prefill":
+            # vision archs prepend patch tokens: the cache must hold them
+            extra = cfg.frontend_tokens if cfg.frontend == "vision" else 0
+            step = loop_lib.make_prefill_step(cfg,
+                                              s_max=cell["seq"] + extra)
+            b_specs = specs_lib.batch_specs(cell["batch"], mesh, rules)
+            b_sh = specs_lib.to_shardings(b_specs, mesh)
+            fn = jax.jit(step, in_shardings=(p_sh, b_sh))
+            args = (aparams, cell["batch"])
+            meta = {}
+        else:  # decode
+            step = loop_lib.make_serve_step(cfg)
+            long_ctx = cell["seq"] >= (1 << 19)
+            c_specs = specs_lib.cache_specs(cell["caches"], mesh, rules,
+                                            long_context=long_ctx)
+            c_sh = specs_lib.to_shardings(c_specs, mesh)
+            b_axes = rules.get("batch")
+            tok_sh = NamedSharding(mesh, P(b_axes) if b_axes else P())
+            donate = (2,) if "donate" in tokens else ()
+            # (window_cache already shrank cell["caches"]: input_specs saw
+            #  the modified cfg)
+            if cfg.is_encdec:
+                fn = jax.jit(
+                    step, in_shardings=(p_sh, tok_sh, c_sh, tok_sh, tok_sh),
+                    out_shardings=(None, c_sh), donate_argnums=donate)
+                args = (aparams, cell["token"], cell["caches"],
+                        cell["lengths"], cell["enc_lengths"])
+            else:
+                fn = jax.jit(step,
+                             in_shardings=(p_sh, tok_sh, c_sh, tok_sh),
+                             out_shardings=(None, c_sh),
+                             donate_argnums=donate)
+                args = (aparams, cell["token"], cell["caches"],
+                        cell["lengths"])
+            meta = dict(long_context=long_ctx)
+
+        meta.update(chips=chips, kind=cell["kind"], seq=cell["seq"],
+                    global_batch=cell["global_batch"],
+                    opt_profile=opt_profile)
+        # lower INSIDE the use_mesh context: the model's logical sharding
+        # constraints resolve at trace time
+        lowered = fn.lower(*args)
+        return lowered, args, meta, cfg
+
+
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             opt_profile: str = "baseline") -> dict:
+    t0 = time.time()
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = dict(arch=arch, shape=shape, mesh=mesh_name, status="ok",
+               opt_profile=opt_profile)
+    ok, why = registry.shape_supported(arch, shape)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    try:
+        lowered, args, meta, cfg = build_cell(arch, shape, multi_pod,
+                                              opt_profile)
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+
+        mem = compiled.memory_analysis()
+        mem_rec = {}
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                mem_rec[attr] = int(v)
+        cost = compiled.cost_analysis() or {}
+        flops = float(cost.get("flops", 0.0))
+        bytes_acc = float(cost.get("bytes accessed", 0.0))
+
+        hlo = compiled.as_text()
+        coll = analysis.parse_collectives(hlo)
+
+        kind = meta["kind"]
+        chips = meta["chips"]
+        mf = analysis.model_flops(cfg, kind, meta["seq"],
+                                  meta["global_batch"])
+        # analytic HBM floor (cost_analysis counts scan bodies once)
+        tree_bytes = lambda t: float(sum(
+            np.prod(l.shape) * jnp.dtype(l.dtype).itemsize
+            for l in jax.tree_util.tree_leaves(t)))
+        params_bytes = tree_bytes(args[0])
+        opt_bytes = tree_bytes(args[1]) if kind == "train" else 0.0
+        cache_bytes = (tree_bytes(args[2])
+                       if kind == "decode" else 0.0)
+        mb = analysis.model_bytes(cfg, kind, meta["seq"],
+                                  meta["global_batch"],
+                                  params_bytes=params_bytes,
+                                  opt_bytes=opt_bytes,
+                                  cache_bytes=cache_bytes)
+        flops_used = max(flops, mf)
+        bytes_used = max(bytes_acc, mb)
+        terms = analysis.roofline_terms(flops_used, bytes_used,
+                                        coll.total_bytes, chips)
+
+        rec.update(
+            meta=meta, memory=mem_rec,
+            flops_raw=flops, flops_used=flops_used, model_flops=mf,
+            useful_fraction=mf / flops_used if flops_used else 0.0,
+            bytes_raw=bytes_acc, bytes_used=bytes_used,
+            model_bytes=mb, params_bytes=params_bytes,
+            opt_bytes=opt_bytes, cache_bytes=cache_bytes,
+            collective_bytes=coll.total_bytes,
+            collective_breakdown=coll.bytes_by_kind,
+            collective_counts=coll.count_by_kind,
+            roofline=terms,
+            lower_s=round(t_lower - t0, 2),
+            compile_s=round(t_compile - t_lower, 2),
+        )
+    except Exception as e:  # a failing cell is a bug: record it loudly
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    rec["wall_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--opt", default="baseline",
+                    help="optimization profile (hillclimb id)")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    archs = registry.ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(registry.SHAPES) if args.shape == "all" else [args.shape]
+    os.makedirs(args.out, exist_ok=True)
+
+    for arch in archs:
+        for shape in shapes:
+            rec = run_cell(arch, shape, args.multi_pod, args.opt)
+            mesh_name = rec["mesh"]
+            fname = f"{arch}__{shape}__{mesh_name}__{args.opt}.json"
+            with open(os.path.join(args.out, fname), "w") as f:
+                json.dump(rec, f, indent=1)
+            r = rec.get("roofline", {})
+            print(f"[{rec['status']:7s}] {arch:28s} {shape:12s} "
+                  f"{mesh_name:10s} "
+                  f"C={r.get('compute_s', 0):.2e}s "
+                  f"M={r.get('memory_s', 0):.2e}s "
+                  f"X={r.get('collective_s', 0):.2e}s "
+                  f"dom={r.get('bottleneck', '-'):10s} "
+                  f"compile={rec.get('compile_s', 0)}s",
+                  flush=True)
+            if rec["status"] == "error":
+                print(rec["error"], flush=True)
+
+
+if __name__ == "__main__":
+    main()

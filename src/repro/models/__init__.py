@@ -1,0 +1,3 @@
+"""Composable LM zoo: one config-driven transformer family covering the 10
+assigned architectures (dense GQA, MoE, local/global, enc-dec, VLM/audio
+stubs, RWKV6, RG-LRU hybrid)."""

@@ -1,0 +1,205 @@
+"""Attention block: GQA/MQA/MHA, RoPE (full/partial/none), qk-norm,
+causal/sliding-window/bidirectional, cross-attention, KV cache decode.
+
+Cache layout: {'k','v'}: (B, KH, S_max, hd) — sequence-sharded over the
+model axis ('kv_seq'), which is uniform across all GQA widths (even kv=1)
+and is exactly the distributed-KV-store shape the paper's technique maps
+onto (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard
+from ..kernels.decode_attention import ops as dec_ops
+from ..kernels.flash_attention import ops as fa_ops
+from . import layers
+
+
+def _quantize_kv(x):
+    """int8 per-(b, h, position) symmetric quantization (KIVI-style)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def init_attention(key, cfg, cross: bool = False):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": layers.init_dense(k1, cfg.d_model, cfg.attn_dim, cfg),
+        "wk": layers.init_dense(k2, cfg.d_model, cfg.kv_dim, cfg),
+        "wv": layers.init_dense(k3, cfg.d_model, cfg.kv_dim, cfg),
+        "wo": layers.init_dense(k4, cfg.attn_dim, cfg.d_model, cfg,
+                                scale=cfg.attn_dim ** -0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((cfg.head_dim,), jnp.float32)
+        p["k_norm"] = jnp.zeros((cfg.head_dim,), jnp.float32)
+    return p
+
+
+def _project(p, x, cfg):
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = (x @ p["wk"]).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = (x @ p["wv"]).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = layers.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def apply_attention(p, x, cfg, kind: str, *,
+                    positions: Optional[jnp.ndarray] = None,
+                    mode: str = "causal",
+                    return_cache: bool = False,
+                    s_max: Optional[int] = None):
+    """Train/prefill path. x: (B, S, D). kind: global|local|nope."""
+    b, s, _ = x.shape
+    q, k, v = _project(p, x, cfg)
+    if kind != "nope" and mode != "cross":
+        pos = positions if positions is not None else jnp.arange(s)
+        sin, cos = layers.make_rope(pos, cfg.head_dim, cfg.rope_theta,
+                                    cfg.rope_fraction)
+        q = layers.apply_rope(q, sin, cos, cfg.rope_fraction)
+        k = layers.apply_rope(k, sin, cos, cfg.rope_fraction)
+
+    qh = shard(jnp.swapaxes(q, 1, 2), "batch", "heads", None, None)
+    kh = shard(jnp.swapaxes(k, 1, 2), "batch", "kv_heads", None, None)
+    vh = shard(jnp.swapaxes(v, 1, 2), "batch", "kv_heads", None, None)
+
+    window = cfg.window if kind == "local" else 0
+    attn_mode = "causal" if mode == "causal" else "full"
+    o = fa_ops.flash_attention(qh, kh, vh, mode=attn_mode, window=window,
+                               impl=cfg.attn_impl, gqa=cfg.attn_gqa)
+    o = jnp.swapaxes(o, 1, 2).reshape(b, s, cfg.attn_dim)
+    out = o @ p["wo"]
+    if not return_cache:
+        return out, None
+
+    def finalize(ck, cv, seq_axis):
+        ck = shard(ck, "batch", "kv_heads", seq_axis, None)
+        cv = shard(cv, "batch", "kv_heads", seq_axis, None)
+        if not cfg.kv_quant:
+            return {"k": ck, "v": cv}
+        kq, ks = _quantize_kv(ck)
+        vq, vs = _quantize_kv(cv)
+        return {"k": shard(kq, "batch", "kv_heads", seq_axis, None),
+                "ks": shard(ks, "batch", "kv_heads", seq_axis, None),
+                "v": shard(vq, "batch", "kv_heads", seq_axis, None),
+                "vs": shard(vs, "batch", "kv_heads", seq_axis, None)}
+
+    sm = s_max or s
+    rolling = (cfg.window_cache and kind == "local" and cfg.window > 0
+               and cfg.window < sm)
+    if rolling:
+        # rolling cache: only the last `window` positions are live; slot
+        # for position p is p % window (RoPE is already applied to k, so
+        # cached entries are position-independent)
+        w_sz = cfg.window
+        take = min(s, w_sz)
+        tail_k = kh[:, :, s - take:]
+        tail_v = vh[:, :, s - take:]
+        slots = (jnp.arange(s - take, s)) % w_sz
+        cache_k = jnp.zeros((b, cfg.num_kv_heads, w_sz, cfg.head_dim),
+                            kh.dtype).at[:, :, slots].set(tail_k)
+        cache_v = jnp.zeros((b, cfg.num_kv_heads, w_sz, cfg.head_dim),
+                            vh.dtype).at[:, :, slots].set(tail_v)
+        return out, finalize(cache_k, cache_v, None)
+    cache_k = jnp.zeros((b, cfg.num_kv_heads, sm, cfg.head_dim), kh.dtype)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, kh, (0, 0, 0, 0))
+    cache_v = jnp.zeros((b, cfg.num_kv_heads, sm, cfg.head_dim), vh.dtype)
+    cache_v = jax.lax.dynamic_update_slice(cache_v, vh, (0, 0, 0, 0))
+    seq_axis = "long_seq" if sm >= (1 << 19) else "kv_seq"
+    return out, finalize(cache_k, cache_v, seq_axis)
+
+
+def apply_attention_decode(p, x, cfg, kind: str, cache: Dict, *,
+                           lengths: jnp.ndarray,
+                           cross: bool = False):
+    """One-token decode. x: (B, 1, D); cache k/v: (B, KH, S_max, hd);
+    lengths: (B,) valid entries INCLUDING the new token (for self-attn).
+
+    The cache is sequence-sharded; the attention below is the distributed
+    KV *get*: GSPMD turns the softmax over the sharded sequence into
+    partial reductions + a combine — the baseline the flash-decode
+    hillclimb improves on.
+    """
+    b = x.shape[0]
+    q, k, v = _project(p, x, cfg)
+    rolling = (not cross and cfg.window_cache and kind == "local"
+               and cfg.window > 0 and cache["k"].shape[2] == cfg.window)
+    if not cross:
+        if kind != "nope":
+            pos = (lengths - 1)[:, None]
+            sin, cos = layers.make_rope(pos, cfg.head_dim, cfg.rope_theta,
+                                        cfg.rope_fraction)
+            q = layers.apply_rope(q, sin, cos, cfg.rope_fraction)
+            k = layers.apply_rope(k, sin, cos, cfg.rope_fraction)
+        # write the new token's k/v at position lengths-1 (or its rolling
+        # slot (lengths-1) % window for window-bounded caches)
+        kh = jnp.swapaxes(k, 1, 2)           # (B, KH, 1, hd)
+        vh = jnp.swapaxes(v, 1, 2)
+        idx = (lengths - 1)[:, None, None, None]
+        if rolling:
+            idx = idx % cfg.window
+        kpos = jnp.arange(cache["k"].shape[2])[None, None, :, None]
+        upd = kpos == idx
+        if "ks" in cache:        # int8 cache: quantize the new entry
+            kq, ksc = _quantize_kv(kh)
+            vq, vsc = _quantize_kv(vh)
+            cache = {
+                "k": jnp.where(upd, kq, cache["k"]),
+                "ks": jnp.where(upd, ksc, cache["ks"]),
+                "v": jnp.where(upd, vq, cache["v"]),
+                "vs": jnp.where(upd, vsc, cache["vs"]),
+            }
+        else:
+            cache = {
+                "k": jnp.where(upd, kh,
+                               cache["k"]).astype(cache["k"].dtype),
+                "v": jnp.where(upd, vh,
+                               cache["v"]).astype(cache["v"].dtype),
+            }
+
+    qh = jnp.swapaxes(q, 1, 2)               # (B, H, 1, hd)
+    if "ks" in cache:            # dequantize for the attention compute
+        ck = _dequantize_kv(cache["k"], cache["ks"], qh.dtype)
+        cv = _dequantize_kv(cache["v"], cache["vs"], qh.dtype)
+    else:
+        ck, cv = cache["k"], cache["v"]
+    if rolling:
+        # every live slot is within the window; attention is permutation-
+        # invariant over slots (RoPE pre-applied), so plain length masking
+        # over min(length, window) entries is exact
+        lengths_eff = jnp.minimum(lengths, cfg.window)
+        o = dec_ops.decode_attention(qh, ck, cv, lengths_eff, window=0,
+                                     impl="ref")
+    else:
+        window = cfg.window if kind == "local" else 0
+        o = dec_ops.decode_attention(qh, ck, cv, lengths, window=window,
+                                     impl="ref")
+    o = jnp.swapaxes(o, 1, 2).reshape(b, 1, cfg.attn_dim)
+    return (o @ p["wo"]).astype(x.dtype), cache
+
+
+def init_cross_cache(p, encoder_out, cfg):
+    """Precompute cross-attention K/V from the encoder output."""
+    b, s, _ = encoder_out.shape
+    k = (encoder_out @ p["wk"]).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = (encoder_out @ p["wv"]).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        k = layers.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return {"k": shard(jnp.swapaxes(k, 1, 2), "batch", "kv_heads", "kv_seq",
+                       None),
+            "v": shard(jnp.swapaxes(v, 1, 2), "batch", "kv_heads", "kv_seq",
+                       None)}

@@ -1,0 +1,83 @@
+"""Griffin / RecurrentGemma recurrent block: gated branch + causal conv1d
+(width 4) + RG-LRU, interleaved with local attention in the stack."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard
+from ..kernels.rglru import ops as rg_ops
+from . import layers
+
+_CONV_WIDTH = 4
+_LRU_C = 8.0
+
+
+def init_recurrent(key, cfg):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 7)
+    dt = layers._dtype(cfg)
+    # lambda init so that a = exp(-c softplus(L) sigmoid(r)) is in ~(.9,.99)
+    # (Griffin's init regime; it also bounds the 2-pass scan's 1/cumprod
+    # dynamic range: chunk * |log a| stays well inside f32)
+    lam = jax.random.uniform(ks[0], (w,), jnp.float32, -6.0, -4.0)
+    return {
+        "w_x": layers.init_dense(ks[1], d, w, cfg),
+        "w_gate": layers.init_dense(ks[2], d, w, cfg),
+        "conv": (jax.random.normal(ks[3], (_CONV_WIDTH, w), jnp.float32)
+                 * 0.1).astype(dt),
+        "lam": lam,
+        "w_i": layers.init_dense(ks[4], w, w, cfg, scale=0.02),
+        "w_r": layers.init_dense(ks[5], w, w, cfg, scale=0.02),
+        "w_out": layers.init_dense(ks[6], w, d, cfg, scale=w ** -0.5),
+    }
+
+
+def _causal_conv(x, conv, state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv1d (width 4). x: (B,T,W); state: (B,3,W)."""
+    if state is None:
+        state = jnp.zeros((x.shape[0], _CONV_WIDTH - 1, x.shape[2]),
+                          x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * conv[i][None, None, :]
+              for i in range(_CONV_WIDTH))
+    return out, xp[:, -(_CONV_WIDTH - 1):]
+
+
+def _gates(p, xc):
+    i = jax.nn.sigmoid(xc @ p["w_i"])
+    r = jax.nn.sigmoid(xc @ p["w_r"])
+    log_a = -_LRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) \
+        * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    u = (mult * i.astype(jnp.float32) * xc.astype(jnp.float32))
+    return a, u
+
+
+def apply_recurrent(p, x, cfg, conv_state=None, h_state=None):
+    """x: (B,T,D) -> (out, (conv_state, h_state))."""
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    xb = x @ p["w_x"]
+    xb = shard(xb, "batch", None, "ff")
+    xc, new_conv = _causal_conv(xb, p["conv"], conv_state)
+    a, u = _gates(p, xc)
+    h, hT = rg_ops.rglru(a.astype(jnp.float32), u,
+                         impl=cfg.attn_impl or "chunked")
+    out = (gate * h.astype(gate.dtype)) @ p["w_out"]
+    return out, (new_conv, hT)
+
+
+def apply_recurrent_decode(p, x, cfg, conv_state, h_state):
+    """x: (B,1,D); conv_state: (B,3,W); h_state: (B,W)."""
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    xb = x @ p["w_x"]
+    xc, new_conv = _causal_conv(xb, p["conv"], conv_state)
+    a, u = _gates(p, xc)
+    h, new_h = rg_ops.rglru_decode_step(a[:, 0].astype(jnp.float32),
+                                        u[:, 0], h_state)
+    out = (gate * h[:, None].astype(gate.dtype)) @ p["w_out"]
+    return out.astype(x.dtype), (new_conv, new_h)

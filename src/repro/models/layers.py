@@ -1,0 +1,129 @@
+"""Shared layers: norms, rotary embeddings, dense FFN, projections, loss.
+
+All parameters are plain dicts of jnp arrays; initializers return
+(params, apply) in a functional style.  Sharding is expressed with logical
+axes via ``distributed.sharding.shard``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.sharding import shard
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def init_dense(key, d_in: int, d_out: int, cfg, scale: Optional[float] = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+    return w.astype(_dtype(cfg))
+
+
+def rms_norm(x, gamma, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def make_rope(positions, head_dim: int, theta: float,
+              fraction: float = 1.0):
+    """Returns (sin, cos) of shape (..., rot_dim//2) for given positions."""
+    rot = int(head_dim * fraction) // 2 * 2
+    freqs = 1.0 / (theta ** (np.arange(0, rot, 2, dtype=np.float32) / rot))
+    ang = positions[..., None].astype(jnp.float32) * freqs[None, :]
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos, fraction: float = 1.0):
+    """x: (B, S, H, D); sin/cos: (B?, S, rot//2) or (S, rot//2)."""
+    d = x.shape[-1]
+    rot = int(d * fraction) // 2 * 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    # sin/cos: (S, r) or (B, S, r) -> broadcast to (B?, S, 1, r): insert the
+    # head axis, and a leading batch axis if positions were unbatched
+    sin, cos = sin[..., None, :], cos[..., None, :]
+    if sin.ndim < x1.ndim:
+        sin, cos = sin[None], cos[None]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([out, xp], axis=-1).astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+# --- gated FFN (SwiGLU / GeGLU) ---------------------------------------------
+
+def init_ffn(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": init_dense(k1, cfg.d_model, cfg.d_ff, cfg),
+        "w_up": init_dense(k2, cfg.d_model, cfg.d_ff, cfg),
+        "w_down": init_dense(k3, cfg.d_ff, cfg.d_model, cfg,
+                             scale=cfg.d_ff ** -0.5),
+    }
+
+
+def apply_ffn(p, x, cfg):
+    h = act_fn(cfg.act)(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = shard(h, "batch", None, "ff")
+    return h @ p["w_down"]
+
+
+# --- embedding / logits / loss ------------------------------------------------
+
+def init_embed(key, cfg):
+    v = cfg.padded_vocab
+    k1, k2 = jax.random.split(key)
+    p = {"embedding": (jax.random.normal(k1, (v, cfg.d_model), jnp.float32)
+                       * 0.02).astype(_dtype(cfg))}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = init_dense(k2, cfg.d_model, v, cfg)
+    return p
+
+
+def embed_tokens(p, tokens, cfg):
+    x = jnp.take(p["embedding"], tokens, axis=0)
+    if cfg.name.startswith("gemma") or cfg.name.startswith("recurrent"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)   # gemma scaling
+    return shard(x, "batch", "seq", None)
+
+
+def logits_fn(p, x, cfg):
+    w = p["lm_head"] if "lm_head" in p else p["embedding"].T
+    logits = (x @ w).astype(jnp.float32)
+    if cfg.logits_softcap > 0:
+        c = cfg.logits_softcap
+        logits = jnp.tanh(logits / c) * c
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Vocab-shardable CE.
+
+    The label logit is extracted with a one-hot reduction over the vocab
+    axis (which XLA fuses and GSPMD turns into a local reduce + psum over
+    the model axis); ``take_along_axis`` on the sharded vocab dim would
+    force a batch all-gather instead.
+    """
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    v = logits.shape[-1]
+    onehot = (labels[..., None] ==
+              jnp.arange(v, dtype=labels.dtype)).astype(logits.dtype)
+    lab = jnp.sum(logits * onehot, axis=-1)
+    nll = shard(lse - lab, "batch", "seq")
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,131 @@
+"""Top-level model: init / abstract init, loss, prefill, decode.
+
+Handles the modality frontends (STUBS per the assignment: ``patches`` /
+``frames`` arrive as precomputed embeddings), the optional encoder
+(seamless), and exposes exactly the three entry points the launch layer
+lowers: ``loss_fn`` (train_4k), ``prefill`` (prefill_32k), ``decode_step``
+(decode_32k / long_500k).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard
+from . import layers, transformer
+from .config import ModelConfig
+
+
+def init_params(key, cfg: ModelConfig) -> Dict:
+    ks = jax.random.split(key, 5)
+    p = {"embed": layers.init_embed(ks[0], cfg),
+         "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+         "decoder": transformer.init_stack(
+             ks[1], cfg, cfg.layer_pattern, cfg.num_layers,
+             cross=cfg.cross_attention)}
+    if cfg.is_encdec:
+        p["encoder"] = transformer.init_stack(
+            ks[2], cfg, ("global",), cfg.num_encoder_layers)
+        p["enc_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    if cfg.frontend != "none":
+        p["frontend_proj"] = layers.init_dense(
+            ks[3], cfg.frontend_dim, cfg.d_model, cfg)
+    return p
+
+
+def abstract_params(cfg: ModelConfig):
+    """Parameter tree as ShapeDtypeStructs — no allocation (dry-run)."""
+    return jax.eval_shape(
+        lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# forward paths
+# ---------------------------------------------------------------------------
+
+def _encode(params, batch, cfg):
+    frames = batch["frames"]                     # (B, T_src, frontend_dim)
+    x = frames.astype(params["frontend_proj"].dtype) @ params["frontend_proj"]
+    x = shard(x, "batch", "seq", None)
+    x, _, _ = transformer.apply_stack(params["encoder"], x, cfg,
+                                      ("global",), mode="full")
+    return layers.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _embed_inputs(params, batch, cfg):
+    x = layers.embed_tokens(params["embed"], batch["tokens"], cfg)
+    if cfg.frontend == "vision" and "patches" in batch:
+        pe = batch["patches"].astype(x.dtype) @ params["frontend_proj"]
+        x = jnp.concatenate([pe, x], axis=1)
+    return x
+
+
+def forward(params, batch, cfg: ModelConfig, *, return_cache: bool = False,
+            s_max: Optional[int] = None):
+    """Full forward. Returns (logits, caches, aux)."""
+    enc_out = _encode(params, batch, cfg) if cfg.is_encdec else None
+    x = _embed_inputs(params, batch, cfg)
+    x, caches, aux = transformer.apply_stack(
+        params["decoder"], x, cfg, cfg.layer_pattern, mode="causal",
+        enc_out=enc_out, return_cache=return_cache, s_max=s_max)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = layers.logits_fn(params["embed"], x, cfg)
+    return logits, caches, aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    """Next-token CE (+ MoE aux). Frontend positions are masked out."""
+    logits, _, aux = forward(params, batch, cfg)
+    labels = batch["targets"]
+    mask = batch.get("loss_mask")
+    n_front = logits.shape[1] - labels.shape[1]
+    if n_front > 0:
+        logits = logits[:, n_front:]
+    loss = layers.cross_entropy(logits, labels, mask)
+    return loss + 0.01 * aux, {"ce": loss, "aux": aux}
+
+
+def prefill(params, batch, cfg: ModelConfig, s_max: int):
+    """Prompt pass: returns (last_logits, caches, lengths).
+
+    ``lengths`` counts every cached position — including prepended
+    frontend (patch) tokens."""
+    logits, caches, _ = forward(params, batch, cfg, return_cache=True,
+                                s_max=s_max)
+    lengths = batch.get("lengths")
+    if lengths is None:
+        lengths = jnp.full((batch["tokens"].shape[0],),
+                           logits.shape[1], jnp.int32)
+    return logits[:, -1], caches, lengths
+
+
+def decode_step(params, token, caches, lengths, cfg: ModelConfig,
+                enc_lengths: Optional[jnp.ndarray] = None):
+    """One decode step. token: (B,) int32; lengths include this token.
+    Returns (logits (B, V), new_caches)."""
+    x = layers.embed_tokens(params["embed"], token[:, None], cfg)
+    x, new_caches = transformer.apply_stack_decode(
+        params["decoder"], x, cfg, cfg.layer_pattern, caches,
+        lengths=lengths, enc_lengths=enc_lengths)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = layers.logits_fn(params["embed"], x, cfg)
+    return logits[:, 0], new_caches
+
+
+def abstract_cache(cfg: ModelConfig, batch_size: int, s_max: int,
+                   src_len: Optional[int] = None):
+    """Cache tree as ShapeDtypeStructs for the decode dry-run."""
+    params = abstract_params(cfg)
+    batch = {"tokens": jax.ShapeDtypeStruct((batch_size, 1), jnp.int32)}
+    if cfg.is_encdec:
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (batch_size, src_len or s_max, cfg.frontend_dim), jnp.float32)
+
+    def fn(p, b):
+        _, caches, _ = forward(p, b, cfg, return_cache=True, s_max=s_max)
+        return caches
+
+    return jax.eval_shape(fn, params, batch)

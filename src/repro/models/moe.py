@@ -1,0 +1,90 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-based capacity dispatch.
+
+Dispatch is the MoE analogue of the paper's request routing: tokens are
+"requests", experts are "owner shards".  The baseline computes experts
+tensor-parallel (d_ff over the model axis, experts unsharded); expert
+parallelism with all_to_all is a recorded hillclimb lever.
+
+Sort-based dispatch (O(T log T), no (T, E, C) one-hot blowup):
+  flat (token, expert, gate) triples -> sort by expert -> position within
+  the expert's segment -> scatter into (E, C, D) buffers (overflow drops,
+  like WQ-depth back-pressure) -> batched expert GEMMs -> combine-scatter.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard
+from . import layers
+
+
+def init_moe(key, cfg):
+    ks = jax.random.split(key, 5)
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    p = {
+        "router": layers.init_dense(ks[0], d, e, cfg, scale=0.02),
+        "w_gate": (jax.random.normal(ks[1], (e, d, f), jnp.float32)
+                   * d ** -0.5).astype(layers._dtype(cfg)),
+        "w_up": (jax.random.normal(ks[2], (e, d, f), jnp.float32)
+                 * d ** -0.5).astype(layers._dtype(cfg)),
+        "w_down": (jax.random.normal(ks[3], (e, f, d), jnp.float32)
+                   * f ** -0.5).astype(layers._dtype(cfg)),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = layers.init_ffn(ks[4], cfg)
+    return p
+
+
+def apply_moe(p, x, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (y, aux_loss)."""
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.experts_per_token
+    e = cfg.num_experts
+    xf = x.reshape(t, d)
+
+    logits = (xf @ p["router"]).astype(jnp.float32)          # (T, E)
+    gates_all = jax.nn.softmax(logits, axis=-1)
+    gate_k, idx_k = jax.lax.top_k(gates_all, k)              # (T, k)
+    gate_k = gate_k / jnp.maximum(jnp.sum(gate_k, -1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch/GShard form)
+    me = jnp.mean(gates_all, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(idx_k[:, 0], e), axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    capacity = max(int(t * k / e * cfg.capacity_factor), 8)
+
+    flat_e = idx_k.reshape(-1)                               # (T*k,)
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+    flat_gate = gate_k.reshape(-1)
+
+    order = jnp.argsort(flat_e)
+    e_sorted = flat_e[order]
+    tok_sorted = flat_tok[order]
+    gate_sorted = flat_gate[order]
+    seg_start = jnp.searchsorted(e_sorted, jnp.arange(e))
+    pos = jnp.arange(t * k) - seg_start[e_sorted]
+    ok = pos < capacity
+    slot = jnp.where(ok, pos, capacity)                      # OOB -> dropped
+
+    buf = jnp.zeros((e, capacity, d), x.dtype)
+    buf = buf.at[e_sorted, slot].set(xf[tok_sorted], mode="drop")
+    buf = shard(buf, "experts", None, None)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    h = shard(h, "experts", None, "ff")
+    out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])         # (E, C, D)
+
+    gathered = out[e_sorted, jnp.minimum(slot, capacity - 1)]
+    gathered = gathered * (gate_sorted * ok)[:, None].astype(gathered.dtype)
+    y = jnp.zeros((t, d), x.dtype).at[tok_sorted].add(gathered)
+    y = y.reshape(b, s, d)
+
+    if cfg.num_shared_experts:
+        y = y + layers.apply_ffn(p["shared"], x, cfg)
+    return y, aux

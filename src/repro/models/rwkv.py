@@ -1,0 +1,119 @@
+"""RWKV6 (Finch) block: time-mix with data-dependent decay + channel-mix.
+
+The WKV recurrence runs through the kernels.rwkv6 chunked kernel (TPU) or
+its pure-JAX twin (CPU/dry-run).  Decode carries {'state', 'x_prev_tm',
+'x_prev_cm'} — the O(1) "KV cache" of an attention-free arch.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard
+from ..kernels.rwkv6 import ops as wkv_ops
+from . import layers
+
+_DECAY_LORA = 64
+
+
+def init_rwkv(key, cfg):
+    d = cfg.d_model
+    n = cfg.rwkv_head_dim
+    h = d // n
+    ks = jax.random.split(key, 12)
+    dt = layers._dtype(cfg)
+    p = {
+        # token-shift mixing coefficients (r, k, v, w, g)
+        "mu": (jax.random.uniform(ks[0], (5, d)) * 0.5 + 0.25).astype(dt),
+        "wr": layers.init_dense(ks[1], d, d, cfg),
+        "wk": layers.init_dense(ks[2], d, d, cfg),
+        "wv": layers.init_dense(ks[3], d, d, cfg),
+        "wg": layers.init_dense(ks[4], d, d, cfg),
+        "wo": layers.init_dense(ks[5], d, d, cfg),
+        # data-dependent decay: w = exp(-exp(w0 + tanh(x A) B))
+        "w0": (jax.random.normal(ks[6], (d,)) * 0.5 - 0.5).astype(
+            jnp.float32),
+        "wA": layers.init_dense(ks[7], d, _DECAY_LORA, cfg),
+        "wB": (jax.random.normal(ks[8], (_DECAY_LORA, d), jnp.float32)
+               * 0.01).astype(dt),
+        "u": (jax.random.normal(ks[9], (h, n)) * 0.3).astype(jnp.float32),
+        "ln_x": jnp.zeros((d,), jnp.float32),      # per-head group norm
+        # channel-mix
+        "mu_cm": (jax.random.uniform(ks[10], (2, d)) * 0.5 + 0.25).astype(dt),
+        "ck": layers.init_dense(ks[11], d, cfg.d_ff, cfg),
+        "cv": layers.init_dense(jax.random.fold_in(key, 99), cfg.d_ff, d,
+                                cfg, scale=cfg.d_ff ** -0.5),
+        "cr": layers.init_dense(jax.random.fold_in(key, 98), d, d, cfg),
+    }
+    return p
+
+
+def _shift(x, x_prev: Optional[jnp.ndarray]):
+    """Token shift: x_{t-1} (zeros / carried state at t=0)."""
+    if x_prev is None:
+        x_prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+
+
+def _decay(p, xw):
+    return jnp.exp(-jnp.exp(
+        p["w0"].astype(jnp.float32)
+        + (jnp.tanh(xw @ p["wA"]) @ p["wB"]).astype(jnp.float32)))
+
+
+def _mix(x, xx, mu):
+    return x * mu + xx * (1 - mu)
+
+
+def time_mix(p, x, cfg, state=None, x_prev=None):
+    """x: (B,T,D). Returns (out, (new_state, new_x_prev))."""
+    b, t, d = x.shape
+    n = cfg.rwkv_head_dim
+    h = d // n
+    xx = _shift(x, x_prev)
+    mu = p["mu"]
+    xr, xk, xv, xw, xg = (_mix(x, xx, mu[i]) for i in range(5))
+
+    r = (xr @ p["wr"]).reshape(b, t, h, n).swapaxes(1, 2)
+    k = (xk @ p["wk"]).reshape(b, t, h, n).swapaxes(1, 2)
+    v = (xv @ p["wv"]).reshape(b, t, h, n).swapaxes(1, 2)
+    w = _decay(p, xw).reshape(b, t, h, n).swapaxes(1, 2)
+    g = jax.nn.silu(xg @ p["wg"])
+
+    r, k, v, w = (shard(z, "batch", "heads", None, None)
+                  for z in (r, k, v, w))
+    o, new_state = wkv_ops.wkv6(r, k, v, w, p["u"],
+                                impl=cfg.attn_impl or "chunked")
+    o = o.swapaxes(1, 2).reshape(b, t, d)
+    o = layers.rms_norm(o, p["ln_x"], cfg.norm_eps) * g
+    return o @ p["wo"], (new_state, x[:, -1:])
+
+
+def time_mix_decode(p, x, cfg, state, x_prev):
+    """x: (B,1,D); state: (B,H,N,N); x_prev: (B,1,D)."""
+    b, _, d = x.shape
+    n = cfg.rwkv_head_dim
+    h = d // n
+    mu = p["mu"]
+    xr, xk, xv, xw, xg = (_mix(x, x_prev, mu[i]) for i in range(5))
+    r = (xr @ p["wr"]).reshape(b, h, n)
+    k = (xk @ p["wk"]).reshape(b, h, n)
+    v = (xv @ p["wv"]).reshape(b, h, n)
+    w = _decay(p, xw).reshape(b, h, n)
+    g = jax.nn.silu(xg @ p["wg"])
+    o, new_state = wkv_ops.wkv6_decode_step(r, k, v, w, p["u"], state)
+    o = o.reshape(b, 1, d)
+    o = layers.rms_norm(o, p["ln_x"], cfg.norm_eps) * g
+    return (o @ p["wo"]).astype(x.dtype), (new_state, x)
+
+
+def channel_mix(p, x, cfg, x_prev=None, decode: bool = False):
+    xx = x_prev if decode else _shift(x, x_prev)
+    xk = _mix(x, xx, p["mu_cm"][0])
+    xr = _mix(x, xx, p["mu_cm"][1])
+    kk = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    kk = shard(kk, "batch", None, "ff")
+    out = jax.nn.sigmoid(xr @ p["cr"]) * (kk @ p["cv"])
+    return out, x[:, -1:]

@@ -1,0 +1,240 @@
+"""Block dispatcher + the scanned layer stack.
+
+Layers are stacked by *pattern group* (cfg.layer_pattern repeated): params
+of position p across all groups are stacked along a leading group axis and
+the stack runs under ``lax.scan`` — one pattern group of HLO regardless of
+depth (fast 512-device compiles, explicit remat point); the remainder
+(num_layers % pattern_len) unrolls.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard
+from . import attention, griffin, layers, moe, rwkv
+
+ATTN_KINDS = ("global", "local", "nope")
+
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg, kind: str, cross: bool = False) -> Dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: Dict = {"norm1": jnp.zeros((d,), jnp.float32),
+               "norm2": jnp.zeros((d,), jnp.float32)}
+    if kind in ATTN_KINDS:
+        p["attn"] = attention.init_attention(ks[0], cfg)
+    elif kind == "rwkv":
+        p["mix"] = rwkv.init_rwkv(ks[0], cfg)
+    elif kind == "recurrent":
+        p["rec"] = griffin.init_recurrent(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["norm_cross"] = jnp.zeros((d,), jnp.float32)
+        p["cross"] = attention.init_attention(ks[1], cfg)
+    if kind != "rwkv":
+        if cfg.is_moe:
+            p["moe"] = moe.init_moe(ks[2], cfg)
+        else:
+            p["ffn"] = layers.init_ffn(ks[2], cfg)
+    return p
+
+
+def apply_block(p, x, cfg, kind: str, *, mode: str = "causal",
+                enc_out=None, return_cache: bool = False,
+                s_max: Optional[int] = None):
+    """Returns (x, cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache: Dict = {}
+    h = layers.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if kind in ATTN_KINDS:
+        o, kv = attention.apply_attention(
+            p["attn"], h, cfg, kind, mode=mode, return_cache=return_cache,
+            s_max=s_max)
+        x = x + o
+        if return_cache:
+            cache.update(kv)
+    elif kind == "rwkv":
+        o, (state, xtm) = rwkv.time_mix(p["mix"], h, cfg)
+        x = x + o
+        if return_cache:
+            cache.update(state=state, xtm=xtm)
+    elif kind == "recurrent":
+        o, (conv, hT) = griffin.apply_recurrent(p["rec"], h, cfg)
+        x = x + o
+        if return_cache:
+            cache.update(conv=conv, h=hT)
+
+    if "cross" in p and enc_out is not None:
+        hc = layers.rms_norm(x, p["norm_cross"], cfg.norm_eps)
+        ckv = attention.init_cross_cache(p["cross"], enc_out, cfg)
+        b, s, _ = hc.shape
+        q = (hc @ p["cross"]["wq"]).reshape(b, s, cfg.num_heads,
+                                            cfg.head_dim)
+        if cfg.qk_norm:
+            q = layers.rms_norm(q, p["cross"]["q_norm"], cfg.norm_eps)
+        from ..kernels.flash_attention import ops as fa_ops
+        o = fa_ops.flash_attention(jnp.swapaxes(q, 1, 2), ckv["k"],
+                                   ckv["v"], mode="full",
+                                   impl=cfg.attn_impl)
+        o = jnp.swapaxes(o, 1, 2).reshape(b, s, cfg.attn_dim)
+        x = x + o @ p["cross"]["wo"]
+        if return_cache:
+            cache.update(ck=ckv["k"], cv=ckv["v"])
+
+    h2 = layers.rms_norm(x, p["norm2"], cfg.norm_eps)
+    if kind == "rwkv":
+        o, xcm = rwkv.channel_mix(p["mix"], h2, cfg)
+        x = x + o
+        if return_cache:
+            cache.update(xcm=xcm)
+    elif cfg.is_moe:
+        o, aux = moe.apply_moe(p["moe"], h2, cfg)
+        x = x + o
+    else:
+        x = x + layers.apply_ffn(p["ffn"], h2, cfg)
+    x = shard(x, "batch", "seq", None)
+    return x, (cache if return_cache else None), aux
+
+
+def apply_block_decode(p, x, cfg, kind: str, cache: Dict, *,
+                       lengths, enc_lengths=None):
+    """One-token decode. Returns (x, new_cache)."""
+    new_cache = dict(cache)
+    h = layers.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if kind in ATTN_KINDS:
+        self_kv = {kk: vv for kk, vv in cache.items()
+                   if kk in ("k", "v", "ks", "vs")}
+        o, kv = attention.apply_attention_decode(
+            p["attn"], h, cfg, kind, self_kv, lengths=lengths)
+        x = x + o
+        new_cache.update(kv)
+    elif kind == "rwkv":
+        o, (state, xtm) = rwkv.time_mix_decode(p["mix"], h, cfg,
+                                               cache["state"], cache["xtm"])
+        x = x + o
+        new_cache.update(state=state, xtm=xtm)
+    elif kind == "recurrent":
+        o, (conv, hT) = griffin.apply_recurrent_decode(
+            p["rec"], h, cfg, cache["conv"], cache["h"])
+        x = x + o
+        new_cache.update(conv=conv, h=hT)
+
+    if "cross" in p and "ck" in cache:
+        hc = layers.rms_norm(x, p["norm_cross"], cfg.norm_eps)
+        o, _ = attention.apply_attention_decode(
+            p["cross"], hc, cfg, "global",
+            {"k": cache["ck"], "v": cache["cv"]},
+            lengths=enc_lengths, cross=True)
+        x = x + o
+
+    h2 = layers.rms_norm(x, p["norm2"], cfg.norm_eps)
+    if kind == "rwkv":
+        o, xcm = rwkv.channel_mix(p["mix"], h2, cfg, x_prev=cache["xcm"],
+                                  decode=True)
+        x = x + o
+        new_cache.update(xcm=xcm)
+    elif cfg.is_moe:
+        o, _ = moe.apply_moe(p["moe"], h2, cfg)
+        x = x + o
+    else:
+        x = x + layers.apply_ffn(p["ffn"], h2, cfg)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# the stack
+# ---------------------------------------------------------------------------
+
+def init_stack(key, cfg, pattern: Tuple[str, ...], n_layers: int,
+               cross: bool = False):
+    """Returns {'groups': [stacked tree per position], 'rem': [trees]}."""
+    p_len = len(pattern)
+    n_groups, n_rem = n_layers // p_len, n_layers % p_len
+    keys = jax.random.split(key, n_layers + 1)
+    groups: List = []
+    for pos in range(p_len):
+        ks = jnp.stack([keys[g * p_len + pos] for g in range(n_groups)])
+        groups.append(jax.vmap(
+            lambda k: init_block(k, cfg, pattern[pos], cross))(ks))
+    rem = [init_block(keys[n_groups * p_len + i], cfg, pattern[i], cross)
+           for i in range(n_rem)]
+    return {"groups": groups, "rem": rem}
+
+
+def _maybe_remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    policy = None
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+    return jax.checkpoint(fn, policy=policy)
+
+
+def apply_stack(params, x, cfg, pattern, *, mode="causal", enc_out=None,
+                return_cache=False, s_max=None):
+    """Returns (x, caches, aux). caches mirrors params' groups/rem layout."""
+    p_len = len(pattern)
+
+    def group_body(x, group_params):
+        aux = jnp.zeros((), jnp.float32)
+        caches = []
+        for pos in range(p_len):
+            x, c, a = apply_block(group_params[pos], x, cfg, pattern[pos],
+                                  mode=mode, enc_out=enc_out,
+                                  return_cache=return_cache, s_max=s_max)
+            caches.append(c)
+            aux = aux + a
+        return x, (caches, aux)
+
+    body = _maybe_remat(group_body, cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    caches_out = {"groups": None, "rem": []}
+    if params["groups"]:
+        x, (gc, auxs) = jax.lax.scan(
+            lambda carry, gp: body(carry, gp), x, params["groups"])
+        caches_out["groups"] = gc
+        aux_total = aux_total + jnp.sum(auxs)
+    for i, bp in enumerate(params["rem"]):
+        x, c, a = apply_block(bp, x, cfg, pattern[i], mode=mode,
+                              enc_out=enc_out, return_cache=return_cache,
+                              s_max=s_max)
+        caches_out["rem"].append(c)
+        aux_total = aux_total + a
+    return x, (caches_out if return_cache else None), aux_total
+
+
+def apply_stack_decode(params, x, cfg, pattern, caches, *, lengths,
+                       enc_lengths=None):
+    p_len = len(pattern)
+
+    def group_body(x, xs):
+        group_params, group_cache = xs
+        new_caches = []
+        for pos in range(p_len):
+            x, nc = apply_block_decode(group_params[pos], x, cfg,
+                                       pattern[pos], group_cache[pos],
+                                       lengths=lengths,
+                                       enc_lengths=enc_lengths)
+            new_caches.append(nc)
+        return x, new_caches
+
+    new_out = {"groups": None, "rem": []}
+    if params["groups"]:
+        x, gc = jax.lax.scan(group_body, x,
+                             (params["groups"], caches["groups"]))
+        new_out["groups"] = gc
+    for i, bp in enumerate(params["rem"]):
+        x, nc = apply_block_decode(bp, x, cfg, pattern[i],
+                                   caches["rem"][i], lengths=lengths,
+                                   enc_lengths=enc_lengths)
+        new_out["rem"].append(nc)
+    return x, new_out

@@ -1,0 +1,49 @@
+"""Per-QP rate limiting (paper §3.5 'Isolation', §5.5).
+
+ConnectX WQ rate-limiters bound how fast a (possibly misbehaving) client's
+chain may execute.  Here a token bucket guards each client QP in the
+serving engine: requests beyond the rate are deferred, so a tenant spinning
+a non-terminating recycled loop cannot starve others.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+
+class BucketState(NamedTuple):
+    tokens: jnp.ndarray        # f32[n_clients]
+    last_us: jnp.ndarray       # f32[n_clients]
+
+
+def init(n_clients: int, burst: float) -> BucketState:
+    return BucketState(tokens=jnp.full((n_clients,), burst, jnp.float32),
+                       last_us=jnp.zeros((n_clients,), jnp.float32))
+
+
+def admit(state: BucketState, client: jnp.ndarray, now_us: float,
+          rate_per_us: float, burst: float) -> Tuple[BucketState, jnp.ndarray]:
+    """Vector admit: one request per entry of `client`, all at `now_us`.
+
+    Returns (new_state, admitted mask).  A request is admitted iff, after
+    linear refill, its QP's bucket still holds >= 1 token counting the
+    requests ahead of it in this batch (same-client requests drain in
+    order).
+    """
+    b = client.shape[0]
+    now = jnp.asarray(now_us, jnp.float32)
+    elapsed = jnp.maximum(now - state.last_us, 0.0)
+    refilled = jnp.minimum(state.tokens + elapsed * rate_per_us, burst)
+
+    # rank of each request within its client's group (batch is small)
+    same = client[None, :] == client[:, None]
+    earlier = jnp.tril(jnp.ones((b, b), jnp.bool_), k=-1)
+    grp_rank = jnp.sum(same & earlier, axis=1).astype(jnp.float32)
+
+    admitted = refilled[client] - grp_rank >= 1.0
+    spent = jnp.zeros_like(state.tokens).at[client].add(
+        admitted.astype(jnp.float32))
+    tokens = jnp.maximum(refilled - spent, 0.0)
+    last = jnp.full_like(state.last_us, now)
+    return BucketState(tokens, last), admitted

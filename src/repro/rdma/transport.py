@@ -1,0 +1,105 @@
+"""RC transport over the ICI mesh.
+
+RDMA semantics mapped to jax collectives (DESIGN.md §2): a *get* request
+travels to the shard that owns the key (``all_to_all`` dispatch), the owner
+executes the offload chain against local HBM, and the response travels back
+(``all_to_all`` combine).  One collective phase pair == one network RTT in
+the paper's latency structure.
+
+The dispatch is fixed-capacity (like MoE routing): each source shard can
+send up to ``capacity`` requests to each destination per step; overflow
+requests are dropped and reported (back-pressure is the serving engine's
+job, mirroring how an RNIC's WQ depth bounds outstanding verbs).
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def rank_within_dest(dest: jnp.ndarray) -> jnp.ndarray:
+    """pos[i] = #{j < i : dest[j] == dest[i]} (slot within the dest group)."""
+    b = dest.shape[0]
+    same = dest[None, :] == dest[:, None]
+    earlier = jnp.tril(jnp.ones((b, b), jnp.bool_), k=-1)
+    return jnp.sum(same & earlier, axis=1).astype(jnp.int32)
+
+
+def dispatch(payload: jnp.ndarray, dest: jnp.ndarray, n_shards: int,
+             capacity: int, axis_name: str):
+    """Route local requests to their destination shards.
+
+    payload: (B, W) int32; dest: (B,) int32 in [0, n_shards).
+    Returns (recv, pos, dropped):
+      recv   : (n_shards, capacity, W) — slot [s, c] = c-th request from
+               source shard s (zero-padded);
+      pos    : (B,) my requests' slots (for collecting responses);
+      dropped: () int32 — local requests beyond capacity.
+    """
+    b, w = payload.shape
+    pos = rank_within_dest(dest)
+    ok = pos < capacity
+    dropped = jnp.sum(~ok).astype(jnp.int32)
+    send = jnp.zeros((n_shards, capacity, w), payload.dtype)
+    # invalid rows get an out-of-range slot and are dropped by scatter
+    slot = jnp.where(ok, pos, capacity)
+    send = send.at[dest, slot].set(payload, mode="drop")
+    recv = lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0,
+                          tiled=False)
+    return recv, pos, dropped
+
+
+def combine(responses: jnp.ndarray, dest: jnp.ndarray, pos: jnp.ndarray,
+            axis_name: str) -> jnp.ndarray:
+    """Return responses to their source shards and gather per-request.
+
+    responses: (n_shards, capacity, V) — slot [s, c] answers source s's
+    c-th request.  Returns (B, V) aligned with the original local requests.
+    """
+    back = lax.all_to_all(responses, axis_name, split_axis=0, concat_axis=0,
+                          tiled=False)
+    # back[s, c] = response from shard s for my c-th request to it
+    capacity = back.shape[1]
+    safe = jnp.minimum(pos, capacity - 1)
+    out = back[dest, safe]
+    ok = (pos < capacity)[:, None]
+    return out * ok.astype(out.dtype)
+
+
+def one_sided_read(remote: jnp.ndarray, shard: jnp.ndarray,
+                   rows: jnp.ndarray, axis_name: str,
+                   n_shards: int, capacity: int) -> jnp.ndarray:
+    """RDMA READ: fetch ``remote[rows]`` from the shard owning them.
+
+    remote: (local_rows, W) this shard's slice of a dim-0-sharded array.
+    shard/rows: (B,) target shard and *local* row on that shard.
+    Pure data movement — the remote side executes no logic (the defining
+    property of a one-sided verb).
+    """
+    req = jnp.stack([rows, jnp.ones_like(rows)], axis=1)     # row, live
+    recv, pos, _ = dispatch(req, shard, n_shards, capacity, axis_name)
+    rrows = recv[..., 0].reshape(-1)
+    live = recv[..., 1].reshape(-1)
+    data = remote[jnp.clip(rrows, 0, remote.shape[0] - 1)]
+    data = data * live[:, None].astype(data.dtype)
+    data = data.reshape(n_shards, capacity, -1)
+    return combine(data, shard, pos, axis_name)
+
+
+def triggered_chain(remote_fn: Callable, payload: jnp.ndarray,
+                    dest: jnp.ndarray, n_shards: int, capacity: int,
+                    axis_name: str, resp_words: int) -> jnp.ndarray:
+    """The RedN pattern: SEND triggers a pre-posted chain at the owner.
+
+    ``remote_fn(requests) -> responses`` runs where the data lives; the
+    caller pays exactly one dispatch/combine pair (1 RTT) regardless of the
+    chain's complexity — that is the paper's core performance claim.
+    """
+    recv, pos, dropped = dispatch(payload, dest, n_shards, capacity,
+                                  axis_name)
+    flat = recv.reshape(-1, recv.shape[-1])
+    resp = remote_fn(flat).reshape(n_shards, capacity, resp_words)
+    return combine(resp, dest, pos, axis_name), dropped

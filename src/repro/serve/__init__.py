@@ -1,0 +1,2 @@
+"""Serving: batched decode engine with RedN-style isolation + failover."""
+from .engine import ServeEngine  # noqa: F401

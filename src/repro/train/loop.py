@@ -1,0 +1,118 @@
+"""Train-step builder: loss -> grads -> (optional compression) -> AdamW.
+
+The same builder serves three contexts:
+  * smoke tests (1 device, no mesh),
+  * the multi-pod dry-run (abstract lowering with NamedShardings),
+  * the runnable examples (real training on CPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed import compression
+from ..models import model as model_lib
+from ..models.config import ModelConfig
+from . import optimizer as opt_lib
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: opt_lib.AdamWConfig, *,
+                    compress_grads: bool = False,
+                    microbatches: int = 1,
+                    grad_constraint=None,
+                    wire_dtype: Optional[str] = None):
+    """Returns train_step(params, opt_state, batch[, error]) -> ...
+
+    grad_constraint: optional fn(grads)->grads applying the parameter
+    shardings to per-microbatch gradients — turns the per-microbatch
+    all-reduce into a reduce-scatter (2x less DP wire traffic).
+    wire_dtype: cast per-microbatch grads before they cross the data axis
+    ('bfloat16' halves the reduce bytes again; accumulation stays f32).
+    """
+
+    def post_grads(g):
+        if wire_dtype is not None:
+            g = jax.tree_util.tree_map(
+                lambda a: a.astype(jnp.dtype(wire_dtype)), g)
+        if grad_constraint is not None:
+            g = grad_constraint(g)
+        return g
+
+    def loss_of(params, batch):
+        loss, metrics = model_lib.loss_fn(params, batch, cfg)
+        return loss, metrics
+
+    def grads_of(params, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch)
+            return loss, metrics, post_grads(grads)
+        # gradient accumulation: scan over a folded microbatch axis.
+        # NB: the fold keeps the (sharded) batch dim major — reshaping
+        # (B,) -> (B/u, u) then moving u to the front preserves the data-
+        # axis sharding of dim B/u; a dynamic_slice of the sharded batch
+        # dim would force GSPMD to all-gather the whole batch.
+        b = batch["tokens"].shape[0]
+        assert b % microbatches == 0
+
+        def fold(a):
+            a = a.reshape(a.shape[0] // microbatches, microbatches,
+                          *a.shape[1:])
+            return jnp.moveaxis(a, 1, 0)
+
+        ubatch = jax.tree_util.tree_map(fold, batch)
+
+        def body(carry, mb):
+            acc, loss_acc = carry
+            (loss, metrics), g = jax.value_and_grad(
+                loss_of, has_aux=True)(params, mb)
+            g = post_grads(g)
+            acc = jax.tree_util.tree_map(
+                lambda a, gg: a + gg.astype(jnp.float32), acc, g)
+            if grad_constraint is not None:
+                acc = grad_constraint(acc)
+            return (acc, loss_acc + loss), metrics
+
+        zero = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if grad_constraint is not None:
+            zero = grad_constraint(zero)
+        (gsum, loss_sum), metrics = jax.lax.scan(body, (zero, 0.0), ubatch)
+        grads = jax.tree_util.tree_map(lambda g: g / microbatches, gsum)
+        metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+        return loss_sum / microbatches, metrics, grads
+
+    if compress_grads:
+        def train_step(params, opt_state, batch, error):
+            loss, metrics, grads = grads_of(params, batch)
+            grads, error, ratio = compression.compress_with_feedback(
+                grads, error)
+            params, opt_state, om = opt_lib.update(
+                opt_cfg, grads, opt_state, params)
+            metrics = dict(metrics, loss=loss, wire_ratio=ratio, **om)
+            return params, opt_state, error, metrics
+    else:
+        def train_step(params, opt_state, batch):
+            loss, metrics, grads = grads_of(params, batch)
+            params, opt_state, om = opt_lib.update(
+                opt_cfg, grads, opt_state, params)
+            metrics = dict(metrics, loss=loss, **om)
+            return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, s_max: int):
+    def prefill_step(params, batch):
+        return model_lib.prefill(params, batch, cfg, s_max=s_max)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, token, caches, lengths, enc_lengths=None):
+        return model_lib.decode_step(params, token, caches, lengths, cfg,
+                                     enc_lengths=enc_lengths)
+    return serve_step

@@ -1,0 +1,146 @@
+"""AdamW with f32 master weights and sharded optimizer state.
+
+State lives in the same logical sharding as its parameter (FSDP over the
+data axis + model-axis sharding), so ZeRO-style partitioning falls out of
+the param sharding rules.  Optional int8 gradient compression (error
+feedback) hooks in before the update (distributed/compression.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any            # f32 pytree like params
+    nu: Any
+    master: Any        # f32 master copy (params may be bf16)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    # memory tier: 'float32' moments + f32 master (default), or 'int8'
+    # moments with per-row scales and NO master (bitsandbytes-style) —
+    # 4.06 B/param total, what lets the 774 B llama4-maverick train on a
+    # 256x16 GB pod (DESIGN.md §5)
+    moments_dtype: str = "float32"
+    master: bool = True
+
+
+def _q8(x, sqrt_domain: bool = False):
+    """Per-row (last-dim) symmetric int8 quantization: {'q', 's'}.
+
+    sqrt_domain=True stores sqrt(x) (x >= 0): int8's 127:1 linear range
+    becomes ~16000:1 on the raw value — essential for Adam's second
+    moment, whose per-row dynamic range is huge (linear int8 rounds small
+    nu to 0 and the update mu/(sqrt(nu)+eps) explodes; observed: loss
+    6.2 -> 1e4 in five steps)."""
+    xf = x.astype(jnp.float32)
+    if sqrt_domain:
+        xf = jnp.sqrt(jnp.maximum(xf, 0.0))
+    s = jnp.maximum(jnp.max(jnp.abs(xf), -1, keepdims=True), 1e-12) / 127.0
+    return {"q": jnp.clip(jnp.round(xf / s), -127, 127).astype(jnp.int8),
+            "s": s}
+
+
+def _dq8(m, sqrt_domain: bool = False):
+    x = m["q"].astype(jnp.float32) * m["s"]
+    return jnp.square(x) if sqrt_domain else x
+
+
+def init(params, cfg: Optional[AdamWConfig] = None) -> AdamWState:
+    cfg = cfg or AdamWConfig()
+    if cfg.moments_dtype == "int8":
+        zq = lambda sd: (lambda p: _q8(jnp.zeros(p.shape, jnp.float32),
+                                       sqrt_domain=sd))
+        master = (jax.tree_util.tree_map(
+            lambda p: p.astype(jnp.float32), params) if cfg.master
+            else None)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree_util.tree_map(zq(False), params),
+            nu=jax.tree_util.tree_map(zq(True), params),
+            master=master)
+    f32 = lambda p: jnp.zeros_like(p, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree_util.tree_map(f32, params),
+        nu=jax.tree_util.tree_map(f32, params),
+        master=jax.tree_util.tree_map(
+            lambda p: p.astype(jnp.float32), params))
+
+
+def abstract_init(abstract_params,
+                  cfg: Optional[AdamWConfig] = None) -> AdamWState:
+    return jax.eval_shape(lambda p: init(p, cfg), abstract_params)
+
+
+def schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree_util.tree_leaves(tree)))
+
+
+def update(cfg: AdamWConfig, grads, state: AdamWState,
+           params) -> Tuple[Any, AdamWState, Dict]:
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(cfg, step)
+    quant = cfg.moments_dtype == "int8"
+
+    def upd(g, mu, nu, m, p):
+        g = g.astype(jnp.float32) * scale
+        if quant:
+            mu, nu = _dq8(mu), _dq8(nu, sqrt_domain=True)
+        if m is None:                 # masterless: params carry the state
+            m = p.astype(jnp.float32)
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+        mu_hat = mu / (1 - cfg.b1 ** step.astype(jnp.float32))
+        nu_hat = nu / (1 - cfg.b2 ** step.astype(jnp.float32))
+        eps = max(cfg.eps, 1e-6) if quant else cfg.eps
+        delta = mu_hat / (jnp.sqrt(nu_hat) + eps) + cfg.weight_decay * m
+        m2 = m - lr * delta
+        if quant:
+            mu, nu = _q8(mu), _q8(nu, sqrt_domain=True)
+        return mu, nu, m2
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_mu = tdef.flatten_up_to(state.mu)
+    flat_nu = tdef.flatten_up_to(state.nu)
+    flat_p = tdef.flatten_up_to(params)
+    flat_m = (tdef.flatten_up_to(state.master)
+              if state.master is not None else [None] * len(flat_g))
+    out = [upd(g, mu, nu, m, p) for g, mu, nu, m, p
+           in zip(flat_g, flat_mu, flat_nu, flat_m, flat_p)]
+    mu = tdef.unflatten([o[0] for o in out])
+    nu = tdef.unflatten([o[1] for o in out])
+    master = (tdef.unflatten([o[2] for o in out])
+              if state.master is not None else None)
+    new_params = tdef.unflatten([
+        o[2].astype(p.dtype) for o, p in zip(out, flat_p)])
+    return new_params, AdamWState(step, mu, nu, master), {
+        "grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,84 @@
+"""Subprocess body: elastic scaling — checkpoint on a (4 data, 2 model)
+mesh, restore resharded onto (2 data, 2 model), keep training, and match a
+never-resharded run bit-for-bit."""
+import os
+import tempfile
+
+assert "--xla_force_host_platform_device_count=8" in os.environ.get(
+    "XLA_FLAGS", "")
+
+import jax                                      # noqa: E402
+import jax.numpy as jnp                         # noqa: E402
+import numpy as np                              # noqa: E402
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import registry              # noqa: E402
+from repro.data.pipeline import TokenPipeline   # noqa: E402
+from repro.distributed import fault, sharding as shrules  # noqa: E402
+from repro.distributed import specs as specs_lib  # noqa: E402
+from repro.models import model as M             # noqa: E402
+from repro.train import checkpoint as ckpt_lib  # noqa: E402
+from repro.train import loop as loop_lib        # noqa: E402
+from repro.train import optimizer as opt_lib    # noqa: E402
+
+cfg = registry.smoke_config("smollm-135m")
+ocfg = opt_lib.AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=20)
+pipe = TokenPipeline(cfg.vocab_size, 32, 8, seed=11)
+
+
+def batch_fn(i):
+    return {k: jnp.asarray(v) for k, v in pipe.batch_at(i).items()}
+
+
+def sharded_setup(mesh):
+    with shrules.use_mesh(mesh) as rules:
+        aparams = M.abstract_params(cfg)
+        p_sh = specs_lib.to_shardings(
+            specs_lib.param_specs(aparams, mesh, rules), mesh)
+        step = jax.jit(loop_lib.make_train_step(cfg, ocfg))
+    return p_sh, step, rules
+
+
+params0 = M.init_params(jax.random.PRNGKey(0), cfg)
+opt0 = opt_lib.init(params0)
+
+# plan check
+plan = fault.remesh_plan({"data": 4, "model": 2}, {"data": 2, "model": 2},
+                         global_batch=8)
+assert plan["batch_ok"]
+
+# phase 1: big mesh, 5 steps, checkpoint
+mesh_a = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+p_sh_a, step_a, rules_a = sharded_setup(mesh_a)
+p = jax.device_put(params0, p_sh_a)
+o = opt0
+for i in range(5):
+    p, o, m = step_a(p, o, batch_fn(i))
+ckdir = tempfile.mkdtemp()
+ckpt_lib.save(ckdir, 5, {"params": p, "opt": o})
+
+# phase 2: SHRUNK mesh (node loss), restore resharded, 5 more steps
+mesh_b = Mesh(np.array(jax.devices()[:4]).reshape(2, 2), ("data", "model"))
+p_sh_b, step_b, rules_b = sharded_setup(mesh_b)
+trees = ckpt_lib.restore(ckdir, 5,
+                         {"params": jax.eval_shape(lambda: params0),
+                          "opt": jax.eval_shape(lambda: opt0)},
+                         shardings={"params": p_sh_b, "opt": None})
+p2, o2 = trees["params"], trees["opt"]
+# params really live on the small mesh now
+leaf = jax.tree_util.tree_leaves(p2)[0]
+assert leaf.sharding.mesh.shape == {"data": 2, "model": 2}, leaf.sharding
+for i in range(5, 10):
+    p2, o2, m2 = step_b(p2, o2, batch_fn(i))
+
+# reference: uninterrupted single-device run
+pr, orr = params0, opt0
+step_r = jax.jit(loop_lib.make_train_step(cfg, ocfg))
+for i in range(10):
+    pr, orr, mr = step_r(pr, orr, batch_fn(i))
+
+for a, b in zip(jax.tree_util.tree_leaves(p2),
+                jax.tree_util.tree_leaves(pr)):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=2e-4, rtol=1e-4)
+print("ELASTIC_OK")

@@ -1,0 +1,49 @@
+"""Subprocess body: sharded KV get paths on an 8-device host mesh.
+
+Run with XLA_FLAGS=--xla_force_host_platform_device_count=8 (the parent
+test sets it; NEVER set this in conftest — smoke tests must see 1 device).
+"""
+import os
+
+assert "--xla_force_host_platform_device_count=8" in os.environ.get(
+    "XLA_FLAGS", ""), "parent must set XLA_FLAGS"
+
+import jax                                      # noqa: E402
+import jax.numpy as jnp                         # noqa: E402
+import numpy as np                              # noqa: E402
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.kvstore import store                 # noqa: E402
+
+assert len(jax.devices()) == 8, jax.devices()
+
+S = 8
+kv = store.ShardedKV.build(n_shards=S, buckets_per_shard=64, val_words=2)
+rng = np.random.RandomState(0)
+keys = rng.choice(np.arange(1, 1 << 16), size=120, replace=False)
+for k in keys:
+    kv.set(int(k), [int(k) % 251, int(k) % 241])
+
+mesh = Mesh(np.array(jax.devices()).reshape(S), ("kv",))
+dk, dv = kv.device_arrays()
+dk = jax.device_put(dk, NamedSharding(mesh, P("kv")))
+dv = jax.device_put(dv, NamedSharding(mesh, P("kv")))
+
+B = 16
+probe = rng.choice(keys, size=S * B).astype(np.int32)
+probe[::13] = 1 << 20          # sprinkle misses
+q = jax.device_put(jnp.asarray(probe.reshape(S, B)),
+                   NamedSharding(mesh, P("kv")))
+
+rfound, rvals = store.reference_get(kv, probe)
+for method in ("redn", "one_sided", "two_sided"):
+    found, vals, dropped = store.sharded_get(mesh, "kv", dk, dv, q,
+                                             method=method)
+    np.testing.assert_array_equal(
+        np.asarray(found).reshape(-1), rfound, err_msg=method)
+    np.testing.assert_array_equal(
+        np.asarray(vals).reshape(-1, 2), rvals, err_msg=method)
+    assert int(jnp.sum(dropped)) == 0
+    print(f"OK {method}: cross-shard routing matches reference")
+
+print("MULTIDEVICE_KV_OK")

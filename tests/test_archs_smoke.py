@@ -1,0 +1,164 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward /
+train-loss / decode step on CPU; asserts shapes and finiteness, and that
+prefill+decode agrees with the parallel forward (cache correctness)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import model as M
+
+
+def make_batch(cfg, b=2, s=16, seed=0):
+    rng = np.random.RandomState(seed)
+    batch = {
+        "tokens": jnp.asarray(rng.randint(1, cfg.vocab_size, (b, s)),
+                              jnp.int32),
+        "targets": jnp.asarray(rng.randint(1, cfg.vocab_size, (b, s)),
+                               jnp.int32),
+        "loss_mask": jnp.ones((b, s), jnp.float32),
+    }
+    if cfg.is_encdec:
+        batch["frames"] = jnp.asarray(
+            rng.randn(b, s, cfg.frontend_dim), jnp.float32)
+    if cfg.frontend == "vision" and cfg.frontend_tokens:
+        batch["patches"] = jnp.asarray(
+            rng.randn(b, cfg.frontend_tokens, cfg.frontend_dim),
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", registry.ARCHS)
+def test_smoke_forward_and_loss(arch):
+    cfg = registry.smoke_config(arch)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg)
+    logits, _, _ = M.forward(params, batch, cfg)
+    b, s = batch["tokens"].shape
+    extra = cfg.frontend_tokens if (cfg.frontend == "vision"
+                                    and "patches" in batch) else 0
+    assert logits.shape == (b, s + extra, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    loss, metrics = M.loss_fn(params, batch, cfg)
+    assert np.isfinite(float(loss))
+    assert float(metrics["ce"]) > 0
+
+
+@pytest.mark.parametrize("arch", registry.ARCHS)
+def test_smoke_train_step_grads(arch):
+    cfg = registry.smoke_config(arch)
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    batch = make_batch(cfg)
+    loss, grads = jax.value_and_grad(
+        lambda p: M.loss_fn(p, batch, cfg)[0])(params)
+    assert np.isfinite(float(loss))
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in flat)
+    norm = sum(float(jnp.sum(jnp.square(g.astype(jnp.float32))))
+               for g in flat) ** 0.5
+    assert norm > 0
+
+
+@pytest.mark.parametrize("arch", registry.ARCHS)
+def test_smoke_prefill_then_decode_matches_parallel(arch):
+    """The cache path must reproduce the parallel forward's logits."""
+    cfg = registry.smoke_config(arch)
+    params = M.init_params(jax.random.PRNGKey(2), cfg)
+    b, s = 2, 12
+    batch = make_batch(cfg, b=b, s=s)
+
+    # parallel forward over s+2 tokens
+    rng = np.random.RandomState(7)
+    extra_toks = jnp.asarray(rng.randint(1, cfg.vocab_size, (b, 2)),
+                             jnp.int32)
+    full = dict(batch)
+    full["tokens"] = jnp.concatenate([batch["tokens"], extra_toks], axis=1)
+    logits_full, _, _ = M.forward(params, full, cfg)
+
+    # prefill s tokens, then decode the 2 extra
+    extra_front = cfg.frontend_tokens if (cfg.frontend == "vision"
+                                          and "patches" in batch) else 0
+    s_max = s + extra_front + 4
+    last, caches, lengths = M.prefill(params, batch, cfg, s_max=s_max)
+    enc_lengths = (jnp.full((b,), batch["frames"].shape[1], jnp.int32)
+                   if cfg.is_encdec else None)
+    outs = []
+    for i in range(2):
+        lengths = lengths + 1
+        lg, caches = M.decode_step(params, extra_toks[:, i], caches,
+                                   lengths, cfg, enc_lengths=enc_lengths)
+        outs.append(lg)
+
+    extra = cfg.frontend_tokens if (cfg.frontend == "vision"
+                                    and "patches" in batch) else 0
+    want0 = logits_full[:, extra + s - 1 + 1]      # logits at new token 1
+    want1 = logits_full[:, extra + s - 1 + 2]
+    tol = 2e-2 if cfg.dtype == "bfloat16" else 2e-3
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(want0),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(outs[1]), np.asarray(want1),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("arch", registry.ARCHS)
+def test_abstract_params_match_concrete(arch):
+    cfg = registry.smoke_config(arch)
+    abstract = M.abstract_params(cfg)
+    concrete = M.init_params(jax.random.PRNGKey(0), cfg)
+    ab = jax.tree_util.tree_map(lambda a: (a.shape, str(a.dtype)), abstract)
+    co = jax.tree_util.tree_map(lambda a: (a.shape, str(a.dtype)), concrete)
+    assert ab == co
+
+
+def test_full_configs_match_assignment():
+    """Spot-check the exact assigned numbers."""
+    c = registry.get_config("mixtral-8x7b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size, c.num_experts, c.experts_per_token) == \
+        (32, 4096, 32, 8, 14336, 32000, 8, 2)
+    c = registry.get_config("llama4-maverick-400b-a17b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.vocab_size,
+            c.num_experts, c.experts_per_token) == \
+        (48, 5120, 40, 202048, 128, 1)
+    c = registry.get_config("qwen3-1.7b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size, c.qk_norm) == (28, 2048, 16, 8, 6144, 151936,
+                                         True)
+    c = registry.get_config("smollm-135m")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (30, 576, 9, 3, 1536, 49152)
+    c = registry.get_config("glm4-9b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (40, 4096, 32, 2, 13696, 151552)
+    c = registry.get_config("gemma3-1b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (26, 1152, 4, 1, 6912, 262144)
+    assert c.layer_pattern.count("local") == 5
+    c = registry.get_config("seamless-m4t-medium")
+    assert (c.num_layers, c.num_encoder_layers, c.d_model, c.num_heads,
+            c.d_ff, c.vocab_size) == (12, 12, 1024, 16, 4096, 256206)
+    c = registry.get_config("phi-3-vision-4.2b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (32, 3072, 32, 32, 8192, 32064)
+    c = registry.get_config("rwkv6-7b")
+    assert (c.num_layers, c.d_model, c.d_ff, c.vocab_size) == \
+        (32, 4096, 14336, 65536)
+    assert c.layer_pattern == ("rwkv",)
+    c = registry.get_config("recurrentgemma-9b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (38, 4096, 16, 1, 12288, 256000)
+    assert c.layer_pattern == ("recurrent", "recurrent", "local")
+
+
+def test_smollm_param_count_near_135m():
+    c = registry.get_config("smollm-135m")
+    n = c.total_params
+    assert 120e6 < n < 180e6, n
+
+
+def test_mixtral_param_counts():
+    c = registry.get_config("mixtral-8x7b")
+    assert 40e9 < c.total_params < 52e9, c.total_params
+    assert 10e9 < c.active_params < 16e9, c.active_params

@@ -1,0 +1,236 @@
+"""Tests for RedN constructs: if (Fig 4), while (Fig 5/6), recycling (§3.4),
+mov emulation (Appendix A), and Table 2 verb budgets."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import assembler, constructs, isa, machine
+
+
+def build_if(x, y):
+    """Fig 4 program: resp = 1 if x == y else 0 (default)."""
+    p = assembler.Program(512)
+    one = p.word(1)
+    resp = p.word(0)
+    mod = p.add_wq(4, managed=True, ordering=isa.ORD_DOORBELL)
+    ctl = p.add_wq(8)
+    refs = constructs.emit_if(ctl, mod, x=x, y=y, then_src=one,
+                              then_dst=resp)
+    return p, resp, refs
+
+
+@pytest.mark.parametrize("x,y,want", [(3, 3, 1), (3, 4, 0), (0, 0, 1),
+                                      (0xFFFFFF, 0xFFFFFF, 1),
+                                      (0xFFFFFF, 0xFFFFFE, 0)])
+def test_if_construct(x, y, want):
+    p, resp, _ = build_if(x, y)
+    spec, st0 = p.finalize()
+    out = machine.run(spec, st0, 64)
+    assert int(out.mem[resp]) == want
+
+
+@settings(max_examples=25, deadline=None)
+@given(x=st.integers(0, isa.ID_MASK), y=st.integers(0, isa.ID_MASK))
+def test_if_matches_python_semantics(x, y):
+    p, resp, _ = build_if(x, y)
+    spec, st0 = p.finalize()
+    out = machine.run(spec, st0, 64)
+    assert int(out.mem[resp]) == (1 if x == y else 0)
+
+
+def test_if_budget_matches_table2():
+    """if = 1C + 1A + 3E: WAIT(input) + ENABLE + WAIT(before R3)."""
+    p = assembler.Program(512)
+    one = p.word(1)
+    resp = p.word(0)
+    inp = p.add_wq(2)
+    trigger = inp.noop()                 # stands in for the input RECV
+    mod = p.add_wq(4, managed=True, ordering=isa.ORD_DOORBELL)
+    ctl = p.add_wq(8)
+    refs = constructs.emit_if(ctl, mod, x=1, y=2, then_src=one,
+                              then_dst=resp, wait_for=trigger)
+    resp_wq = p.add_wq(4)
+    resp_wq.wait_for(refs.cond_wr)       # E3: gate the return WR
+    resp_wq.send(src=resp, ln=1, dst_region=resp, target_qp=-1)
+    b = p.budget()
+    # A: the CAS; E: WAIT(input)+ENABLE+WAIT(R3); C: cond NOOP + the
+    # surrounding trigger NOOP and R3 SEND (scaffolding, not the if itself)
+    assert b["A"] == 1 and b["E"] == 3 and b["C"] == 3
+
+
+def search_outcome(keys, x, use_break, max_steps=2048):
+    n = len(keys)
+    p = assembler.Program(2048)
+    resp = p.word(-1 & 0xFFFFFF)
+    body = p.add_wq(2 * n + 2)
+    ctl = p.add_wq(2 * n + 2)
+    mod = p.add_wq(n + 2, managed=True, ordering=isa.ORD_DOORBELL)
+    constructs.emit_while_search_unrolled(
+        p, body, ctl, mod, n_iters=n, keys=keys, x=x, resp_region=resp,
+        resp_payloads=list(range(n)), use_break=use_break)
+    spec, st0 = p.finalize()
+    out = machine.run(spec, st0, max_steps)
+    return int(out.mem[resp]), out
+
+
+@pytest.mark.parametrize("use_break", [False, True])
+def test_while_search_finds_key(use_break):
+    keys = [11, 22, 33, 44]
+    for x, want in [(11, 0), (33, 2), (44, 3), (99, 16777215)]:
+        got, _ = search_outcome(keys, x, use_break)
+        assert got == want, (x, want, got, use_break)
+
+
+def test_while_break_stops_subsequent_iterations():
+    """With break, a hit at i stops CASes for i+2.. (Fig 6 semantics)."""
+    keys = [5, 6, 7, 8, 9, 10]
+    _, out_hit = search_outcome(keys, 6, use_break=True)
+    _, out_miss = search_outcome(keys, 99, use_break=True)
+    # fewer CAS verbs executed when breaking early
+    assert int(out_hit.verb_counts[isa.CAS]) < int(
+        out_miss.verb_counts[isa.CAS])
+
+
+def test_while_nobreak_executes_all_iterations():
+    keys = [5, 6, 7, 8, 9, 10]
+    _, out = search_outcome(keys, 5, use_break=False)
+    assert int(out.verb_counts[isa.CAS]) == len(keys)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_while_search_matches_python(data):
+    n = data.draw(st.integers(1, 6))
+    keys = data.draw(st.lists(st.integers(1, 1000), min_size=n, max_size=n,
+                              unique=True))
+    x = data.draw(st.sampled_from(keys + [1001]))
+    use_break = data.draw(st.booleans())
+    got, _ = search_outcome(keys, x, use_break)
+    want = keys.index(x) if x in keys else 0xFFFFFF
+    assert got == want
+
+
+def test_while_unrolled_budget_matches_table2():
+    """per-iteration: 1C + 1A + 3E (Table 2, while/unrolled row)."""
+    n = 4
+    p = assembler.Program(2048)
+    resp = p.word(0)
+    body = p.add_wq(2 * n + 2)
+    ctl = p.add_wq(2 * n + 2)
+    mod = p.add_wq(n + 2, managed=True, ordering=isa.ORD_DOORBELL)
+    constructs.emit_while_search_unrolled(
+        p, body, ctl, mod, n_iters=n, keys=[1, 2, 3, 4], x=9,
+        resp_region=resp, resp_payloads=list(range(n)), use_break=False)
+    b = p.budget()
+    assert b["A"] == n                 # 1 CAS per iteration
+    assert b["C"] == n                 # 1 conditional NOOP per iteration
+    assert b["E"] == 3 * n - 1         # 3E per iteration (first gate elided)
+
+
+def test_recycled_loop_fires_on_match_and_rearms():
+    """§3.4: recycled predicate loop with no CPU involvement."""
+    p = assembler.Program(1024)
+    datum = p.word(7)
+    marker = p.word(111)
+    hits = p.word(0)
+    loop = constructs.emit_recycled_predicate_loop(
+        p, data_addr=datum, x=7, then_src=marker, then_dst=hits)
+    # initial lap: cond id=0 (placeholder) != 7 packed -> first CAS misses;
+    # the refetch READ loads mem[datum]=7 into the cond id, so lap 2 hits.
+    spec, st0 = p.finalize()
+    out = machine.run(spec, st0, max_steps=64)
+    assert int(out.steps) == 64              # nontermination (fuel-bounded)
+    assert int(out.mem[hits]) == 111         # the then-WRITE fired
+
+    # change the datum -> predicate false -> then-WRITE stops firing
+    st1 = out._replace(mem=out.mem.at[datum].set(8),
+                       steps=jnp.zeros((), jnp.int32))
+    st1 = machine.run(spec, st1, max_steps=16)   # flush the in-flight lap
+    st1 = st1._replace(mem=st1.mem.at[hits].set(0),
+                       steps=jnp.zeros((), jnp.int32))
+    out2 = machine.run(spec, st1, max_steps=64)
+    assert int(out2.steps) == 64                 # still looping...
+    assert int(out2.mem[hits]) == 0              # ...but never firing
+
+
+def test_recycled_budget():
+    p = assembler.Program(1024)
+    datum = p.word(7)
+    constructs.emit_recycled_predicate_loop(
+        p, data_addr=datum, x=7, then_src=datum, then_dst=datum)
+    b = p.budget()
+    # our adaptation: 3C + 2A + 1E (+2 pad NOOPs) per lap; paper: 3C+2A+4E.
+    assert b["A"] == 2 and b["E"] == 1 and b["C"] == 3 + 2
+
+
+# --- mov emulation (Appendix A) ---------------------------------------------
+
+def test_mov_immediate():
+    p = assembler.Program(512)
+    r = p.word(0)
+    wq = p.add_wq(2)
+    constructs.emit_mov_imm(wq, 77, r)
+    spec, st0 = p.finalize()
+    out = machine.run(spec, st0, 16)
+    assert int(out.mem[r]) == 77
+
+
+def test_mov_indirect():
+    p = assembler.Program(512)
+    cell = p.word(345)            # the pointee
+    r_src = p.word(0)             # register holding &cell
+    r_dst = p.word(0)
+    p._data_init[r_src] = cell    # r_src := &cell
+    mod = p.add_wq(4, managed=True, ordering=isa.ORD_DOORBELL)
+    ctl = p.add_wq(4)
+    constructs.emit_mov_indirect(ctl, mod, r_src, r_dst)
+    spec, st0 = p.finalize()
+    out = machine.run(spec, st0, 32)
+    assert int(out.mem[r_dst]) == 345
+
+
+def test_mov_indexed():
+    p = assembler.Program(512)
+    arr = p.alloc(4, [10, 20, 30, 40])
+    r_src = p.word(arr)           # base address
+    r_off = p.word(2)             # offset
+    r_dst = p.word(0)
+    mod = p.add_wq(4, managed=True, ordering=isa.ORD_DOORBELL)
+    ctl = p.add_wq(8)
+    constructs.emit_mov_indexed(ctl, mod, r_src, r_off, r_dst)
+    spec, st0 = p.finalize()
+    out = machine.run(spec, st0, 64)
+    assert int(out.mem[r_dst]) == 30   # [r_src + r_off] = arr[2]
+
+
+def test_mov_store_indirect():
+    p = assembler.Program(512)
+    cell = p.word(0)
+    r_val = p.word(55)
+    r_ptr = p.word(cell)
+    mod = p.add_wq(4, managed=True, ordering=isa.ORD_DOORBELL)
+    ctl = p.add_wq(4)
+    constructs.emit_mov_store_indirect(ctl, mod, r_val, r_ptr)
+    spec, st0 = p.finalize()
+    out = machine.run(spec, st0, 32)
+    assert int(out.mem[cell]) == 55
+
+
+@settings(max_examples=15, deadline=None)
+@given(vals=st.lists(st.integers(0, 1000), min_size=4, max_size=4),
+       off=st.integers(0, 3))
+def test_mov_indexed_matches_python(vals, off):
+    p = assembler.Program(512)
+    arr = p.alloc(4, vals)
+    r_src = p.word(arr)
+    r_off = p.word(off)
+    r_dst = p.word(0)
+    mod = p.add_wq(4, managed=True, ordering=isa.ORD_DOORBELL)
+    ctl = p.add_wq(8)
+    constructs.emit_mov_indexed(ctl, mod, r_src, r_off, r_dst)
+    spec, st0 = p.finalize()
+    out = machine.run(spec, st0, 64)
+    assert int(out.mem[r_dst]) == vals[off]

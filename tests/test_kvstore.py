@@ -1,0 +1,150 @@
+"""Tests: hopscotch/cuckoo tables, sharded store get paths, isolation,
+failure resiliency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from jax.sharding import Mesh
+
+from repro.kvstore import cuckoo, hopscotch, store
+from repro.rdma import failure, isolation
+
+
+# --- hopscotch ---------------------------------------------------------------
+
+def test_hopscotch_insert_lookup_roundtrip():
+    t = hopscotch.make_table(64, 2, neighborhood=8)
+    for k in range(1, 40):
+        assert t.insert(k, [k, k * 2])
+    keys, vals = t.as_device()
+    q = jnp.arange(1, 50, dtype=jnp.int32)
+    found, v = hopscotch.lookup(keys, vals, q, 8)
+    for i, k in enumerate(range(1, 50)):
+        if k < 40:
+            assert bool(found[i]) and v[i].tolist() == [k, k * 2]
+        else:
+            assert not bool(found[i]) and v[i].tolist() == [0, 0]
+
+
+def test_hopscotch_update_in_place():
+    t = hopscotch.make_table(32, 2)
+    t.insert(5, [1, 1])
+    t.insert(5, [9, 9])
+    keys, vals = t.as_device()
+    _, v = hopscotch.lookup(keys, vals, jnp.asarray([5], jnp.int32), 8)
+    assert v[0].tolist() == [9, 9]
+
+
+@settings(max_examples=20, deadline=None)
+@given(keys=st.lists(st.integers(1, 1 << 24), min_size=1, max_size=48,
+                     unique=True))
+def test_hopscotch_matches_dict(keys):
+    t = hopscotch.make_table(128, 1, neighborhood=8)
+    ref = {}
+    for k in keys:
+        if t.insert(k, [k % 1009]):
+            ref[k] = k % 1009
+    dk, dv = t.as_device()
+    q = jnp.asarray(keys + [1 << 25], jnp.int32)
+    found, v = hopscotch.lookup(dk, dv, q, 8)
+    for i, k in enumerate(keys + [1 << 25]):
+        if k in ref:
+            assert bool(found[i]) and int(v[i, 0]) == ref[k]
+        else:
+            assert not bool(found[i])
+
+
+# --- cuckoo -------------------------------------------------------------------
+
+def test_cuckoo_insert_lookup():
+    t = cuckoo.make_table(32, 2, ways=4)
+    for k in range(1, 60):
+        assert t.insert(k, [k, k + 1]), k
+    dk, dv = t.as_device()
+    found, v = cuckoo.lookup(dk, dv, jnp.arange(1, 60, dtype=jnp.int32))
+    assert bool(jnp.all(found))
+    np.testing.assert_array_equal(np.asarray(v[:, 0]), np.arange(1, 60))
+
+
+# --- sharded store: the three get paths ---------------------------------------
+
+@pytest.fixture(scope="module")
+def kv_setup():
+    kv = store.ShardedKV.build(n_shards=1, buckets_per_shard=128,
+                               val_words=2)
+    rng = np.random.RandomState(0)
+    keys = rng.choice(np.arange(1, 1 << 16), size=60, replace=False)
+    for k in keys:
+        kv.set(int(k), [int(k) % 251, int(k) % 241])
+    return kv, keys
+
+
+@pytest.mark.parametrize("method", ["redn", "one_sided", "two_sided"])
+def test_sharded_get_paths_agree_with_reference(kv_setup, method):
+    kv, keys = kv_setup
+    mesh = Mesh(np.array(jax.devices()[:1]), ("kv",))
+    dk, dv = kv.device_arrays()
+    rng = np.random.RandomState(1)
+    probe = np.concatenate([rng.choice(keys, 20), [99999, 77777]])
+    q = jnp.asarray(probe[None, :], jnp.int32)
+    found, vals, dropped = store.sharded_get(mesh, "kv", dk, dv, q,
+                                             method=method)
+    rfound, rvals = store.reference_get(kv, probe)
+    np.testing.assert_array_equal(np.asarray(found[0]), rfound)
+    np.testing.assert_array_equal(np.asarray(vals[0]), rvals)
+    assert int(dropped[0]) == 0
+
+
+def test_get_paths_identical_across_methods(kv_setup):
+    kv, keys = kv_setup
+    mesh = Mesh(np.array(jax.devices()[:1]), ("kv",))
+    dk, dv = kv.device_arrays()
+    q = jnp.asarray(keys[None, :32], jnp.int32)
+    outs = {m: store.sharded_get(mesh, "kv", dk, dv, q, method=m)
+            for m in ("redn", "one_sided", "two_sided")}
+    for m in ("one_sided", "two_sided"):
+        np.testing.assert_array_equal(np.asarray(outs["redn"][1]),
+                                      np.asarray(outs[m][1]))
+
+
+def test_rtt_model():
+    assert store.RTTS["redn"] == 1
+    assert store.RTTS["one_sided"] == 2
+    assert store.HOST_SERVICE["two_sided"]
+    assert not store.HOST_SERVICE["redn"]
+
+
+# --- isolation ------------------------------------------------------------------
+
+def test_token_bucket_limits_heavy_client():
+    st0 = isolation.init(n_clients=2, burst=4.0)
+    # client 0 fires 8 requests at t=0; client 1 fires 2
+    clients = jnp.asarray([0] * 8 + [1] * 2, jnp.int32)
+    st1, admitted = isolation.admit(st0, clients, 0.0, rate_per_us=0.001,
+                                    burst=4.0)
+    adm = np.asarray(admitted)
+    assert adm[:4].all() and not adm[4:8].any()    # heavy client capped
+    assert adm[8:].all()                           # light client unaffected
+
+    # after enough time the bucket refills
+    st2, admitted2 = isolation.admit(st1, jnp.asarray([0], jnp.int32),
+                                     8000.0, rate_per_us=0.001, burst=4.0)
+    assert bool(admitted2[0])
+
+
+# --- failure resiliency -----------------------------------------------------------
+
+def test_service_survives_host_crash():
+    items = [(k, [k * 3, k * 5]) for k in range(1, 9)]
+    svc = failure.DeviceResidentService.start(items)
+    assert svc.get(4).tolist() == [12, 20]
+    svc.crash_host()                       # Memcached dies
+    assert not svc.host_alive()
+    for k in range(1, 9):                  # zero-interruption serving
+        assert svc.get(k).tolist() == [k * 3, k * 5]
+    svc.restart_host()
+    assert svc.host_alive()
+    assert svc.get(2).tolist() == [6, 10]
+    assert svc.cold_restart_downtime_s() >= 2.0   # what vanilla would pay

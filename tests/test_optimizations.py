@@ -1,0 +1,203 @@
+"""Correctness tests for the beyond-paper optimization levers recorded in
+EXPERIMENTS.md §Perf: rolling window caches, grad wire format, EP specs."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import model as M
+from repro.train import loop as loop_lib
+from repro.train import optimizer as opt_lib
+
+
+def test_window_cache_decode_matches_full_cache():
+    """Rolling window cache must reproduce the full-cache decode logits,
+    including after the buffer wraps."""
+    base = registry.smoke_config("mixtral-8x7b")
+    base = dataclasses.replace(base, window=8)       # tiny window: wraps
+    params = M.init_params(jax.random.PRNGKey(0), base)
+    rng = np.random.RandomState(3)
+    b, s, n_extra = 2, 12, 6
+    toks = jnp.asarray(rng.randint(1, base.vocab_size, (b, s)), jnp.int32)
+    extra = jnp.asarray(rng.randint(1, base.vocab_size, (b, n_extra)),
+                        jnp.int32)
+    batch = {"tokens": toks}
+
+    outs = {}
+    for wincache in (False, True):
+        cfg = dataclasses.replace(base, window_cache=wincache)
+        s_max = s + n_extra + 2
+        last, caches, lengths = M.prefill(params, batch, cfg, s_max=s_max)
+        if wincache:
+            # rolling caches really are window-sized
+            k_shapes = [c["k"].shape[3] if False else c["k"].shape
+                        for c in jax.tree_util.tree_leaves(
+                            caches, is_leaf=lambda x: isinstance(x, dict)
+                            and "k" in x)]
+            # (G, B, KH, W, hd) stacked / (B, KH, W, hd) remainder
+            assert all(sh[-2] == cfg.window for sh in k_shapes), k_shapes
+        logits = []
+        for i in range(n_extra):
+            lengths = lengths + 1
+            lg, caches = M.decode_step(params, extra[:, i], caches,
+                                       lengths, cfg)
+            logits.append(lg)
+        outs[wincache] = jnp.stack(logits, 1)
+
+    np.testing.assert_allclose(np.asarray(outs[True]),
+                               np.asarray(outs[False]), atol=2e-3,
+                               rtol=2e-3)
+
+
+def test_window_cache_matches_parallel_forward():
+    """Rolling cache decode == the parallel forward with SWA masking."""
+    cfg = registry.smoke_config("mixtral-8x7b")
+    cfg = dataclasses.replace(cfg, window=8, window_cache=True)
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    rng = np.random.RandomState(5)
+    b, s = 2, 14
+    toks = jnp.asarray(rng.randint(1, cfg.vocab_size, (b, s + 2)),
+                       jnp.int32)
+    logits_full, _, _ = M.forward(params, {"tokens": toks}, cfg)
+
+    last, caches, lengths = M.prefill(params, {"tokens": toks[:, :s]},
+                                      cfg, s_max=s + 4)
+    for i in range(2):
+        lengths = lengths + 1
+        lg, caches = M.decode_step(params, toks[:, s + i], caches,
+                                   lengths, cfg)
+    np.testing.assert_allclose(np.asarray(lg),
+                               np.asarray(logits_full[:, -1]), atol=2e-3,
+                               rtol=2e-3)
+
+
+def test_kv_quant_attention_layer_exactness():
+    """int8 KV cache at the attention layer: ~1% cache error, decode
+    output within tight absolute tolerance of full precision."""
+    from repro.models import attention as A
+    cfg = registry.smoke_config("qwen3-1.7b")
+    p = A.init_attention(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(2, 10, cfg.d_model) * 0.3, jnp.float32)
+    x1 = jnp.asarray(rng.randn(2, 1, cfg.d_model) * 0.3, jnp.float32)
+    outs, caches = {}, {}
+    for quant in (False, True):
+        c = dataclasses.replace(cfg, kv_quant=quant)
+        o, cache = A.apply_attention(p, x, c, "global", return_cache=True,
+                                     s_max=12)
+        lengths = jnp.full((2,), 11, jnp.int32)
+        o1, _ = A.apply_attention_decode(p, x1, c, "global", cache,
+                                         lengths=lengths)
+        outs[quant], caches[quant] = np.asarray(o1), cache
+    assert caches[True]["k"].dtype == jnp.int8
+    deq = (np.asarray(caches[True]["k"], np.float32)
+           * np.asarray(caches[True]["ks"]))
+    cache_err = np.abs(deq - np.asarray(caches[False]["k"],
+                                        np.float32)).max()
+    assert cache_err < 0.05, cache_err          # int8 ~= 1% of range
+    np.testing.assert_allclose(outs[True], outs[False], atol=0.01)
+
+
+def test_kv_quant_full_model_shallow():
+    """2-layer model: quantized decode logits track full precision (deep
+    random nets amplify the 1% cache error chaotically, so depth is
+    controlled here; the layer-level test above bounds the per-layer
+    error exactly)."""
+    cfg = dataclasses.replace(registry.smoke_config("qwen3-1.7b"),
+                              num_layers=2)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(7)
+    b, s = 2, 12
+    toks = jnp.asarray(rng.randint(1, cfg.vocab_size, (b, s + 3)),
+                       jnp.int32)
+    outs = {}
+    for quant in (False, True):
+        c = dataclasses.replace(cfg, kv_quant=quant)
+        last, caches, lengths = M.prefill(params, {"tokens": toks[:, :s]},
+                                          c, s_max=s + 4)
+        for i in range(3):
+            lengths = lengths + 1
+            lg, caches = M.decode_step(params, toks[:, s + i], caches,
+                                       lengths, c)
+        outs[quant] = np.asarray(lg)
+    corr = np.corrcoef(outs[True].ravel(), outs[False].ravel())[0, 1]
+    assert corr > 0.98, corr
+    np.testing.assert_allclose(outs[True], outs[False], atol=0.05)
+
+
+def test_grad_wire_and_constraint_do_not_change_training_much():
+    """bf16 gradient wire: loss trajectory tracks the f32 baseline."""
+    cfg = registry.smoke_config("smollm-135m")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    ocfg = opt_lib.AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=50)
+    from repro.data.pipeline import TokenPipeline
+    pipe = TokenPipeline(cfg.vocab_size, 32, 8, seed=1)
+    batches = [{k: jnp.asarray(v) for k, v in pipe.batch_at(i).items()}
+               for i in range(6)]
+
+    traj = {}
+    for wire in (None, "bfloat16"):
+        p, o = params, opt_lib.init(params)
+        step = jax.jit(loop_lib.make_train_step(cfg, ocfg, microbatches=2,
+                                                wire_dtype=wire))
+        losses = []
+        for bt in batches:
+            p, o, m = step(p, o, bt)
+            losses.append(float(m["loss"]))
+        traj[wire] = losses
+    np.testing.assert_allclose(traj[None], traj["bfloat16"], rtol=0.02)
+
+
+def test_int8_moment_adamw_trains():
+    """8-bit Adam moments (no master): loss still descends; state is 8x
+    smaller — what lets 774 B-param llama4 train on a 16 GB/chip pod."""
+    cfg = registry.smoke_config("smollm-135m")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    ocfg = opt_lib.AdamWConfig(lr=1e-2, warmup_steps=3, total_steps=200,
+                               weight_decay=0.0, moments_dtype="int8",
+                               master=False)
+    opt = opt_lib.init(params, ocfg)
+    assert opt.master is None
+    leaves = jax.tree_util.tree_leaves(
+        opt.mu, is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+    assert all(l["q"].dtype == jnp.int8 for l in leaves)
+
+    from repro.data.pipeline import TokenPipeline
+    step = jax.jit(loop_lib.make_train_step(cfg, ocfg))
+    pipe = TokenPipeline(cfg.vocab_size, 32, 16, seed=3)
+    losses = []
+    for i in range(40):
+        b = {k: jnp.asarray(v) for k, v in pipe.batch_at(i).items()}
+        params, opt, m = step(params, opt, b)
+        losses.append(float(m["loss"]))
+    assert min(losses[-5:]) < losses[0] - 0.25, losses
+
+
+def test_ep_param_specs_shard_experts():
+    """EP rules map expert tensors' E dim to the data axis."""
+    import os
+    import subprocess
+    import sys
+    # needs >= 8 devices for a (2 data, 2 model)-divisible check; reuse
+    # the spec inference logically with a fake mesh via the 1-device mesh
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.distributed import sharding as shrules
+    from repro.distributed import specs as specs_lib
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    cfg = registry.smoke_config("mixtral-8x7b")
+    aparams = M.abstract_params(cfg)
+    with shrules.use_mesh(mesh, experts="data", fsdp=None) as rules:
+        specs = specs_lib.param_specs(aparams, mesh, rules)
+    moe_specs = [
+        s for path, s in jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=lambda x: isinstance(x, P))[0]
+        if "moe" in str(path) and "w_gate" in str(path)
+        and "shared" not in str(path)]
+    assert moe_specs, "no moe specs found"
+    # trailing dims: (..., E->data, d->None(fsdp off), f->model)
+    assert all(s[-3] == "data" and s[-1] == "model" for s in moe_specs), \
+        moe_specs
