@@ -57,6 +57,8 @@ def main():
     svc.crash_host()
     print(f"  get(5) = {svc.get(5).tolist()}  (host alive: "
           f"{svc.host_alive()})  <- zero-interruption")
+    batch = svc.get_many([1, 2, 3, 4]).tolist()
+    print(f"  get_many([1..4]) = {batch}  <- one device call, host dead")
     svc.restart_host()
     print(f"  vanilla Memcached would have been down "
           f"{svc.cold_restart_downtime_s():.2f}s")

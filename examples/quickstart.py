@@ -46,6 +46,9 @@ def demo_hash():
         print(f"  get({k}) -> {val.tolist()} "
               f"({float(machine.total_time_us(out)):.2f} modeled us, "
               f"{int(out.steps)} WRs)")
+    vals, _ = off.get_many([1001, 2002, 3003])
+    print(f"  get_many([1001, 2002, 3003]) -> {vals.tolist()} "
+          f"(one vmapped run)")
 
 
 def demo_recycling():

@@ -1,0 +1,36 @@
+"""Version tolerance for JAX APIs this repo uses across releases.
+
+``jax.shard_map`` only exists as a top-level export (with the ``check_vma``
+keyword) in newer JAX; on the 0.4.x line it lives at
+``jax.experimental.shard_map.shard_map`` and the same knob is spelled
+``check_rep``.  All in-repo call sites go through :func:`shard_map` so the
+rest of the codebase can be written against the modern API.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def pallas_tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` across versions.
+
+    Newer JAX calls it ``CompilerParams``; the 0.4.x line spells it
+    ``TPUCompilerParams``.  Same fields either way.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma=None):
+    """``jax.shard_map`` with the modern signature on any supported JAX."""
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kw)

@@ -1,6 +1,7 @@
 """RedN core: the paper's computational framework (self-modifying RDMA
 chains, Turing-complete constructs) re-hosted on JAX/TPU."""
-from . import assembler, constructs, cost, isa, machine  # noqa: F401
+from . import assembler, constructs, cost, engine, isa, machine  # noqa: F401
 from .assembler import Program, WQBuilder, WRRef  # noqa: F401
-from .machine import (MachineSpec, VMState, deliver, enable, init_state,  # noqa: F401
-                      ring, run, run_batch, step, total_time_us)
+from .engine import ChainEngine  # noqa: F401
+from .machine import (MachineSpec, VMState, deliver, deliver_many, enable,  # noqa: F401
+                      init_state, ring, run, run_batch, step, total_time_us)

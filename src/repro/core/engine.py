@@ -1,0 +1,233 @@
+"""ChainEngine — compile-cached, batched execution of RedN chains.
+
+The paper's headline numbers come from offload chains that serve *streams*
+of requests with zero host involvement.  The seed code served exactly one
+request per :func:`machine.run` call and round-tripped through numpy per
+key; this module is the batched front door that replaces that pattern:
+
+* **Compile caching** — engines are memoized per ``(spec, backend)`` via
+  :meth:`ChainEngine.for_spec`, and every entry point bottoms out in jitted
+  functions whose only static arguments are the spec and shapes, so a
+  program compiles once per (spec, batch-shape) and then serves any number
+  of batches.
+* **`run_many`** — one :func:`machine.deliver_many` (stack N payloads into
+  a vmapped ``VMState`` batch in one shot) followed by one vmapped run:
+  the engine behind ``HashLookupOffload.get_many`` /
+  ``ListTraversalOffload.get_many``.
+* **`serve_stream`** — a ``lax.scan`` over payloads against *persistent*
+  state (the §3.4 recycled-WQ server): requests chain through the same
+  machine exactly as N sequential ``serve()`` calls — same responses, same
+  on-chain lap counters — but in a single device call with no host
+  round-trips between requests.
+* **Pallas backend** — for single-WQ programs (the recycled get server's
+  lap loop, straight-line chains) ``backend="pallas"`` runs the batch as a
+  grid of client contexts through the widened managed-WQ kernel in
+  :mod:`repro.kernels.chain_vm`, with the interpreter as oracle.
+
+Migration (single-request → batched)::
+
+    # before: N numpy round-trips
+    vals = [off.get(k)[0] for k in keys]
+    # after: one materialize, one vmapped run
+    vals, out = off.get_many(keys)
+
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from . import isa, machine
+
+_INTERP_BACKENDS = ("interp",)
+_PALLAS_BACKENDS = ("pallas", "pallas-interpret")
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2, 4))
+def _run_many(spec, state, wq, payloads, max_steps):
+    batch = machine.deliver_many(state, wq, payloads)
+    # each context gets max_steps of *fresh* fuel, like serve() does — a
+    # reused persistent state must not carry its cumulative step count in
+    batch = batch._replace(steps=jnp.zeros_like(batch.steps))
+    return machine.run_batch(spec, batch, max_steps)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2, 4, 5, 6))
+def _serve_stream(spec, state, wq, payloads, resp, resp_len, max_steps):
+    def step_fn(st, pay):
+        st = machine.deliver(st, wq, pay)
+        st = st._replace(steps=jnp.zeros((), jnp.int32))
+        out = machine.run(spec, st, max_steps)
+        val = lax.dynamic_slice(out.mem, (resp,), (resp_len,))
+        return out, val
+
+    return lax.scan(step_fn, state, payloads)
+
+
+def _pad_payloads(payloads) -> jnp.ndarray:
+    p = np.asarray(payloads, np.int32)
+    if p.ndim == 1 and p.size == 0:
+        p = p.reshape(0, 0)          # literal []: empty batch, no requests
+    if p.ndim != 2:
+        raise ValueError(f"payloads must be (N, k), got shape {p.shape}")
+    if p.shape[1] > isa.MSG_WORDS:
+        raise ValueError(f"payload of {p.shape[1]} words exceeds MSG_WORDS")
+    out = np.zeros((p.shape[0], isa.MSG_WORDS), np.int32)
+    out[:, : p.shape[1]] = p
+    return jnp.asarray(out)
+
+
+class ChainEngine:
+    """Batched, compile-cached executor for one chain program (spec).
+
+    Backends:
+
+    * ``"interp"`` (default) — the multi-WQ discrete-event interpreter in
+      :mod:`repro.core.machine` (full ISA, latency clocks).
+    * ``"pallas"`` — the single-WQ managed-chain Pallas kernel
+      (:mod:`repro.kernels.chain_vm`); compiles on TPU, falls back to
+      pallas interpret mode elsewhere.  Models memory, queue counters,
+      steps, and client responses, but not the latency cost model: the
+      ``clock``/``last_comp_time`` fields and the ``verb_counts``
+      histogram are passed through unchanged.
+    * ``"pallas-interpret"`` — force pallas interpret mode (CPU oracle
+      checks).
+    """
+
+    _cache: dict = {}
+
+    def __init__(self, spec: machine.MachineSpec, backend: str = "interp"):
+        if backend not in _INTERP_BACKENDS + _PALLAS_BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}")
+        if backend in _PALLAS_BACKENDS and spec.num_wqs != 1:
+            raise ValueError(
+                "pallas backend supports single-WQ programs only "
+                f"(spec has {spec.num_wqs} WQs)")
+        self.spec = spec
+        self.backend = backend
+        self._send_checked = False   # one-shot pallas-subset validation
+
+    @classmethod
+    def for_spec(cls, spec: machine.MachineSpec,
+                 backend: str = "interp") -> "ChainEngine":
+        key = (spec, backend)
+        eng = cls._cache.get(key)
+        if eng is None:
+            eng = cls._cache[key] = cls(spec, backend)
+        return eng
+
+    # -- single-machine paths (compile-cached via the jitted machine.run) ----
+    def run(self, state: machine.VMState,
+            max_steps: int = 4096) -> machine.VMState:
+        return machine.run(self.spec, state, max_steps)
+
+    def run_batch(self, states: machine.VMState,
+                  max_steps: int = 4096) -> machine.VMState:
+        """Run a batched (leading-dim) ``VMState`` on the selected backend."""
+        if self.backend in _INTERP_BACKENDS:
+            return machine.run_batch(self.spec, states, max_steps)
+        return self._run_batch_pallas(states, max_steps)
+
+    # -- batched request paths ----------------------------------------------
+    def deliver_many(self, state: machine.VMState, wq: int,
+                     payloads) -> machine.VMState:
+        return machine.deliver_many(state, wq, _pad_payloads(payloads))
+
+    def run_many(self, state: machine.VMState, wq: int, payloads,
+                 max_steps: int = 4096) -> machine.VMState:
+        """Deliver N payloads to `wq` and run all N contexts, batched.
+
+        Every context gets ``max_steps`` of fresh fuel (the cumulative
+        ``steps`` counter of a reused persistent state is reset, exactly
+        as the single-request ``serve()`` path does).
+        """
+        pays = _pad_payloads(payloads)
+        if self.backend in _INTERP_BACKENDS:
+            return _run_many(self.spec, state, wq, pays, max_steps)
+        batch = machine.deliver_many(state, wq, pays)
+        batch = batch._replace(steps=jnp.zeros_like(batch.steps))
+        return self._run_batch_pallas(batch, max_steps)
+
+    def serve_stream(self, state: machine.VMState, wq: int, payloads,
+                     resp_region: int, resp_len: int,
+                     max_steps: int = 64):
+        """Stream N requests through *persistent* state (recycled server).
+
+        Returns ``(final_state, values)`` with ``values`` of shape
+        ``(N, resp_len)`` — the response region snapshot after each
+        request, exactly as N sequential ``serve()`` calls would observe
+        (lap counters and all), in one compiled scan.
+
+        Always runs on the interpreter regardless of ``backend``: the
+        scan chains one persistent machine across requests, which the
+        grid-of-independent-contexts pallas kernel does not model.
+        """
+        pays = _pad_payloads(payloads)
+        return _serve_stream(self.spec, state, wq, pays, resp_region,
+                             resp_len, max_steps)
+
+    # -- pallas backend -------------------------------------------------------
+    def _run_batch_pallas(self, states: machine.VMState,
+                          max_steps: int) -> machine.VMState:
+        from ..kernels.chain_vm import ops as chain_ops
+
+        spec = self.spec
+        n = states.mem.shape[0]
+        cap = states.msg_buf.shape[2]
+        msgs = states.msg_buf[:, 0].reshape(n, cap * isa.MSG_WORDS)
+
+        # inter-QP SEND (opb >= 0) has no peer on a single queue and is
+        # outside the pallas subset — reject posted ones up front rather
+        # than silently no-op'ing them.  Off-TPU (interpret mode) every
+        # concrete batch is validated; on the compiled TPU fast path the
+        # check runs once per engine to avoid a recurring device->host
+        # sync, relying on the code region being fixed per program.  A
+        # chain that self-modifies a WR *into* such a SEND mid-run is not
+        # detectable here, and the check is skipped under tracing.
+        recheck = jax.default_backend() != "tpu" or not self._send_checked
+        if recheck and not isinstance(states.mem, jax.core.Tracer):
+            base, size = spec.wq_bases[0], spec.wq_sizes[0]
+            stop = base + size * isa.WR_WORDS
+            img = np.asarray(states.mem[:, base:stop])
+            opcodes = ((img[:, isa.F_CTRL::isa.WR_WORDS] >> isa.ID_BITS)
+                       & 0x7F)
+            opbs = img[:, isa.F_OPB::isa.WR_WORDS]
+            if np.any((opcodes == isa.SEND) & (opbs >= 0)):
+                raise ValueError(
+                    "inter-QP SEND (opb >= 0) is outside the pallas "
+                    "single-WQ subset; use the interp backend")
+            self._send_checked = True
+
+        # fuel: the interpreter's run() treats the cumulative steps
+        # counter as consumed fuel (cond: steps < max_steps) — mirror it
+        fuel = jnp.clip(max_steps - states.steps, 0, max_steps)
+        inits = jnp.stack(
+            [states.head[:, 0], states.tail[:, 0],
+             states.enable_limit[:, 0], states.completions[:, 0],
+             states.msg_head[:, 0], states.msg_tail[:, 0],
+             fuel.astype(jnp.int32),
+             states.halted.astype(jnp.int32)], axis=1)
+        impl = ("interpret" if self.backend == "pallas-interpret"
+                or jax.default_backend() != "tpu" else "pallas")
+        mem, stats = chain_ops.run_managed(
+            states.mem, msgs, inits, wq_base=spec.wq_bases[0],
+            n_wrs=spec.wq_sizes[0], managed=bool(spec.managed[0]),
+            max_steps=max_steps, impl=impl)
+        # queue/response counters come back from the kernel; executed-WR
+        # counts are the per-row head advance (one head bump per executed
+        # WR, exactly like the interpreter's steps counter).  The latency
+        # clocks and verb_counts histogram are interpreter-only and are
+        # passed through unchanged.
+        return states._replace(
+            mem=mem,
+            head=stats[:, 0:1],
+            enable_limit=stats[:, 1:2],
+            completions=stats[:, 2:3],
+            msg_head=stats[:, 3:4],
+            halted=stats[:, 4] > 0,
+            responses=states.responses + stats[:, 6],
+            steps=states.steps + (stats[:, 0] - states.head[:, 0]))

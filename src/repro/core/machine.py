@@ -22,6 +22,14 @@ This is the functional model of "what the RNIC's processing units do":
 Everything is `lax`-traceable: `run()` is a `lax.while_loop` and the whole
 machine can be `jax.jit`-ed and `jax.vmap`-ed (batched clients — the
 benchmark harness runs thousands of independent QP contexts this way).
+
+Execution is *fused*: per-WR eligibility is computed once per iteration and
+threaded through the while-loop carry (the quiescence test reuses the same
+result instead of recomputing it in `cond`), the spec/cost lookup tables are
+closure constants of a per-spec specialized step (see :func:`_fused_step`),
+and the no-op guard selects only the state fields a step can touch.  The
+batched entry points (`run_batch`, `deliver_many`) are what
+:class:`repro.core.engine.ChainEngine` builds its `get_many` fast path on.
 """
 from __future__ import annotations
 
@@ -68,10 +76,16 @@ class VMState(NamedTuple):
     responses: jnp.ndarray      # i32[] count of SEND-to-client responses
 
 
+# Guard pad past the addressable image: lets every copy verb *and* the
+# SEND payload gather use a plain dynamic_slice with no per-step
+# concatenate/bounds logic (reads past mem_words land in zeros).
+GUARD_WORDS = max(isa.MAX_COPY, isa.MSG_WORDS)
+
+
 def init_state(spec: MachineSpec, mem_image: np.ndarray,
                tails: Sequence[int], enable_limits: Sequence[int]) -> VMState:
     n = spec.num_wqs
-    mem = np.zeros(spec.mem_words + isa.MAX_COPY, dtype=np.int32)
+    mem = np.zeros(spec.mem_words + GUARD_WORDS, dtype=np.int32)
     mem[: len(mem_image)] = mem_image
     return VMState(
         mem=jnp.asarray(mem),
@@ -103,12 +117,43 @@ def ring(state: VMState, wq: int, count: int = 1) -> VMState:
 def deliver(state: VMState, wq: int, payload) -> VMState:
     """Client SEND arriving at `wq`'s QP: lands in the message queue and is
     consumed by a pre-posted RECV (Fig. 3's trigger)."""
+    payload = jnp.asarray(payload, jnp.int32)
     pay = jnp.zeros(isa.MSG_WORDS, jnp.int32)
-    pay = pay.at[: len(payload)].set(jnp.asarray(payload, jnp.int32))
+    pay = pay.at[: payload.shape[0]].set(payload)
     slot = state.msg_tail[wq] % state.msg_buf.shape[1]
     return state._replace(
         msg_buf=state.msg_buf.at[wq, slot].set(pay),
         msg_tail=state.msg_tail.at[wq].add(1),
+    )
+
+
+def deliver_many(state: VMState, wq: int, payloads) -> VMState:
+    """Batched deliver: stack N client SENDs into a vmapped ``VMState``.
+
+    ``payloads`` is ``(N, k)`` (k <= MSG_WORDS).  Every leaf of ``state`` is
+    broadcast to a leading batch dim of N and row ``i`` receives
+    ``payloads[i]`` on ``wq`` — one allocation, no per-request host loop.
+    The result feeds :func:`run_batch` (or ``ChainEngine.run_many``).
+    """
+    payloads = jnp.asarray(payloads, jnp.int32)
+    if payloads.ndim != 2:
+        raise ValueError(
+            f"payloads must be a (N, k) batch, got shape {payloads.shape}; "
+            "use deliver() for a single request")
+    n, k = payloads.shape
+    if k > isa.MSG_WORDS:
+        raise ValueError(f"payload of {k} words exceeds MSG_WORDS")
+    if k == isa.MSG_WORDS:
+        pays = payloads                  # already padded (the engine path)
+    else:
+        pays = jnp.zeros((n, isa.MSG_WORDS),
+                         jnp.int32).at[:, :k].set(payloads)
+    batch = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (n,) + a.shape), state)
+    slot = state.msg_tail[wq] % state.msg_buf.shape[1]
+    return batch._replace(
+        msg_buf=batch.msg_buf.at[:, wq, slot].set(pays),
+        msg_tail=batch.msg_tail.at[:, wq].add(1),
     )
 
 
@@ -138,157 +183,205 @@ def _maybe_store(mem, addr, value):
     return mem.at[safe].set(jnp.where(addr >= 0, value, cur))
 
 
+@functools.lru_cache(maxsize=None)
+def _fused_step(spec: MachineSpec):
+    """Spec-specialized (eligibility, execute) pair.
+
+    All static lookup tables — WQ geometry, ordering modes, and the cost
+    model's fetch/exec tables — are closure constants built once per spec,
+    not rebuilt inside the hot loop.  ``execute`` consumes an eligibility
+    already computed for exactly the state it steps, so the fused ``run``
+    evaluates eligibility once per iteration (the old cond/body split
+    evaluated it twice).
+    """
+    # numpy (not jnp) constants: they embed as trace-local constants in any
+    # jit/vmap context without leaking tracers across the lru_cache.
+    bases = np.asarray(spec.wq_bases, np.int32)
+    sizes = np.asarray(spec.wq_sizes, np.int32)
+    managed = np.asarray(spec.managed, bool)
+    orderings = np.asarray(spec.orderings, np.int32)
+    fetch_tab = np.asarray(cost.FETCH_BY_ORDERING, np.float32)
+    exec_tab = np.asarray(cost.EXEC_COST, np.float32)
+    nwq_minus1 = spec.num_wqs - 1
+
+    def eligibility(s: VMState):
+        """Per-WQ: (eligible, ctrl-word addr of the head WR, head opcode)."""
+        idx = s.head % sizes
+        addr = bases + idx * isa.WR_WORDS
+        limit = jnp.where(managed, jnp.minimum(s.tail, s.enable_limit),
+                          s.tail)
+        has_work = s.head < limit
+
+        ctrl = s.mem[addr]
+        opcode = (ctrl >> isa.ID_BITS) & 0x7F
+        opa = s.mem[addr + isa.F_OPA]
+        opb = s.mem[addr + isa.F_OPB]
+
+        tgt = jnp.clip(opb, 0, nwq_minus1)
+        wait_ok = jnp.where(opcode == isa.WAIT,
+                            s.completions[tgt] >= opa, True)
+        recv_ok = jnp.where(opcode == isa.RECV,
+                            s.msg_tail > s.msg_head, True)
+        eligible = has_work & wait_ok & recv_ok & ~s.halted
+        return eligible, addr, opcode
+
+    def execute(s: VMState, eligible, addrs, guard: bool = True) -> VMState:
+        w = jnp.argmin(jnp.where(eligible, s.clock, jnp.inf)).astype(
+            jnp.int32)
+
+        addr = addrs[w]
+        ctrl = s.mem[addr + isa.F_CTRL]
+        opcode = jnp.clip((ctrl >> isa.ID_BITS) & 0x7F, 0,
+                          isa.NUM_OPCODES - 1)
+        flags = s.mem[addr + isa.F_FLAGS]
+        src = s.mem[addr + isa.F_SRC]
+        dst = s.mem[addr + isa.F_DST]
+        ln = s.mem[addr + isa.F_LEN]
+        opa = s.mem[addr + isa.F_OPA]
+        opb = s.mem[addr + isa.F_OPB]
+        aux = s.mem[addr + isa.F_AUX]
+        tgt = jnp.clip(opb, 0, nwq_minus1)
+
+        # --- verb semantics: branch-free effect pipeline -------------------
+        # lax.switch under vmap evaluates *every* branch and selects — 13
+        # full-state materializations per step.  Instead each verb is
+        # decomposed into masked micro-effects applied exactly once:
+        #   1. a block copy of <= MAX_COPY words    (WRITE/READ/SEND-resp)
+        #   2. a scalar read-modify-write store     (WRITE_IMM/CAS/ADD/...)
+        #   3. a return-old store                   (CAS/ADD with src >= 0)
+        #   4. a <= MAX_SCATTER payload scatter     (RECV)
+        #   5. msg/enable/halt side-channel updates (SEND/ENABLE/HALT)
+        # Inert verbs degenerate to identity writes, so semantics are
+        # bit-identical to the branch dispatch.
+        is_copy = ((opcode == isa.WRITE) | (opcode == isa.READ)
+                   | ((opcode == isa.SEND) & (opb < 0)))
+        mem = _masked_copy(s.mem, src, dst, jnp.where(is_copy, ln, 0))
+
+        # scalar RMW store (identity `old` write when the verb has none)
+        d = jnp.maximum(dst, 0)
+        old = mem[d]
+        sval = old
+        sval = jnp.where(opcode == isa.WRITE_IMM, opa, sval)
+        sval = jnp.where(opcode == isa.CAS,
+                         jnp.where(old == opa, opb, old), sval)
+        sval = jnp.where(opcode == isa.ADD, old + opa, sval)
+        sval = jnp.where(opcode == isa.MAX, jnp.maximum(old, opa), sval)
+        sval = jnp.where(opcode == isa.MIN, jnp.minimum(old, opa), sval)
+        mem = mem.at[d].set(sval)
+
+        # atomics' return-old path
+        ret_addr = jnp.where(
+            (opcode == isa.CAS) | (opcode == isa.ADD), src, -1)
+        mem = _maybe_store(mem, ret_addr, old)
+
+        # RECV: scatter the head message through the table at `aux`
+        is_recv = opcode == isa.RECV
+        rslot = s.msg_head[w] % s.msg_buf.shape[1]
+        rpayload = s.msg_buf[w, rslot]
+        a = jnp.maximum(aux, 0)
+        n_scatter = jnp.where(
+            is_recv, jnp.clip(mem[a], 0, isa.MAX_SCATTER), 0)
+
+        def scatter(i, m):
+            sd = jnp.maximum(m[a + 1 + i], 0)
+            return m.at[sd].set(
+                jnp.where(i < n_scatter, rpayload[i], m[sd]))
+
+        mem = lax.fori_loop(0, isa.MAX_SCATTER, scatter, mem)
+
+        # SEND to a peer QP (opb >= 0): enqueue payload on its msg queue.
+        # The GUARD_WORDS pad makes this gather a plain dynamic_slice.
+        send_msg = (opcode == isa.SEND) & (opb >= 0)
+        payload = lax.dynamic_slice(
+            s.mem, (jnp.maximum(src, 0),), (isa.MSG_WORDS,))
+        mslot = s.msg_tail[tgt] % s.msg_buf.shape[1]
+        msg_buf = s.msg_buf.at[tgt, mslot].set(
+            jnp.where(send_msg, payload, s.msg_buf[tgt, mslot]))
+        msg_tail = s.msg_tail.at[tgt].add(jnp.where(send_msg, 1, 0))
+        msg_head = s.msg_head.at[w].add(jnp.where(is_recv, 1, 0))
+        responses = s.responses + jnp.where(
+            (opcode == isa.SEND) & (opb < 0), 1, 0)
+
+        # ENABLE raises the target's monotonic watermark; HALT stops us
+        enable_limit = s.enable_limit.at[tgt].set(jnp.where(
+            opcode == isa.ENABLE,
+            jnp.maximum(s.enable_limit[tgt], opa), s.enable_limit[tgt]))
+        halted = s.halted | (opcode == isa.HALT)
+
+        new = s._replace(mem=mem, msg_buf=msg_buf, msg_tail=msg_tail,
+                         msg_head=msg_head, responses=responses,
+                         enable_limit=enable_limit, halted=halted)
+
+        # --- bookkeeping: head, completions, clock, stats ------------------
+        # Pre-posted chains parked on a WAIT/RECV (the paper's "pre-post
+        # chains, client triggers" pattern) don't pay the doorbell+fetch at
+        # trigger time — the WQE was fetched when the chain was posted.
+        parked = (opcode == isa.WAIT) | (opcode == isa.RECV)
+        first = s.head[w] == 0
+        fetch = jnp.where(
+            first & parked, 0.0,
+            jnp.where(first, cost.DOORBELL_BASE,
+                      jnp.asarray(fetch_tab)[jnp.asarray(orderings)[w]]))
+        exec_cost = jnp.asarray(exec_tab)[opcode]
+        t = s.clock[w] + fetch + exec_cost
+        # WAIT synchronizes with the producer's completion time (Fig 2a)
+        t = jnp.where(opcode == isa.WAIT,
+                      jnp.maximum(t, new.last_comp_time[tgt]), t)
+
+        signaled = (flags & isa.FLAG_SUPPRESS_COMPLETION) == 0
+        completions = new.completions.at[w].add(jnp.where(signaled, 1, 0))
+        last_ct = new.last_comp_time.at[w].set(
+            jnp.where(signaled, t, new.last_comp_time[w]))
+
+        new = new._replace(
+            head=new.head.at[w].add(1),
+            completions=completions,
+            last_comp_time=last_ct,
+            clock=new.clock.at[w].set(t),
+            steps=new.steps + 1,
+            verb_counts=new.verb_counts.at[opcode].add(1),
+        )
+        # if nothing was eligible, this step is a no-op; only the fields a
+        # step can touch are selected — `tail` is host-owned and never
+        # written.  The fused `run` skips the guard entirely: its cond
+        # guarantees eligibility, and under vmap the while_loop batching
+        # rule masks finished machines itself.
+        if not guard:
+            return new
+        return _select_touched(jnp.any(eligible), new, s)
+
+    return eligibility, execute
+
+
+def _select_touched(pred, new: VMState, old: VMState) -> VMState:
+    sel = lambda a, b: jnp.where(pred, a, b)   # noqa: E731
+    return old._replace(
+        mem=sel(new.mem, old.mem),
+        head=sel(new.head, old.head),
+        enable_limit=sel(new.enable_limit, old.enable_limit),
+        completions=sel(new.completions, old.completions),
+        last_comp_time=sel(new.last_comp_time, old.last_comp_time),
+        msg_buf=sel(new.msg_buf, old.msg_buf),
+        msg_head=sel(new.msg_head, old.msg_head),
+        msg_tail=sel(new.msg_tail, old.msg_tail),
+        clock=sel(new.clock, old.clock),
+        steps=sel(new.steps, old.steps),
+        halted=sel(new.halted, old.halted),
+        verb_counts=sel(new.verb_counts, old.verb_counts),
+        responses=sel(new.responses, old.responses))
+
+
 def _eligibility(spec: MachineSpec, s: VMState):
-    """Per-WQ: (eligible, ctrl-word addr of the head WR)."""
-    bases = jnp.asarray(spec.wq_bases, jnp.int32)
-    sizes = jnp.asarray(spec.wq_sizes, jnp.int32)
-    managed = jnp.asarray(spec.managed, jnp.bool_)
-
-    idx = s.head % sizes
-    addr = bases + idx * isa.WR_WORDS
-    limit = jnp.where(managed, jnp.minimum(s.tail, s.enable_limit), s.tail)
-    has_work = s.head < limit
-
-    ctrl = s.mem[addr]
-    opcode = (ctrl >> isa.ID_BITS) & 0x7F
-    opa = s.mem[addr + isa.F_OPA]
-    opb = s.mem[addr + isa.F_OPB]
-
-    tgt = jnp.clip(opb, 0, spec.num_wqs - 1)
-    wait_ok = jnp.where(opcode == isa.WAIT, s.completions[tgt] >= opa, True)
-    recv_ok = jnp.where(opcode == isa.RECV, s.msg_tail > s.msg_head, True)
-    eligible = has_work & wait_ok & recv_ok & ~s.halted
-    return eligible, addr, opcode
+    """Per-WQ: (eligible, ctrl-word addr of the head WR, head opcode)."""
+    eligibility, _ = _fused_step(spec)
+    return eligibility(s)
 
 
 def step(spec: MachineSpec, s: VMState) -> VMState:
-    eligible, addrs, opcodes = _eligibility(spec, s)
-    any_eligible = jnp.any(eligible)
-    w = jnp.argmin(jnp.where(eligible, s.clock, jnp.inf)).astype(jnp.int32)
-
-    addr = addrs[w]
-    ctrl = s.mem[addr + isa.F_CTRL]
-    opcode = jnp.clip((ctrl >> isa.ID_BITS) & 0x7F, 0, isa.NUM_OPCODES - 1)
-    flags = s.mem[addr + isa.F_FLAGS]
-    src = s.mem[addr + isa.F_SRC]
-    dst = s.mem[addr + isa.F_DST]
-    ln = s.mem[addr + isa.F_LEN]
-    opa = s.mem[addr + isa.F_OPA]
-    opb = s.mem[addr + isa.F_OPB]
-    aux = s.mem[addr + isa.F_AUX]
-    tgt = jnp.clip(opb, 0, spec.num_wqs - 1)
-
-    # --- verb semantics, dispatched via lax.switch -------------------------
-    def do_noop(s):
-        return s
-
-    def do_write(s):
-        return s._replace(mem=_masked_copy(s.mem, src, dst, ln))
-
-    def do_write_imm(s):
-        return s._replace(mem=s.mem.at[jnp.maximum(dst, 0)].set(opa))
-
-    def do_read(s):
-        return s._replace(mem=_masked_copy(s.mem, src, dst, ln))
-
-    def do_send(s):
-        # opb >= 0: inter-QP message; opb < 0: response to the client
-        payload = lax.dynamic_slice(
-            jnp.concatenate([s.mem, jnp.zeros(isa.MSG_WORDS, jnp.int32)]),
-            (jnp.maximum(src, 0),), (isa.MSG_WORDS,))
-        slot = s.msg_tail[tgt] % s.msg_buf.shape[1]
-        to_qp = s._replace(
-            msg_buf=s.msg_buf.at[tgt, slot].set(payload),
-            msg_tail=s.msg_tail.at[tgt].add(1))
-        to_client = s._replace(
-            mem=_masked_copy(s.mem, src, dst, ln),
-            responses=s.responses + 1)
-        return jax.tree_util.tree_map(
-            lambda a, b: jnp.where(opb >= 0, a, b), to_qp, to_client)
-
-    def do_recv(s):
-        slot = s.msg_head[w] % s.msg_buf.shape[1]
-        payload = s.msg_buf[w, slot]
-        n = jnp.clip(s.mem[jnp.maximum(aux, 0)], 0, isa.MAX_SCATTER)
-
-        def scatter(i, mem):
-            d = mem[jnp.maximum(aux, 0) + 1 + i]
-            d = jnp.maximum(d, 0)
-            return mem.at[d].set(jnp.where(i < n, payload[i], mem[d]))
-
-        mem = lax.fori_loop(0, isa.MAX_SCATTER, scatter, s.mem)
-        return s._replace(mem=mem, msg_head=s.msg_head.at[w].add(1))
-
-    def do_cas(s):
-        old = s.mem[jnp.maximum(dst, 0)]
-        newv = jnp.where(old == opa, opb, old)
-        mem = s.mem.at[jnp.maximum(dst, 0)].set(newv)
-        return s._replace(mem=_maybe_store(mem, src, old))
-
-    def do_add(s):
-        old = s.mem[jnp.maximum(dst, 0)]
-        mem = s.mem.at[jnp.maximum(dst, 0)].set(old + opa)
-        return s._replace(mem=_maybe_store(mem, src, old))
-
-    def do_max(s):
-        old = s.mem[jnp.maximum(dst, 0)]
-        return s._replace(mem=s.mem.at[jnp.maximum(dst, 0)].set(
-            jnp.maximum(old, opa)))
-
-    def do_min(s):
-        old = s.mem[jnp.maximum(dst, 0)]
-        return s._replace(mem=s.mem.at[jnp.maximum(dst, 0)].set(
-            jnp.minimum(old, opa)))
-
-    def do_wait(s):
-        # eligibility already guaranteed completions[tgt] >= opa;
-        # the clock sync happens below.
-        return s
-
-    def do_enable(s):
-        new = jnp.maximum(s.enable_limit[tgt], opa)
-        return s._replace(enable_limit=s.enable_limit.at[tgt].set(new))
-
-    def do_halt(s):
-        return s._replace(halted=jnp.ones((), jnp.bool_))
-
-    branches = [do_noop, do_write, do_write_imm, do_read, do_send, do_recv,
-                do_cas, do_add, do_max, do_min, do_wait, do_enable, do_halt]
-    new = lax.switch(opcode, branches, s)
-
-    # --- bookkeeping: head, completions, clock, stats ----------------------
-    # Pre-posted chains parked on a WAIT/RECV (the paper's "pre-post
-    # chains, client triggers" pattern) don't pay the doorbell+fetch at
-    # trigger time — the WQE was fetched when the chain was posted.
-    orderings = jnp.asarray(spec.orderings, jnp.int32)
-    parked = (opcode == isa.WAIT) | (opcode == isa.RECV)
-    first = s.head[w] == 0
-    fetch = jnp.where(
-        first & parked, 0.0,
-        jnp.where(first, cost.DOORBELL_BASE,
-                  jnp.asarray(cost.FETCH_BY_ORDERING)[orderings[w]]))
-    exec_cost = jnp.asarray(cost.EXEC_COST)[opcode]
-    t = s.clock[w] + fetch + exec_cost
-    # WAIT synchronizes with the producer's completion time (Fig 2a)
-    t = jnp.where(opcode == isa.WAIT, jnp.maximum(t, new.last_comp_time[tgt]), t)
-
-    signaled = (flags & isa.FLAG_SUPPRESS_COMPLETION) == 0
-    completions = new.completions.at[w].add(jnp.where(signaled, 1, 0))
-    last_ct = new.last_comp_time.at[w].set(
-        jnp.where(signaled, t, new.last_comp_time[w]))
-
-    new = new._replace(
-        head=new.head.at[w].add(1),
-        completions=completions,
-        last_comp_time=last_ct,
-        clock=new.clock.at[w].set(t),
-        steps=new.steps + 1,
-        verb_counts=new.verb_counts.at[opcode].add(1),
-    )
-    # if nothing was eligible, this step is a no-op (guards vmap batches
-    # where some machines quiesce before others)
-    return jax.tree_util.tree_map(
-        lambda a, b: jnp.where(any_eligible, a, b), new, s)
+    """One scheduling step (standalone form; `run` uses the fused loop)."""
+    eligibility, execute = _fused_step(spec)
+    eligible, addrs, _ = eligibility(s)
+    return execute(s, eligible, addrs)
 
 
 def quiescent(spec: MachineSpec, s: VMState) -> jnp.ndarray:
@@ -298,12 +391,27 @@ def quiescent(spec: MachineSpec, s: VMState) -> jnp.ndarray:
 
 @functools.partial(jax.jit, static_argnums=(0, 2))
 def run(spec: MachineSpec, state: VMState, max_steps: int = 4096) -> VMState:
-    """Run until quiescence / HALT / fuel exhaustion."""
+    """Run until quiescence / HALT / fuel exhaustion.
 
-    def cond(s):
-        return (~s.halted) & (~quiescent(spec, s)) & (s.steps < max_steps)
+    Fused loop: the eligibility of the *current* state rides in the carry,
+    so quiescence is read off the carry instead of re-deriving it in
+    ``cond`` — one eligibility evaluation per executed WR.
+    """
+    eligibility, execute = _fused_step(spec)
 
-    return lax.while_loop(cond, lambda s: step(spec, s), state)
+    def cond(carry):
+        s, eligible, _ = carry
+        return jnp.any(eligible) & (~s.halted) & (s.steps < max_steps)
+
+    def body(carry):
+        s, eligible, addrs = carry
+        new = execute(s, eligible, addrs, guard=False)
+        e2, a2, _ = eligibility(new)
+        return new, e2, a2
+
+    elig0, addrs0, _ = eligibility(state)
+    out, _, _ = lax.while_loop(cond, body, (state, elig0, addrs0))
+    return out
 
 
 def run_batch(spec: MachineSpec, states: VMState,

@@ -15,6 +15,13 @@
 * :func:`build_recycled_get_server` — a §3.4 WQ-recycled *get* server: the
   chain loops forever (RECV-triggered laps, self-re-arming), which is what
   survives host process/OS crashes in §5.6.
+
+All offloads execute through :class:`repro.core.engine.ChainEngine`
+(compile-cached per spec).  The single-request ``get()``/``serve()`` entry
+points remain for latency-style use; throughput callers should use the
+batched ``get_many()``/``serve_many()`` — one ``materialize()`` and one
+vmapped (or scanned, for the persistent recycled server) device call for
+the whole key batch instead of N numpy round-trips.
 """
 from __future__ import annotations
 
@@ -26,9 +33,21 @@ import numpy as np
 
 from . import isa, machine
 from .assembler import Program, WRRef
+from .engine import ChainEngine
 
 EMPTY_KEY = 0          # bucket key 0 == empty; live keys are 1..2^24-1
 MISS_SENTINEL = 0      # response region default (paper: "default value 0")
+
+
+def _batched_get(off, keys: Sequence[int], max_steps: int):
+    """Shared get_many body: one materialize(), one vmapped engine run,
+    one response-region gather for the whole key batch."""
+    st = off.materialize()
+    payloads = np.asarray([off._payload(int(k)) for k in keys], np.int32)
+    out = off.engine.run_many(st, off.recv_wq, payloads, max_steps)
+    vals = np.asarray(out.mem[:, off.resp_region:
+                              off.resp_region + off.val_len])
+    return vals, out
 
 
 # ---------------------------------------------------------------------------
@@ -111,17 +130,31 @@ class HashLookupOffload:
             mem[vslot: vslot + len(value)] = value
         return self.state0._replace(mem=jnp.asarray(mem))
 
+    @property
+    def engine(self) -> ChainEngine:
+        return ChainEngine.for_spec(self.spec)
+
+    def _payload(self, key: int) -> List[int]:
+        return [key, key, self.bucket_addr(self.h1(key)),
+                self.bucket_addr(self.h2(key))]
+
     # -- the offloaded get ---------------------------------------------------
     def get(self, key: int, state: Optional[machine.VMState] = None,
             max_steps: int = 256):
         st = self.materialize() if state is None else state
-        st = machine.deliver(st, self.recv_wq, [
-            key, key, self.bucket_addr(self.h1(key)),
-            self.bucket_addr(self.h2(key))])
-        out = machine.run(self.spec, st, max_steps)
+        st = machine.deliver(st, self.recv_wq, self._payload(key))
+        out = self.engine.run(st, max_steps)
         val = np.asarray(out.mem[self.resp_region:
                                  self.resp_region + self.val_len])
         return val, out
+
+    def get_many(self, keys: Sequence[int], max_steps: int = 256):
+        """Batched get: one materialize(), one vmapped run for all keys.
+
+        Returns ``(vals (N, val_len) np.ndarray, batched VMState)`` —
+        row i identical to ``get(keys[i])`` against the same table.
+        """
+        return _batched_get(self, keys, max_steps)
 
 
 def build_hash_lookup(n_buckets: int = 64, val_len: int = 4,
@@ -210,14 +243,24 @@ class ListTraversalOffload:
             mem[vslot:vslot + len(value)] = value
         return self.state0._replace(mem=jnp.asarray(mem))
 
+    @property
+    def engine(self) -> ChainEngine:
+        return ChainEngine.for_spec(self.spec)
+
+    def _payload(self, key: int) -> List[int]:
+        return [self.node_addr(0)] + [key] * self.n_iters
+
     def get(self, key: int, max_steps: int = 4096):
         st = self.materialize()
-        st = machine.deliver(st, self.recv_wq,
-                             [self.node_addr(0)] + [key] * self.n_iters)
-        out = machine.run(self.spec, st, max_steps)
+        st = machine.deliver(st, self.recv_wq, self._payload(key))
+        out = self.engine.run(st, max_steps)
         val = np.asarray(out.mem[self.resp_region:
                                  self.resp_region + self.val_len])
         return val, out
+
+    def get_many(self, keys: Sequence[int], max_steps: int = 4096):
+        """Batched list walk: one materialize(), one vmapped run."""
+        return _batched_get(self, keys, max_steps)
 
 
 def build_list_traversal(n_iters: int = 8, val_len: int = 2,
@@ -349,17 +392,46 @@ class RecycledGetServer:
             mem[vslot:vslot + len(value)] = value
         self.state = self.state._replace(mem=jnp.asarray(mem))
 
+    @property
+    def engine(self) -> ChainEngine:
+        return ChainEngine.for_spec(self.spec)
+
+    def _payload(self, key: int) -> List[int]:
+        return [key, self.bucket_addr(self.h1(key))]
+
     def serve(self, key: int, max_steps: int = 64):
         """One request against the *persistent* loop state — no host-side
         re-arming ever happens (that is §5.6's resiliency story)."""
-        st = machine.deliver(self.state, self.loop_wq,
-                             [key, self.bucket_addr(self.h1(key))])
+        st = machine.deliver(self.state, self.loop_wq, self._payload(key))
         st = st._replace(steps=jnp.zeros((), jnp.int32))
-        out = machine.run(self.spec, st, max_steps)
+        out = self.engine.run(st, max_steps)
         val = np.asarray(out.mem[self.resp_region:
                                  self.resp_region + self.val_len])
         self.state = out
         return val
+
+    def serve_many(self, keys: Sequence[int],
+                   max_steps: int = 64) -> np.ndarray:
+        """Stream a key batch through the persistent loop in one device call.
+
+        Equivalent to N sequential :meth:`serve` calls — same responses,
+        same on-chain lap counters, state persists across the batch — but
+        compiled as one ``lax.scan`` (no host round-trip between requests).
+        Returns ``(N, val_len)``.
+        """
+        payloads = np.asarray([self._payload(int(k)) for k in keys],
+                              np.int32)
+        final, vals = self.engine.serve_stream(
+            self.state, self.loop_wq, payloads, self.resp_region,
+            self.val_len, max_steps)
+        self.state = final
+        return np.asarray(vals)
+
+    def get_many(self, keys: Sequence[int], max_steps: int = 64):
+        """Batched get mirroring the other offloads' ``(vals, state)``
+        return shape; the state is the persistent post-batch loop state."""
+        vals = self.serve_many(keys, max_steps)
+        return vals, self.state
 
 
 def build_recycled_get_server(n_buckets: int = 32, val_len: int = 2,

@@ -19,10 +19,12 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from ... import compat
 
 from ...core import isa
-from .ref import step_wr
+from .ref import managed_chain_loop, step_wr
 
 
 def _vm_kernel(mem_ref, out_ref, *, wq_base: int, n_wrs: int,
@@ -55,7 +57,54 @@ def run_chains_pallas(mems, *, wq_base: int, n_wrs: int, max_steps: int,
         in_specs=[pl.BlockSpec((1, m), lambda ci: (ci, 0))],
         out_specs=pl.BlockSpec((1, m), lambda ci: (ci, 0)),
         out_shape=jax.ShapeDtypeStruct((n_clients, m), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.pallas_tpu_compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(mems)
+
+
+def _managed_vm_kernel(mem_ref, msg_ref, init_ref, out_ref, stat_ref, *,
+                       wq_base: int, n_wrs: int, managed: bool,
+                       max_steps: int):
+    mem, stats = managed_chain_loop(
+        mem_ref[0], msg_ref[0], init_ref[0], wq_base=wq_base, n_wrs=n_wrs,
+        managed=managed, max_steps=max_steps)
+    out_ref[0] = mem
+    stat_ref[0] = stats
+
+
+def run_managed_pallas(mems, msgs, inits, *, wq_base: int, n_wrs: int,
+                       managed: bool, max_steps: int,
+                       interpret: bool = False):
+    """Managed-WQ chain executor: one grid cell per client context.
+
+    The widened semantics (ENABLE-gated head limit, completion counters,
+    RECV from a staged per-context message region) let a WQ-recycled get
+    server's lap loop run as a grid of independent client contexts —
+    the batched-offload fast path.
+
+    ``mems``: (n_clients, M) int32 images; ``msgs``: (n_clients,
+    CAP*MSG_WORDS) staged inbound messages; ``inits``: (n_clients, 8)
+    int32 per :data:`repro.kernels.chain_vm.ref.INIT_HEAD` layout.
+    Returns ``(mems, stats)`` with ``stats``: (n_clients, 8) per the
+    STAT_* layout.
+    """
+    n_clients, m = mems.shape
+    _, mw = msgs.shape
+    kernel = functools.partial(_managed_vm_kernel, wq_base=wq_base,
+                               n_wrs=n_wrs, managed=managed,
+                               max_steps=max_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_clients,),
+        in_specs=[pl.BlockSpec((1, m), lambda ci: (ci, 0)),
+                  pl.BlockSpec((1, mw), lambda ci: (ci, 0)),
+                  pl.BlockSpec((1, 8), lambda ci: (ci, 0))],
+        out_specs=[pl.BlockSpec((1, m), lambda ci: (ci, 0)),
+                   pl.BlockSpec((1, 8), lambda ci: (ci, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n_clients, m), jnp.int32),
+                   jax.ShapeDtypeStruct((n_clients, 8), jnp.int32)],
+        compiler_params=compat.pallas_tpu_compiler_params(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(mems, msgs, inits)

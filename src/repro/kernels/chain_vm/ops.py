@@ -7,8 +7,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .kernel import run_chains_pallas
-from .ref import run_chain_reference
+from .kernel import run_chains_pallas, run_managed_pallas
+from .ref import managed_chain_loop, run_chain_reference
 
 
 @functools.partial(jax.jit, static_argnames=("wq_base", "n_wrs",
@@ -25,3 +25,27 @@ def run_chains(mems, *, wq_base: int, n_wrs: int, max_steps: int = 64,
     return run_chains_pallas(mems, wq_base=wq_base, n_wrs=n_wrs,
                              max_steps=max_steps,
                              interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("wq_base", "n_wrs", "managed",
+                                             "max_steps", "impl"))
+def run_managed(mems, msgs, inits, *, wq_base: int, n_wrs: int,
+                managed: bool = True, max_steps: int = 64,
+                impl: Optional[str] = None):
+    """Managed-WQ batch executor (ENABLE gate + completions + RECV).
+
+    One client context per row; see :func:`kernel.run_managed_pallas` for
+    the input layout.  ``impl``: "pallas" (TPU), "interpret" (pallas
+    interpret mode), or "ref" (vmapped pure-jnp oracle).
+    """
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return jax.vmap(
+            lambda m, g, i: managed_chain_loop(
+                m, g, i, wq_base=wq_base, n_wrs=n_wrs, managed=managed,
+                max_steps=max_steps))(mems, msgs, inits)
+    return run_managed_pallas(mems, msgs, inits, wq_base=wq_base,
+                              n_wrs=n_wrs, managed=managed,
+                              max_steps=max_steps,
+                              interpret=(impl == "interpret"))

@@ -15,7 +15,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from ... import compat
 
 
 def _chunk_math(a, u, h0):
@@ -67,7 +69,7 @@ def rglru_pallas(a, u, *, chunk: int = 32, interpret: bool = False):
             jax.ShapeDtypeStruct((b, d), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(a, u)

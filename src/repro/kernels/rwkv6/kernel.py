@@ -22,7 +22,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from ... import compat
 
 
 def _chunk_math(r, k, v, w, u, S0):
@@ -107,7 +109,7 @@ def wkv6_pallas(r, k, v, w, u, *, chunk: int = 32, interpret: bool = False):
             jax.ShapeDtypeStruct((b, h, n, m), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((n, m), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(r, k, v, w, u)

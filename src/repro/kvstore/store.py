@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
 from ..rdma import transport
 from . import hopscotch
 
@@ -148,7 +149,7 @@ def sharded_get(mesh: Mesh, axis: str, keys: jnp.ndarray, vals: jnp.ndarray,
         _PATHS[method], n_shards=n_shards, capacity=capacity, axis=axis,
         neighborhood=neighborhood, val_words=vals.shape[-1])
     spec = P(axis)
-    mapped = jax.shard_map(
+    mapped = shard_map(
         fn, mesh=mesh, in_specs=(spec, spec, spec),
         out_specs=(spec, spec, spec), check_vma=False)
     return mapped(keys, vals, queries)

@@ -55,6 +55,14 @@ class DeviceResidentService:
     def get(self, key: int) -> np.ndarray:
         return self.server.serve(key)
 
+    def get_many(self, keys) -> np.ndarray:
+        """Batched serving path: the whole key stream flows through the
+        recycled chain in one device call (ChainEngine.serve_stream) —
+        equivalent to N get() calls, laps and all, but with no host
+        round-trip between requests.  Works with the driver dead, same as
+        :meth:`get`."""
+        return self.server.serve_many(keys)
+
     # -- failure events --------------------------------------------------------
     def crash_host(self):
         """Kill the host process. Device chains keep running (§5.6)."""

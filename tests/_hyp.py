@@ -1,0 +1,43 @@
+"""Hypothesis compatibility shim for environments without ``hypothesis``.
+
+The property tests in this suite are written against the real hypothesis
+API.  When the package is installed this module re-exports it unchanged;
+when it is not (this container does not ship it and nothing may be pip
+installed), ``given`` becomes a decorator that skip-marks the test and
+``st``/``settings`` become inert stand-ins, so the *deterministic* tests
+in the same modules still collect and run.
+"""
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - exercised in this container
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Inert strategy: any call/attribute returns another strategy."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return _Strategy()
+
+    class _StrategiesModule:
+        def __getattr__(self, name):
+            return _Strategy()
+
+    st = _StrategiesModule()
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed; property test skipped")(fn)
+        return deco
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco

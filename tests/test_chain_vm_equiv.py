@@ -3,8 +3,7 @@ machine agree on random single-WQ straight-line programs — the kernel
 really is a NIC PU running the same ISA."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.core import assembler, isa, machine
 from repro.kernels.chain_vm import ops as chain_ops

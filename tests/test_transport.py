@@ -2,8 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.rdma import transport
 
@@ -42,10 +41,11 @@ def test_dispatch_combine_roundtrip_identity(data):
         out = transport.combine(resp.reshape(1, cap, -1), d, pos, "kv")
         return out, dropped
 
-    f = jax.shard_map(body, mesh=mesh,
-                      in_specs=(jax.sharding.PartitionSpec(),) * 2,
-                      out_specs=(jax.sharding.PartitionSpec(),) * 2,
-                      check_vma=False)
+    from repro.compat import shard_map
+    f = shard_map(body, mesh=mesh,
+                  in_specs=(jax.sharding.PartitionSpec(),) * 2,
+                  out_specs=(jax.sharding.PartitionSpec(),) * 2,
+                  check_vma=False)
     out, dropped = f(payload, dest)
     out = np.asarray(out)[:, 0]
     want_drop = max(0, n - cap)

@@ -2,8 +2,7 @@
 from RDMA verbs (Appendix A, constructive form) runs real guest programs."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.core import machine, turing
 
