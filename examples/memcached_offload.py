@@ -33,9 +33,8 @@ def main():
         for _ in range(4):
             _, keys = next(stream)
             q = jnp.asarray(keys[None])
-            found, vals, dropped = kv_store.sharded_get(
-                mesh, "kv", dk, dv, q, method=method)
-            hits += int(jnp.sum(found))
+            res = kv_store.sharded_get(mesh, "kv", dk, dv, q, method=method)
+            hits += int(jnp.sum(res.found))
         print(f"  {method:10s}: {hits}/256 hits, "
               f"{kv_store.RTTS[method]} RTT"
               f"{' + host CPU' if kv_store.HOST_SERVICE[method] else ''}")

@@ -26,6 +26,7 @@ the whole key batch instead of N numpy round-trips.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
@@ -204,6 +205,179 @@ def build_hash_lookup(n_buckets: int = 64, val_len: int = 4,
         prog=p, spec=spec, state0=st0, n_buckets=n_buckets, val_len=val_len,
         table_base=table, values_base=values, resp_region=resp,
         recv_wq=rq.index, parallel=parallel, kv={})
+
+
+# ---------------------------------------------------------------------------
+# §5.2 — the sharded-store get server: hopscotch probes as a chain program
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class HopscotchShardServer:
+    """Fig. 9's get offload generalized to the hopscotch neighborhood.
+
+    One pre-posted chain per owner shard: the client SEND carries the key
+    plus the H probe-bucket addresses (the client computes hashes, like the
+    paper); H RedN-Parallel probe pairs each READ a bucket onto their
+    response WR's ``[ctrl, flags, src]`` and CAS-convert it into the
+    value-returning WRITE on a key match.  Value rows are
+    ``[1, v0..v{V-1}]`` — the leading found-flag word rides the same WRITE,
+    so the response region reads ``[found, value...]`` and a served miss is
+    ``[0, 0...]``, bit-exact with :func:`repro.kvstore.hopscotch.lookup`
+    (including the query-0-matches-empty-bucket edge, because empty rows
+    keep flag 1 and zero values).
+
+    WQ0 is a never-posted all-zero guard: a zero-padded request slot
+    (capacity padding in the transport's receive window) probes address 0,
+    reads the all-zero null bucket, and resolves to a harmless zero write.
+
+    The table contents are *dynamic*: :meth:`device_state` scatters a
+    shard's ``(keys, vals)`` arrays — traced or concrete — into the image,
+    so the same compiled program serves every shard of a
+    ``shard_map``-partitioned store.  Instances are frozen and cached per
+    geometry (:func:`build_hopscotch_server`); all mutable state lives in
+    the ``VMState`` values they produce.
+    """
+    prog: Program
+    spec: machine.MachineSpec
+    state0: machine.VMState
+    n_buckets: int
+    val_len: int
+    neighborhood: int
+    table_base: int
+    values_base: int
+    resp_region: int
+    recv_wq: int
+
+    @property
+    def resp_words(self) -> int:
+        return self.val_len + 1            # [found, value...]
+
+    @property
+    def engine(self) -> ChainEngine:
+        return ChainEngine.for_spec(self.spec)
+
+    def device_state(self, keys: jnp.ndarray,
+                     vals: jnp.ndarray) -> machine.VMState:
+        """Image with this shard's hopscotch slice scattered in.
+
+        keys: (n_buckets,) int32 (0 = empty); vals: (n_buckets, val_len).
+        Pure jnp — works on traced arrays inside ``shard_map``.  The
+        found-flag words and val_ptr columns are static (baked at build
+        time); only keys and values are written here.
+        """
+        row_stride = self.val_len + 1
+        rows = jnp.arange(self.n_buckets, dtype=jnp.int32)
+        mem = self.state0.mem
+        mem = mem.at[self.table_base + rows * BUCKET_WORDS].set(
+            keys.astype(jnp.int32))
+        vidx = (self.values_base + rows[:, None] * row_stride + 1
+                + jnp.arange(self.val_len, dtype=jnp.int32)[None, :])
+        mem = mem.at[vidx.reshape(-1)].set(
+            vals.astype(jnp.int32).reshape(-1))
+        return self.state0._replace(mem=mem)
+
+    def device_payloads(self, queries: jnp.ndarray,
+                        home: jnp.ndarray) -> jnp.ndarray:
+        """Client-side request assembly: ``[key x H, probe addrs x H]``.
+
+        queries: (B,) int32; home: (B,) int32 home buckets (the client
+        computes the hash, exactly as the paper's client computes bucket
+        addresses).  Probes cover the wrapping neighborhood
+        ``[home, home + H)``.
+        """
+        h = self.neighborhood
+        offs = jnp.arange(h, dtype=jnp.int32)
+        rows = (home[:, None] + offs[None, :]) % self.n_buckets
+        addrs = (self.table_base + rows * BUCKET_WORDS).astype(jnp.int32)
+        keys_rep = jnp.broadcast_to(queries[:, None].astype(jnp.int32),
+                                    rows.shape)
+        return jnp.concatenate([keys_rep, addrs], axis=1)
+
+    def get_many(self, keys: jnp.ndarray, vals: jnp.ndarray,
+                 queries: jnp.ndarray, home: jnp.ndarray,
+                 max_steps: int = 96):
+        """Single-machine batched get (tests / benchmarks; the sharded
+        path goes through ``transport.triggered_chain_engine``).
+        Returns (found bool (B,), values (B, val_len))."""
+        st = self.device_state(keys, vals)
+        out = self.engine.run_many(
+            st, self.recv_wq, self.device_payloads(queries, home), max_steps)
+        resp = out.mem[:, self.resp_region:self.resp_region + self.resp_words]
+        return resp[:, 0] > 0, resp[:, 1:]
+
+
+@functools.lru_cache(maxsize=None)
+def build_hopscotch_server(n_buckets: int, val_len: int,
+                           neighborhood: int = 8) -> HopscotchShardServer:
+    """Build (and cache per geometry) the per-shard hopscotch get chain.
+
+    ``2 * neighborhood`` payload words / scatter entries must fit the
+    RECV scatter limit (§5.3: 16 scatters), so ``neighborhood <= 8``.
+    """
+    if not 1 <= neighborhood <= isa.MAX_SCATTER // 2:
+        raise ValueError(
+            f"neighborhood must be in [1, {isa.MAX_SCATTER // 2}] "
+            f"(2 payload words per probe, {isa.MAX_SCATTER}-scatter RECV)")
+    if val_len + 1 > isa.MAX_COPY:
+        raise ValueError(f"val_len {val_len} exceeds one-WRITE response")
+    row_stride = val_len + 1
+    h = neighborhood
+
+    # size the image exactly: code (1 guard + recv + 6 slots per probe)
+    # grows up, data grows down
+    code_words = (1 + 2 + 6 * h) * isa.WR_WORDS
+    data_words = (row_stride                      # response region
+                  + n_buckets * row_stride        # value rows [flag, v...]
+                  + n_buckets * BUCKET_WORDS      # table
+                  + 1 + 2 * h)                    # scatter table
+    mem_words = -(-(code_words + data_words + 32) // 128) * 128
+
+    p = Program(mem_words)
+    p.add_wq(1)                                   # WQ0: all-zero null bucket
+    resp = p.alloc(row_stride, [MISS_SENTINEL] * row_stride, "resp")
+    # value rows: flag word 1 statically, even for empty rows — query 0
+    # CAS-matches an empty bucket exactly like the jnp oracle's probe does,
+    # and must land found=1 with zero value words
+    values = p.alloc(n_buckets * row_stride,
+                     [1 if i % row_stride == 0 else 0
+                      for i in range(n_buckets * row_stride)], "values")
+    # table rows [key=0, pad, val_ptr]: val_ptr column baked statically
+    tbl_init = [0] * (n_buckets * BUCKET_WORDS)
+    for b in range(n_buckets):
+        tbl_init[b * BUCKET_WORDS + 2] = values + b * row_stride
+    table = p.alloc(n_buckets * BUCKET_WORDS, tbl_init, "table")
+
+    rq = p.add_wq(2)
+    cas_opa_addrs, read_src_addrs = [], []
+    for pi in range(h):
+        wq1 = p.add_wq(2, ordering=isa.ORD_DOORBELL, managed=True)
+        wq2 = p.add_wq(4, ordering=isa.ORD_DOORBELL, managed=True,
+                       initial_enable=3)
+        wq1.wait(rq, 1, tag=f"hs.trig{pi}")
+        wq1.initial_enable = wq1.n_posted + 1
+        rd = wq1.read(src=0, dst=0, ln=BUCKET_WORDS, tag=f"hs.read{pi}")
+
+        wq2.wait(wq1, rd.completion_count, tag=f"hs.sync{pi}")
+        cas = wq2.cas(dst=0, old=isa.pack_ctrl(isa.NOOP, 0),
+                      new=isa.pack_ctrl(isa.WRITE, 0), tag=f"hs.cas{pi}")
+        wq2.enable(wq2, upto=4, tag=f"hs.en{pi}")
+        # the response: NOOP unless the CAS converts it; the bucket row
+        # [key, pad, val_ptr] lands on its [ctrl, flags, src]
+        r4 = wq2.post(isa.NOOP, src=0, dst=resp, ln=row_stride,
+                      tag=f"hs.resp{pi}")
+        wq1.wrs[rd.slot]["dst"] = r4.ctrl_addr
+        wq2.wrs[cas.slot]["dst"] = r4.ctrl_addr
+        cas_opa_addrs.append(cas.addr("opa"))
+        read_src_addrs.append(rd.addr("src"))
+
+    tbl = p.scatter_table(cas_opa_addrs + read_src_addrs)
+    rq.recv(scatter_table=tbl, tag="hs.recv")
+
+    spec, st0 = p.finalize()
+    return HopscotchShardServer(
+        prog=p, spec=spec, state0=st0, n_buckets=n_buckets, val_len=val_len,
+        neighborhood=neighborhood, table_base=table, values_base=values,
+        resp_region=resp, recv_wq=rq.index)
 
 
 # ---------------------------------------------------------------------------

@@ -1,44 +1,74 @@
 """Sharded KV store over the device mesh with the paper's three get paths.
 
 * ``redn``      — §5.2: the request is routed to the owner shard, the
-                  *offload chain* (hopscotch probe) executes there, the
+                  *offload chain* — an actual chain VM program
+                  (:class:`repro.core.programs.HopscotchShardServer`,
+                  executed by ``ChainEngine.run_many``) — runs there, the
                   value comes back: **1 RTT**, no host involvement.
 * ``one_sided`` — FaRM/Pilaf style: RDMA READ of the H-bucket neighborhood
                   metadata, client-side match, RDMA READ of the value:
                   **2 RTTs**, no host involvement, 6x metadata overhead
                   (neighborhood reads) exactly as §5.2.2 describes.
 * ``two_sided`` — RPC: request routed to the owner, the *host* performs the
-                  lookup, response routed back: 1 RTT + host service time
-                  (the contended resource in §5.5).
+                  lookup (the plain ``hopscotch.lookup`` function — which
+                  doubles as the bit-exact oracle for the chain program),
+                  response routed back: 1 RTT + host service time (the
+                  contended resource in §5.5).
 
-All three return identical values (tested); they differ in collective
-phases and in which resource does the work — which is what the fidelity
-benchmarks price.
+All three return identical values on served requests (tested); they differ
+in collective phases and in which resource does the work — which is what
+the fidelity benchmarks price.
+
+Every path returns a :class:`GetResult` whose per-request ``ok`` mask says
+whether the response is authoritative: a request dropped at the transport's
+capacity limit, or deferred by the per-client admission stage
+(``sharded_get_isolated``), has ``ok=False`` and must never be read as a
+key miss.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, Optional, Sequence, Tuple
+from typing import NamedTuple, Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from ..compat import shard_map
-from ..rdma import transport
+from ..core import programs
+from ..rdma import isolation, transport
 from . import hopscotch
 
 _SHARD_MULT = 0x9E3779B1
 
 
 def shard_of(key, n_shards: int):
+    """Owner shard of a key — identical for python ints and jnp arrays.
+
+    Both paths normalize to uint32 before the xor/shift/multiply: a python
+    int is masked to its 32-bit pattern first (negative or >= 2**32 keys
+    previously diverged from the device path, routing the same key to two
+    different shards depending on which side hashed it).
+    """
     if isinstance(key, (int, np.integer)):
-        return ((key ^ (key >> 13)) * _SHARD_MULT & 0xFFFFFFFF) % n_shards
+        k = int(key) & 0xFFFFFFFF
+        k ^= k >> 13
+        return (k * _SHARD_MULT & 0xFFFFFFFF) % n_shards
     k = key.astype(jnp.uint32)
     return (((k ^ (k >> 13)) * jnp.uint32(_SHARD_MULT))
             % jnp.uint32(n_shards)).astype(jnp.int32)
+
+
+class GetResult(NamedTuple):
+    """Distributed get outcome. ``found``/``values`` are authoritative only
+    where ``ok`` is True — a False row was dropped (capacity) or deferred
+    (admission), *not* a miss."""
+    found: jnp.ndarray      # (S, B) bool
+    values: jnp.ndarray     # (S, B, V) int32
+    ok: jnp.ndarray         # (S, B) bool — response authoritative
+    dropped: jnp.ndarray    # (S,) int32 — capacity drops at the source
+    deferred: jnp.ndarray   # (S,) int32 — admission-deferred at the source
 
 
 @dataclasses.dataclass
@@ -58,7 +88,16 @@ class ShardedKV:
         return cls(tables, n_shards, val_words, neighborhood)
 
     def set(self, key: int, value: Sequence[int]) -> bool:
-        """Host-side set (the server CPU populates, like the paper)."""
+        """Host-side set (the server CPU populates, like the paper).
+
+        Keys live in the chain ISA's 24-bit id space (the CAS-convertible
+        control word packs ``opcode:8 | id:24``), exactly like
+        ``HashLookupOffload.insert``.
+        """
+        if not 0 < key <= 0xFFFFFF:
+            # a wider key's top byte would decode as an opcode once the
+            # probe READ lands it on a response WR's ctrl word
+            raise ValueError(f"keys are 24-bit chain ids, got {key:#x}")
         return self.tables[int(shard_of(key, self.n_shards))].insert(
             key, value)
 
@@ -72,57 +111,69 @@ class ShardedKV:
 # the three get paths (shard_map bodies; local table slice has leading dim 1)
 # ---------------------------------------------------------------------------
 
-def _redn_get_local(keys, vals, queries, *, n_shards, capacity, axis,
+def _redn_get_local(keys, vals, queries, live, *, n_shards, capacity, axis,
                     neighborhood, val_words):
-    """RedN path: triggered chain at the owner — 1 RTT."""
+    """RedN path: the pre-posted chain VM program executes at the owner —
+    1 RTT, the hash probing done by verbs, not the host."""
     q = queries.reshape(-1)
     dest = shard_of(q, n_shards)
-    payload = q[:, None]
-
-    def chain(reqs):      # executes on the owner: the offloaded lookup
-        found, v = hopscotch.lookup(keys[0], vals[0], reqs[:, 0],
-                                    neighborhood)
-        return jnp.concatenate([found[:, None].astype(jnp.int32), v], axis=1)
-
-    resp, dropped = transport.triggered_chain(
-        chain, payload, dest, n_shards, capacity, axis, val_words + 1)
-    return (resp[:, 0] > 0)[None], resp[None, :, 1:], dropped[None]
+    n_buckets = keys.shape[1]
+    srv = programs.build_hopscotch_server(n_buckets, val_words, neighborhood)
+    state = srv.device_state(keys[0], vals[0])
+    payload = srv.device_payloads(q, hopscotch.bucket_of(q, n_buckets))
+    resp, ok = transport.triggered_chain_engine(
+        srv.engine, state, srv.recv_wq, srv.resp_region, srv.resp_words,
+        payload, dest, n_shards, capacity, axis, live.reshape(-1))
+    return (resp[:, 0] > 0)[None], resp[None, :, 1:], ok[None]
 
 
-def _one_sided_get_local(keys, vals, queries, *, n_shards, capacity, axis,
-                         neighborhood, val_words):
+def _one_sided_get_local(keys, vals, queries, live, *, n_shards, capacity,
+                         axis, neighborhood, val_words):
     """FaRM-style: READ the neighborhood metadata, match locally, READ the
     value — 2 RTTs, and H-fold metadata amplification."""
     q = queries.reshape(-1)
     n_buckets = keys.shape[1]
     dest = shard_of(q, n_shards)
     home = hopscotch.bucket_of(q, n_buckets)
+    lv = live.reshape(-1)
 
     # RTT 1: one READ of the H-bucket neighborhood (metadata; this is the
     # 6x-amplified read FaRM pays — H contiguous buckets per request)
     remote_window = jnp.stack(
         [jnp.roll(keys[0], -d) for d in range(neighborhood)], axis=1)
-    window = transport.one_sided_read(remote_window, dest, home, axis,
-                                      n_shards, capacity)      # (B, H)
+    window, ok = transport.one_sided_read(remote_window, dest, home, axis,
+                                          n_shards, capacity, lv)  # (B, H)
     hit = window == q[:, None].astype(window.dtype)
     found = jnp.any(hit, axis=1)
     slot = jnp.argmax(hit, axis=1).astype(jnp.int32)
     row = (home + slot) % n_buckets
 
-    # RTT 2: fetch the value row
-    v = transport.one_sided_read(vals[0], dest, row, axis, n_shards,
-                                 capacity)
+    # RTT 2: fetch the value row (same dest/live -> same ok mask)
+    v, _ = transport.one_sided_read(vals[0], dest, row, axis, n_shards,
+                                    capacity, lv)
     v = v * found[:, None].astype(v.dtype)
-    return found[None], v[None], jnp.zeros((1,), jnp.int32)
+    return found[None], v[None], ok[None]
 
 
-def _two_sided_get_local(keys, vals, queries, *, n_shards, capacity, axis,
-                         neighborhood, val_words):
-    """RPC: identical wire pattern to redn, but the lookup is attributed to
-    the host CPU (the benchmarks price the host service + contention)."""
-    return _redn_get_local(keys, vals, queries, n_shards=n_shards,
-                           capacity=capacity, axis=axis,
-                           neighborhood=neighborhood, val_words=val_words)
+def _two_sided_get_local(keys, vals, queries, live, *, n_shards, capacity,
+                         axis, neighborhood, val_words):
+    """RPC: identical wire pattern to redn, but the lookup runs as a plain
+    host function (the benchmarks price the host service + contention).
+    ``hopscotch.lookup`` here is the same function the tests use as the
+    chain program's bit-exact oracle."""
+    q = queries.reshape(-1)
+    dest = shard_of(q, n_shards)
+    payload = q[:, None]
+
+    def host_lookup(reqs):
+        found, v = hopscotch.lookup(keys[0], vals[0], reqs[:, 0],
+                                    neighborhood)
+        return jnp.concatenate([found[:, None].astype(jnp.int32), v], axis=1)
+
+    resp, ok = transport.triggered_chain(
+        host_lookup, payload, dest, n_shards, capacity, axis, val_words + 1,
+        live.reshape(-1))
+    return (resp[:, 0] > 0)[None], resp[None, :, 1:], ok[None]
 
 
 _PATHS = dict(redn=_redn_get_local, one_sided=_one_sided_get_local,
@@ -137,22 +188,58 @@ HOST_SERVICE = dict(redn=False, one_sided=False, two_sided=True)
 
 def sharded_get(mesh: Mesh, axis: str, keys: jnp.ndarray, vals: jnp.ndarray,
                 queries: jnp.ndarray, method: str = "redn",
-                neighborhood: int = 8, capacity: Optional[int] = None):
+                neighborhood: int = 8, capacity: Optional[int] = None,
+                live: Optional[jnp.ndarray] = None) -> GetResult:
     """Batched distributed get. queries: (S, B_local) int32 (dim 0 sharded).
 
-    Returns (found (S,B), values (S,B,V), dropped (S,)).
+    ``live`` (optional, (S, B) bool) is an admission mask — False requests
+    are never dispatched and come back with ``ok=False`` and a ``deferred``
+    count (see :func:`sharded_get_isolated` for the token-bucket stage
+    that produces it).  Returns a :class:`GetResult`.
     """
     n_shards = mesh.shape[axis]
     b_local = queries.shape[1]
     capacity = capacity or b_local
-    fn = functools.partial(
+    if live is None:
+        live = jnp.ones(queries.shape, jnp.bool_)
+
+    path = functools.partial(
         _PATHS[method], n_shards=n_shards, capacity=capacity, axis=axis,
         neighborhood=neighborhood, val_words=vals.shape[-1])
+
+    def body(keys, vals, queries, live):
+        found, v, ok = path(keys, vals, queries, live)
+        deferred = jnp.sum(~live, dtype=jnp.int32).reshape(1)
+        dropped = (jnp.sum(live, dtype=jnp.int32)
+                   - jnp.sum(ok, dtype=jnp.int32)).reshape(1)
+        return found, v, ok, dropped, deferred
+
     spec = P(axis)
     mapped = shard_map(
-        fn, mesh=mesh, in_specs=(spec, spec, spec),
-        out_specs=(spec, spec, spec), check_vma=False)
-    return mapped(keys, vals, queries)
+        body, mesh=mesh, in_specs=(spec, spec, spec, spec),
+        out_specs=(spec, spec, spec, spec, spec), check_vma=False)
+    return GetResult(*mapped(keys, vals, queries, live))
+
+
+def sharded_get_isolated(mesh: Mesh, axis: str, keys: jnp.ndarray,
+                         vals: jnp.ndarray, queries: jnp.ndarray,
+                         clients: jnp.ndarray, bucket: isolation.BucketState,
+                         now_us: float, rate_per_us: float, burst: float,
+                         **kwargs) -> Tuple[GetResult, isolation.BucketState]:
+    """The §5.5 serving path: per-client token-bucket admission, then the
+    sharded get.  Admitted requests are dispatched; deferred ones are
+    reported per shard (``GetResult.deferred``) and surface ``ok=False`` —
+    a misbehaving client beyond its rate cannot occupy transport slots or
+    owner-shard chain contexts, so victims keep their 1-RTT latency.
+
+    clients: (S, B) int32 global client/QP ids aligned with ``queries``.
+    Returns (GetResult, new bucket state).
+    """
+    bucket, admitted = isolation.admit(
+        bucket, clients.reshape(-1), now_us, rate_per_us, burst)
+    live = admitted.reshape(queries.shape)
+    return (sharded_get(mesh, axis, keys, vals, queries, live=live,
+                        **kwargs), bucket)
 
 
 # ---------------------------------------------------------------------------

@@ -1,3 +1,3 @@
 """Distributed 'RNIC' layer: one-sided/two-sided transport over the TPU
 mesh, per-QP rate limiting (isolation), and host-failure resiliency."""
-from . import failure, isolation, transport  # noqa: F401
+from . import transport, isolation, failure  # noqa: F401

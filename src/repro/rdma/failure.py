@@ -14,11 +14,15 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core import programs
+# module alias, not from-import of names: kvstore.store itself imports
+# repro.rdma (transport/isolation), so its class definitions may not have
+# executed yet when this module loads — attributes are resolved at call time
+from ..kvstore import store as kv_store
 
 
 class HostDriver:
@@ -35,8 +39,32 @@ class HostDriver:
         self.log = None
 
 
+class _HostDriverLifecycle:
+    """Shared §5.6 crash/restart semantics.  Mixed into services whose
+    dataclasses declare ``driver``/``bootstrap_s``/``rebuild_s`` fields:
+    killing the driver never touches device state, so serving continues;
+    a restart is instant; the cold numbers are what vanilla would pay."""
+
+    def crash_host(self):
+        """Kill the host process. Device chains keep running (§5.6)."""
+        if self.driver is not None:
+            self.driver.crash()
+        self.driver = None
+
+    def restart_host(self):
+        """Restart the driver: instant, because device state is intact."""
+        self.driver = HostDriver()
+
+    def host_alive(self) -> bool:
+        return self.driver is not None and self.driver.alive
+
+    def cold_restart_downtime_s(self) -> float:
+        """What a vanilla (non-offloaded) server would pay after a crash."""
+        return self.bootstrap_s + self.rebuild_s
+
+
 @dataclasses.dataclass
-class DeviceResidentService:
+class DeviceResidentService(_HostDriverLifecycle):
     """Device-resident serving state: survives host driver crashes."""
     server: programs.RecycledGetServer
     driver: Optional[HostDriver]
@@ -63,21 +91,59 @@ class DeviceResidentService:
         :meth:`get`."""
         return self.server.serve_many(keys)
 
-    # -- failure events --------------------------------------------------------
-    def crash_host(self):
-        """Kill the host process. Device chains keep running (§5.6)."""
-        if self.driver is not None:
-            self.driver.crash()
-        self.driver = None
 
-    def restart_host(self):
-        """Restart the driver: instant, because device state is intact."""
-        self.driver = HostDriver()
+@dataclasses.dataclass
+class ShardedKVService(_HostDriverLifecycle):
+    """The §5.6 story at production scale: the *sharded* store's serving
+    state — device arrays plus the pre-posted per-shard chain program — is
+    device-resident; the host driver (set-path plumbing, config, logging)
+    is a disposable Python object.  Kill the driver and ``sharded gets``
+    keep executing their chain VM programs at the owner shards with zero
+    recovery time; only the *set* path (host CPU populates, like the
+    paper's Memcached) needs a live driver.
+    """
+    kv: "kv_store.ShardedKV"       # host handle (the crash-prone set path)
+    mesh: object                   # jax Mesh over the serving axis
+    axis: str
+    keys: object                   # (S, B) device array
+    vals: object                   # (S, B, V) device array
+    driver: Optional[HostDriver]
+    bootstrap_s: float = 1.0
+    rebuild_s: float = 1.25
 
-    def host_alive(self) -> bool:
-        return self.driver is not None and self.driver.alive
+    @classmethod
+    def start(cls, items: Sequence[Tuple[int, Sequence[int]]],
+              n_shards: int = 1, buckets_per_shard: int = 128,
+              val_words: int = 2, axis: str = "kv") -> "ShardedKVService":
+        import jax
+        from jax.sharding import Mesh
 
-    # -- the baseline for comparison -------------------------------------------
-    def cold_restart_downtime_s(self) -> float:
-        """What a vanilla (non-offloaded) server would pay after a crash."""
-        return self.bootstrap_s + self.rebuild_s
+        kv = kv_store.ShardedKV.build(n_shards, buckets_per_shard, val_words)
+        for k, v in items:
+            kv.set(int(k), list(v))
+        keys, vals = kv.device_arrays()
+        mesh = Mesh(np.array(jax.devices()[:n_shards]), (axis,))
+        return cls(kv=kv, mesh=mesh, axis=axis, keys=keys, vals=vals,
+                   driver=HostDriver())
+
+    # -- the serving path (pure device state) --------------------------------
+    def get_many(self, queries, **kwargs) -> "kv_store.GetResult":
+        """Sharded redn gets: chain programs execute at the owner shards.
+        Works with the driver dead — no host state is touched."""
+        import jax.numpy as jnp
+
+        q = jnp.asarray(queries, jnp.int32)
+        if q.ndim == 1:
+            q = q[None, :]
+        return kv_store.sharded_get(self.mesh, self.axis, self.keys,
+                                    self.vals, q, method="redn", **kwargs)
+
+    # -- the set path (host-owned, dies with the driver) ---------------------
+    def set(self, key: int, value: Sequence[int]) -> bool:
+        if not self.host_alive():
+            raise RuntimeError(
+                "set path needs the host driver (gets keep serving)")
+        ok = self.kv.set(key, value)
+        if ok:
+            self.keys, self.vals = self.kv.device_arrays()
+        return ok

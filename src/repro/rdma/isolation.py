@@ -11,6 +11,8 @@ from typing import NamedTuple, Tuple
 
 import jax.numpy as jnp
 
+from . import transport
+
 
 class BucketState(NamedTuple):
     tokens: jnp.ndarray        # f32[n_clients]
@@ -31,15 +33,13 @@ def admit(state: BucketState, client: jnp.ndarray, now_us: float,
     requests ahead of it in this batch (same-client requests drain in
     order).
     """
-    b = client.shape[0]
     now = jnp.asarray(now_us, jnp.float32)
     elapsed = jnp.maximum(now - state.last_us, 0.0)
     refilled = jnp.minimum(state.tokens + elapsed * rate_per_us, burst)
 
-    # rank of each request within its client's group (batch is small)
-    same = client[None, :] == client[:, None]
-    earlier = jnp.tril(jnp.ones((b, b), jnp.bool_), k=-1)
-    grp_rank = jnp.sum(same & earlier, axis=1).astype(jnp.float32)
+    # rank of each request within its client's group — sort/segment-cumsum
+    # (O(B log B)), not the B x B same/earlier mask (16M bools at B=4096)
+    grp_rank = transport.rank_within_dest(client).astype(jnp.float32)
 
     admitted = refilled[client] - grp_rank >= 1.0
     spent = jnp.zeros_like(state.tokens).at[client].add(

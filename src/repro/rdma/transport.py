@@ -9,55 +9,91 @@ the paper's latency structure.
 The dispatch is fixed-capacity (like MoE routing): each source shard can
 send up to ``capacity`` requests to each destination per step; overflow
 requests are dropped and reported (back-pressure is the serving engine's
-job, mirroring how an RNIC's WQ depth bounds outstanding verbs).
+job, mirroring how an RNIC's WQ depth bounds outstanding verbs).  Every
+entry point threads a per-request ``ok`` mask so a dropped (or
+isolation-deferred) request is *distinguishable* from a served request
+whose answer happens to be zero — drops must never read as misses.
+
+The owner-side work comes in two flavors:
+
+* :func:`triggered_chain` — a Python callable stands in for the offload
+  (the two-sided/RPC baseline: the *host* does the lookup);
+* :func:`triggered_chain_engine` — the RedN path proper: the arriving
+  requests are delivered to a pre-posted **chain VM program** and executed
+  by :class:`repro.core.engine.ChainEngine` where the data lives, one
+  vmapped run per serving step.
 """
 from __future__ import annotations
 
-from typing import Callable, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
 
-def rank_within_dest(dest: jnp.ndarray) -> jnp.ndarray:
-    """pos[i] = #{j < i : dest[j] == dest[i]} (slot within the dest group)."""
+def rank_within_dest(dest: jnp.ndarray,
+                     live: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """pos[i] = #{j < i : dest[j] == dest[i] and live[j]} (slot in the group).
+
+    Sort/segment-cumsum formulation: O(B log B) and O(B) memory, vs the
+    B x B boolean mask of the quadratic version (16M entries at batch
+    4096).  ``live=None`` means all requests count.  Non-live requests get
+    the rank they *would* have had, but consume no slot for anyone else.
+    """
     b = dest.shape[0]
-    same = dest[None, :] == dest[:, None]
-    earlier = jnp.tril(jnp.ones((b, b), jnp.bool_), k=-1)
-    return jnp.sum(same & earlier, axis=1).astype(jnp.int32)
+    order = jnp.argsort(dest, stable=True)        # stable: keeps batch order
+    sd = dest[order]
+    lv = (jnp.ones((b,), jnp.int32) if live is None
+          else live[order].astype(jnp.int32))
+    csum = jnp.cumsum(lv) - lv                    # exclusive live count
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), jnp.bool_), sd[1:] != sd[:-1]])
+    # live count at each group's first row, carried across the group
+    base = lax.cummax(jnp.where(is_start, csum, 0))
+    rank_sorted = (csum - base).astype(jnp.int32)
+    return jnp.zeros((b,), jnp.int32).at[order].set(rank_sorted)
 
 
 def dispatch(payload: jnp.ndarray, dest: jnp.ndarray, n_shards: int,
-             capacity: int, axis_name: str):
+             capacity: int, axis_name: str,
+             live: Optional[jnp.ndarray] = None):
     """Route local requests to their destination shards.
 
-    payload: (B, W) int32; dest: (B,) int32 in [0, n_shards).
-    Returns (recv, pos, dropped):
-      recv   : (n_shards, capacity, W) — slot [s, c] = c-th request from
-               source shard s (zero-padded);
-      pos    : (B,) my requests' slots (for collecting responses);
-      dropped: () int32 — local requests beyond capacity.
+    payload: (B, W) int32; dest: (B,) int32 in [0, n_shards); live: (B,)
+    bool — requests an admission stage deferred (not dispatched, no slot
+    consumed).
+    Returns (recv, pos, ok):
+      recv : (n_shards, capacity, W) — slot [s, c] = c-th live request from
+             source shard s (zero-padded);
+      pos  : (B,) my requests' slots (for collecting responses);
+      ok   : (B,) bool — True iff the request was actually dispatched
+             (live and within capacity); a False row's response is not
+             authoritative and must not be read as a miss.
     """
     b, w = payload.shape
-    pos = rank_within_dest(dest)
+    pos = rank_within_dest(dest, live)
     ok = pos < capacity
-    dropped = jnp.sum(~ok).astype(jnp.int32)
+    if live is not None:
+        ok = ok & live
     send = jnp.zeros((n_shards, capacity, w), payload.dtype)
-    # invalid rows get an out-of-range slot and are dropped by scatter
+    # not-ok rows get an out-of-range slot and are dropped by scatter
     slot = jnp.where(ok, pos, capacity)
     send = send.at[dest, slot].set(payload, mode="drop")
     recv = lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0,
                           tiled=False)
-    return recv, pos, dropped
+    return recv, pos, ok
 
 
 def combine(responses: jnp.ndarray, dest: jnp.ndarray, pos: jnp.ndarray,
-            axis_name: str) -> jnp.ndarray:
+            ok: jnp.ndarray, axis_name: str) -> jnp.ndarray:
     """Return responses to their source shards and gather per-request.
 
     responses: (n_shards, capacity, V) — slot [s, c] answers source s's
-    c-th request.  Returns (B, V) aligned with the original local requests.
+    c-th request; ``ok`` is the dispatch mask.  Returns (B, V) aligned with
+    the original local requests; rows with ``ok == False`` are zeroed
+    (their content is meaningless — the caller must consult ``ok``, which
+    is what keeps drops from aliasing with misses).
     """
     back = lax.all_to_all(responses, axis_name, split_axis=0, concat_axis=0,
                           tiled=False)
@@ -65,41 +101,74 @@ def combine(responses: jnp.ndarray, dest: jnp.ndarray, pos: jnp.ndarray,
     capacity = back.shape[1]
     safe = jnp.minimum(pos, capacity - 1)
     out = back[dest, safe]
-    ok = (pos < capacity)[:, None]
-    return out * ok.astype(out.dtype)
+    return out * ok[:, None].astype(out.dtype)
 
 
 def one_sided_read(remote: jnp.ndarray, shard: jnp.ndarray,
                    rows: jnp.ndarray, axis_name: str,
-                   n_shards: int, capacity: int) -> jnp.ndarray:
+                   n_shards: int, capacity: int,
+                   live: Optional[jnp.ndarray] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """RDMA READ: fetch ``remote[rows]`` from the shard owning them.
 
     remote: (local_rows, W) this shard's slice of a dim-0-sharded array.
     shard/rows: (B,) target shard and *local* row on that shard.
     Pure data movement — the remote side executes no logic (the defining
-    property of a one-sided verb).
+    property of a one-sided verb).  Returns (data, ok).
     """
     req = jnp.stack([rows, jnp.ones_like(rows)], axis=1)     # row, live
-    recv, pos, _ = dispatch(req, shard, n_shards, capacity, axis_name)
+    recv, pos, ok = dispatch(req, shard, n_shards, capacity, axis_name,
+                             live)
     rrows = recv[..., 0].reshape(-1)
-    live = recv[..., 1].reshape(-1)
+    filled = recv[..., 1].reshape(-1)
     data = remote[jnp.clip(rrows, 0, remote.shape[0] - 1)]
-    data = data * live[:, None].astype(data.dtype)
+    data = data * filled[:, None].astype(data.dtype)
     data = data.reshape(n_shards, capacity, -1)
-    return combine(data, shard, pos, axis_name)
+    return combine(data, shard, pos, ok, axis_name), ok
 
 
 def triggered_chain(remote_fn: Callable, payload: jnp.ndarray,
                     dest: jnp.ndarray, n_shards: int, capacity: int,
-                    axis_name: str, resp_words: int) -> jnp.ndarray:
-    """The RedN pattern: SEND triggers a pre-posted chain at the owner.
+                    axis_name: str, resp_words: int,
+                    live: Optional[jnp.ndarray] = None
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SEND triggers a *function* stand-in at the owner (the RPC baseline).
 
-    ``remote_fn(requests) -> responses`` runs where the data lives; the
-    caller pays exactly one dispatch/combine pair (1 RTT) regardless of the
-    chain's complexity — that is the paper's core performance claim.
+    ``remote_fn(requests) -> responses`` runs where the data lives but is
+    executed by the host CPU — this is the two-sided comparison path; the
+    RedN path proper is :func:`triggered_chain_engine`.  Returns
+    (responses (B, resp_words), ok (B,)).
     """
-    recv, pos, dropped = dispatch(payload, dest, n_shards, capacity,
-                                  axis_name)
+    recv, pos, ok = dispatch(payload, dest, n_shards, capacity, axis_name,
+                             live)
     flat = recv.reshape(-1, recv.shape[-1])
     resp = remote_fn(flat).reshape(n_shards, capacity, resp_words)
-    return combine(resp, dest, pos, axis_name), dropped
+    return combine(resp, dest, pos, ok, axis_name), ok
+
+
+def triggered_chain_engine(engine, state, recv_wq: int, resp_region: int,
+                           resp_words: int, payload: jnp.ndarray,
+                           dest: jnp.ndarray, n_shards: int, capacity: int,
+                           axis_name: str,
+                           live: Optional[jnp.ndarray] = None,
+                           max_steps: int = 256
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The RedN pattern: SEND triggers a pre-posted chain VM program.
+
+    Every arriving request (one slot of the owner's (n_shards, capacity)
+    receive window) is delivered as a client SEND to ``recv_wq`` of an
+    independent chain-VM context sharing the owner's memory image
+    (``state``), and all contexts execute in one vmapped
+    ``ChainEngine.run_many`` call — the chain, not the host, computes the
+    answer.  The caller pays exactly one dispatch/combine pair (1 RTT)
+    regardless of the chain's complexity — the paper's core performance
+    claim.  Returns (responses (B, resp_words), ok (B,)): each response is
+    the context's ``resp_region`` snapshot after its chain quiesced.
+    """
+    recv, pos, ok = dispatch(payload, dest, n_shards, capacity, axis_name,
+                             live)
+    flat = recv.reshape(-1, recv.shape[-1])
+    out = engine.run_many(state, recv_wq, flat, max_steps)
+    resp = out.mem[:, resp_region:resp_region + resp_words]
+    resp = resp.reshape(n_shards, capacity, resp_words)
+    return combine(resp, dest, pos, ok, axis_name), ok

@@ -37,13 +37,13 @@ q = jax.device_put(jnp.asarray(probe.reshape(S, B)),
 
 rfound, rvals = store.reference_get(kv, probe)
 for method in ("redn", "one_sided", "two_sided"):
-    found, vals, dropped = store.sharded_get(mesh, "kv", dk, dv, q,
-                                             method=method)
+    res = store.sharded_get(mesh, "kv", dk, dv, q, method=method)
     np.testing.assert_array_equal(
-        np.asarray(found).reshape(-1), rfound, err_msg=method)
+        np.asarray(res.found).reshape(-1), rfound, err_msg=method)
     np.testing.assert_array_equal(
-        np.asarray(vals).reshape(-1, 2), rvals, err_msg=method)
-    assert int(jnp.sum(dropped)) == 0
+        np.asarray(res.values).reshape(-1, 2), rvals, err_msg=method)
+    assert bool(jnp.all(res.ok))
+    assert int(jnp.sum(res.dropped)) == 0
     print(f"OK {method}: cross-shard routing matches reference")
 
 print("MULTIDEVICE_KV_OK")

@@ -1,0 +1,45 @@
+"""§5.5 contention/isolation scenario (benchmarks/contention.py)."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import contention  # noqa: E402
+
+
+def test_latency_model_isolation_ratio():
+    """Victim latency drops by >= 10x with the token bucket (paper: ~35x);
+    deferral is what buys it — the flooder is capped at its burst."""
+    model = contention.latency_model(flood=512, svc_us=3.5)
+    assert model["isolation_latency_ratio"] >= 10.0
+    assert model["deferred_flood_requests"] == 512 - int(contention.BURST)
+    assert (model["victim_mean_us_isolation_on"]
+            < model["victim_p99_us_isolation_off"])
+
+
+def test_real_serving_under_contention():
+    """The actual sharded chain path: victims starved without admission
+    (drops reported, not read as misses), fully served and oracle-exact
+    with it."""
+    real = contention.real_isolated_serving(flood=24, capacity=24)
+    assert real["no_victim_served_off"]
+    assert real["all_victims_served_on"]
+    assert real["victims_bit_exact_with_oracle"]
+    assert real["deferred_isolation_on"] == 24 - int(contention.BURST)
+
+
+@pytest.mark.slow
+def test_contention_benchmark_long_run(tmp_path):
+    """The full batch-4096 run records the isolation-on/off latency ratio
+    and merges it into the BENCH json."""
+    out = tmp_path / "BENCH_chains.json"
+    results = contention.main(out_path=str(out), long=True)
+    assert out.exists()
+    model = results["contention"]["model"]
+    assert model["batch"] == 4096
+    assert results["checks"]["contention_isolation_ratio_10x"]
+    assert results["checks"]["contention_victims_bit_exact"]
+    assert results["checks"]["contention_flood_starves_without_isolation"]

@@ -258,3 +258,60 @@ def test_pallas_backend_rejects_multi_wq_specs():
 def test_engine_for_spec_is_cached():
     srv = programs.build_recycled_get_server(n_buckets=8, val_len=2)
     assert ChainEngine.for_spec(srv.spec) is ChainEngine.for_spec(srv.spec)
+
+
+def test_pallas_send_validation_keyed_on_image(monkeypatch):
+    """Engines are memoized per (spec, backend), so the inter-QP-SEND
+    subset check must be keyed on the code-region *image*: after one valid
+    image is validated, a different image with the same spec must still be
+    scanned (regression: a one-shot boolean skipped it on the compiled TPU
+    fast path, silently no-op'ing the SEND)."""
+    from repro.core import assembler
+
+    def build(bad):
+        p = assembler.Program(320)
+        v = p.word(42)
+        d = p.word(0)
+        wq = p.add_wq(2)
+        if bad:
+            wq.send(src=v, ln=1, target_qp=0)      # inter-QP SEND to self
+        else:
+            wq.write(src=v, dst=d)
+        return p.finalize()
+
+    spec_good, st_good = build(False)
+    spec_bad, st_bad = build(True)
+    assert spec_good == spec_bad                   # same spec, two images
+    eng = ChainEngine(spec_good, backend="pallas-interpret")
+    # simulate the compiled-TPU fast path the old one-shot flag guarded
+    # (backend="pallas-interpret" keeps the kernel in interpret mode)
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+
+    batch = jax.tree_util.tree_map(lambda a: jnp.stack([a]), st_good)
+    out = eng.run_batch(batch, 8)                  # validates the good image
+    assert int(np.asarray(out.mem)[0, spec_good.mem_words - 2]) == 42
+
+    bad_batch = jax.tree_util.tree_map(lambda a: jnp.stack([a]), st_bad)
+    with pytest.raises(ValueError, match="inter-QP SEND"):
+        eng.run_batch(bad_batch, 8)
+
+    # the validated image still runs (the cache keeps keying correctly)
+    eng.run_batch(batch, 8)
+
+
+def test_run_many_accepts_traced_device_payloads():
+    """run_many must work on jnp payloads without a host round-trip (the
+    sharded serving path delivers traced arrays inside shard_map)."""
+    off = programs.build_hash_lookup(n_buckets=16, val_len=2)
+    off.insert(3, [30, 31])
+    off.insert(5, [50, 51])
+    st = off.materialize()
+    pays_np = np.asarray([off._payload(k) for k in (3, 5, 9)], np.int32)
+    want, _ = off.get_many([3, 5, 9])
+
+    got_state = jax.jit(
+        lambda s, p: off.engine.run_many(s, off.recv_wq, p, 256))(
+            st, jnp.asarray(pays_np))
+    got = np.asarray(got_state.mem[:, off.resp_region:
+                                   off.resp_region + off.val_len])
+    np.testing.assert_array_equal(got, want)

@@ -7,6 +7,16 @@ from _hyp import given, settings, st
 from repro.rdma import transport
 
 
+def _rank_quadratic(dest, live=None):
+    """The O(B^2) reference formulation the sort/segment-cumsum replaced."""
+    b = dest.shape[0]
+    same = dest[None, :] == dest[:, None]
+    earlier = jnp.tril(jnp.ones((b, b), jnp.bool_), k=-1)
+    if live is not None:
+        same = same & live[None, :]
+    return jnp.sum(same & earlier, axis=1).astype(jnp.int32)
+
+
 @settings(max_examples=30, deadline=None)
 @given(st.data())
 def test_rank_within_dest_is_a_valid_slotting(data):
@@ -22,11 +32,60 @@ def test_rank_within_dest_is_a_valid_slotting(data):
         assert sorted(ps) == list(range(len(ps))), (d, ps)
 
 
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_rank_within_dest_matches_quadratic(data):
+    """The sort/segment-cumsum formulation == the B x B mask version,
+    with and without a live mask."""
+    n = data.draw(st.integers(1, 48))
+    dests = jnp.asarray(
+        data.draw(st.lists(st.integers(0, 5), min_size=n, max_size=n)),
+        jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(transport.rank_within_dest(dests)),
+        np.asarray(_rank_quadratic(dests)))
+    live = jnp.asarray(
+        data.draw(st.lists(st.booleans(), min_size=n, max_size=n)))
+    got = np.asarray(transport.rank_within_dest(dests, live))
+    want = np.asarray(_rank_quadratic(dests, live))
+    # live rows must agree exactly; non-live rows consume no slot, so only
+    # their *live* successors' ranks are contractual
+    np.testing.assert_array_equal(got[np.asarray(live)],
+                                  want[np.asarray(live)])
+
+
+def test_rank_within_dest_matches_quadratic_deterministic():
+    """Seeded equivalence sweep (runs even without hypothesis)."""
+    rng = np.random.RandomState(7)
+    for _ in range(50):
+        n = rng.randint(1, 64)
+        dests = jnp.asarray(rng.randint(0, 6, n), jnp.int32)
+        live = jnp.asarray(rng.rand(n) < 0.6)
+        np.testing.assert_array_equal(
+            np.asarray(transport.rank_within_dest(dests)),
+            np.asarray(_rank_quadratic(dests)))
+        np.testing.assert_array_equal(
+            np.asarray(transport.rank_within_dest(dests, live)),
+            np.asarray(_rank_quadratic(dests, live)))
+
+
+def test_rank_within_dest_large_batch():
+    """Batch 4096 (the scale the O(B log B) formulation exists for)."""
+    rng = np.random.RandomState(0)
+    dest = jnp.asarray(rng.randint(0, 64, size=4096), jnp.int32)
+    pos = np.asarray(transport.rank_within_dest(dest))
+    d = np.asarray(dest)
+    for s in range(64):
+        grp = pos[d == s]
+        assert sorted(grp.tolist()) == list(range(len(grp)))
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.data())
 def test_dispatch_combine_roundtrip_identity(data):
     """On a 1-shard mesh: combine(f(dispatch(x))) == f(x) for elementwise f,
-    with drops exactly the over-capacity tail per destination."""
+    with the over-capacity tail per destination flagged not-ok (a drop is
+    reported, never silently aliased with a zero response)."""
     from jax.sharding import Mesh
     mesh = Mesh(np.array(jax.devices()[:1]), ("kv",))
     n = data.draw(st.integers(1, 16))
@@ -36,22 +95,49 @@ def test_dispatch_combine_roundtrip_identity(data):
     dest = jnp.zeros((n,), jnp.int32)
 
     def body(p, d):
-        recv, pos, dropped = transport.dispatch(p, d, 1, cap, "kv")
+        recv, pos, ok = transport.dispatch(p, d, 1, cap, "kv")
         resp = recv * 2                      # the "offload chain"
-        out = transport.combine(resp.reshape(1, cap, -1), d, pos, "kv")
-        return out, dropped
+        out = transport.combine(resp.reshape(1, cap, -1), d, pos, ok, "kv")
+        return out, ok
 
     from repro.compat import shard_map
     f = shard_map(body, mesh=mesh,
                   in_specs=(jax.sharding.PartitionSpec(),) * 2,
                   out_specs=(jax.sharding.PartitionSpec(),) * 2,
                   check_vma=False)
-    out, dropped = f(payload, dest)
+    out, ok = f(payload, dest)
     out = np.asarray(out)[:, 0]
-    want_drop = max(0, n - cap)
-    assert int(dropped) == want_drop
+    ok = np.asarray(ok)
     for i, v in enumerate(vals):
         if i < cap:
-            assert out[i] == 2 * v
+            assert ok[i] and out[i] == 2 * v
         else:
-            assert out[i] == 0               # dropped -> zeroed response
+            assert not ok[i]                 # dropped -> flagged, not missed
+
+
+def test_dispatch_live_mask_frees_slots():
+    """Deferred (not-live) requests consume no capacity slot: with the
+    first half of a same-destination batch deferred, the second half all
+    fits in a half-sized capacity window."""
+    from jax.sharding import Mesh
+    from repro.compat import shard_map
+    mesh = Mesh(np.array(jax.devices()[:1]), ("kv",))
+    n, cap = 8, 4
+    payload = jnp.arange(1, n + 1, dtype=jnp.int32)[:, None]
+    dest = jnp.zeros((n,), jnp.int32)
+    live = jnp.asarray([False] * 4 + [True] * 4)
+
+    def body(p, d, lv):
+        recv, pos, ok = transport.dispatch(p, d, 1, cap, "kv", lv)
+        out = transport.combine(recv.reshape(1, cap, -1), d, pos, ok, "kv")
+        return out, ok
+
+    f = shard_map(body, mesh=mesh,
+                  in_specs=(jax.sharding.PartitionSpec(),) * 3,
+                  out_specs=(jax.sharding.PartitionSpec(),) * 2,
+                  check_vma=False)
+    out, ok = f(payload, dest, live)
+    assert not np.asarray(ok)[:4].any()
+    assert np.asarray(ok)[4:].all()
+    np.testing.assert_array_equal(np.asarray(out)[4:, 0],
+                                  np.arange(5, n + 1))
