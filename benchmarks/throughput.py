@@ -129,12 +129,19 @@ def bench_recycled_pallas(results: dict):
 def main(out_path: str = OUT_PATH):
     import jax
 
-    results = {"meta": {
+    # merge into the existing json: the contention / mixed-workload
+    # benchmarks share this file, and a fresh dict would clobber their
+    # sections and checks
+    results = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            results = json.load(f)
+    results["meta"] = {
         "backend": jax.default_backend(),
         "batches": list(BATCHES),
         "note": "wall-clock on this host; pallas runs in interpret mode "
                 "off-TPU",
-    }}
+    }
     bench_hash_lookup(results)
     bench_recycled_pallas(results)
 
@@ -158,7 +165,7 @@ def main(out_path: str = OUT_PATH):
         "pallas_bit_exact":
             results["recycled_server"]["pallas_matches_interpreter"],
     }
-    results["checks"] = checks
+    results.setdefault("checks", {}).update(checks)
     for name, ok in checks.items():
         print(f"check,throughput.{name},{'PASS' if ok else 'FAIL'}")
 

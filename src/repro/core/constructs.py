@@ -6,6 +6,12 @@ word of a later (managed) WR.  The comparison ``x == y`` piggybacks on the
 raw 24-bit operand *is* the packed comparand.  On success the swap rewrites
 ``NOOP -> WRITE`` and the converted WR performs the then-branch.
 
+``CAS-claim`` — §3.5's write-side chained-CAS pattern: a CAS takes
+ownership of a memory cell and its *return-old* value, steered into a
+later conditional WR's control word, selects the success branch — the
+primitive behind the chain-offloaded hopscotch SET (claim an EMPTY
+bucket, then WRITE the value).
+
 ``while`` (unrolled) — Fig. 5: the iteration body replicated with statically
 baked addresses; per-iteration budget 1 copy + 1 atomic + 3 WAIT/ENABLE
 (Table 2).
@@ -69,6 +75,54 @@ def emit_if(ctl: WQBuilder, mod: WQBuilder, *, y: int = 0, x: int = 0,
     en = ctl.enable(mod, upto=mod.n_posted, tag="if.enable")
     return IfRefs(cas=cas, cond_wr=cond, enable=en,
                   x_ctrl_addr=cond.ctrl_addr, y_opa_addr=cas.addr("opa"))
+
+
+# ---------------------------------------------------------------------------
+# CAS-claim (§3.5): atomically take ownership of a cell, branch on success
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CasClaimRefs:
+    claim: WRRef        # the claiming CAS (its dst/opb are patch targets)
+    test: WRRef         # converts cond_wr iff the claim won
+    cond_wr: WRRef      # NOOP -> then-branch WRITE on successful claim
+    cell_dst_addr: int  # patch the claimed cell's address here (claim.dst)
+    new_opb_addr: int   # patch the claim value here (claim.opb)
+
+
+def emit_cas_claim(ctl: WQBuilder, mod: WQBuilder, *, cell: int = 0,
+                   expect: int = 0, new: int = 0, then_src: int,
+                   then_dst: int, then_len: int = 1) -> CasClaimRefs:
+    """Claim ``mem[cell]``: CAS ``expect -> new``, then-branch iff it won.
+
+    The paper's §3.5 write-side pattern (chained CAS building atomics wider
+    than one verb): the claiming CAS steers its *return-old* value into the
+    conditional WR's packed control word, so the follow-up test-CAS sees
+    ``pack(NOOP, old)`` and converts the conditional into its then-WRITE
+    exactly when ``old == expect`` — a losing claim leaves the cell *and*
+    the conditional untouched (the cond WR executes as a NOOP whose id
+    happens to be the occupying value).  ``cell``/``new`` are usually 0
+    here and patched at runtime via ``cell_dst_addr``/``new_opb_addr``
+    (RECV scatter or self-modifying WRITEs), which is how the hopscotch
+    writer aims one pre-posted claim at a client-chosen bucket.
+
+    Cell values must live in the 24-bit id space: the return-old lands in
+    a ctrl word, so a high byte would decode as an opcode.
+
+    The caller emits the ENABLE that releases ``mod`` (after the test-CAS
+    completes), so more WRs — e.g. the then-branch's event slots — can be
+    posted to ``mod`` behind ``cond_wr`` first.
+    """
+    cond = mod.post(isa.NOOP, id_=0, src=then_src, dst=then_dst,
+                    ln=then_len, tag="claim.cond")
+    claim = ctl.cas(dst=cell, old=expect, new=new, ret=cond.ctrl_addr,
+                    tag="claim.cas")
+    test = ctl.cas(dst=cond.ctrl_addr,
+                   old=isa.pack_ctrl(isa.NOOP, expect & isa.ID_MASK),
+                   new=isa.pack_ctrl(isa.WRITE, 0), tag="claim.test")
+    return CasClaimRefs(claim=claim, test=test, cond_wr=cond,
+                        cell_dst_addr=claim.addr("dst"),
+                        new_opb_addr=claim.addr("opb"))
 
 
 # ---------------------------------------------------------------------------

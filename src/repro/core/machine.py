@@ -84,9 +84,17 @@ GUARD_WORDS = max(isa.MAX_COPY, isa.MSG_WORDS)
 
 def init_state(spec: MachineSpec, mem_image: np.ndarray,
                tails: Sequence[int], enable_limits: Sequence[int]) -> VMState:
-    n = spec.num_wqs
     mem = np.zeros(spec.mem_words + GUARD_WORDS, dtype=np.int32)
     mem[: len(mem_image)] = mem_image
+    # the image is pure host data; force concrete arrays even when a
+    # (cached) program builder is first reached inside a jit trace —
+    # otherwise the cache would retain dead tracers
+    with jax.ensure_compile_time_eval():
+        return _init_state_arrays(spec, mem, tails, enable_limits)
+
+
+def _init_state_arrays(spec, mem, tails, enable_limits) -> VMState:
+    n = spec.num_wqs
     return VMState(
         mem=jnp.asarray(mem),
         head=jnp.zeros(n, jnp.int32),

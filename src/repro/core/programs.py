@@ -10,6 +10,10 @@
   layout so one READ performs both of Fig. 9's patches); the CAS converts
   the response NOOP into the value-returning WRITE only on a key match.
   Sequential (RedN-Seq) and parallel (RedN-Parallel) probe variants.
+* :class:`HopscotchShardServer` / :class:`HopscotchShardWriter` — §5.2's
+  sharded-store *get* and §3.5's CAS-claiming *set* as per-shard chain
+  programs over the same hopscotch layout (the device arrays are the
+  store's source of truth; only displacement falls back to the host).
 * :class:`ListTraversalOffload` — Fig. 12's linked-list walk, unrolled, with
   the optional Fig. 6-style break.
 * :func:`build_recycled_get_server` — a §3.4 WQ-recycled *get* server: the
@@ -29,15 +33,22 @@ import dataclasses
 import functools
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import isa, machine
+from . import constructs, isa, machine
 from .assembler import Program, WRRef
 from .engine import ChainEngine
 
 EMPTY_KEY = 0          # bucket key 0 == empty; live keys are 1..2^24-1
 MISS_SENTINEL = 0      # response region default (paper: "default value 0")
+
+# SET outcome codes reported by the hopscotch writer chain's response word
+# (mirrored in repro.kvstore.hopscotch, which core must not import)
+SET_UPDATED = 1              # key matched in neighborhood, value rewritten
+SET_INSERTED = 2             # EMPTY bucket CAS-claimed, key + value written
+SET_NEEDS_DISPLACEMENT = 3   # neighborhood full: host slow path required
 
 
 def _batched_get(off, keys: Sequence[int], max_steps: int):
@@ -220,11 +231,15 @@ class HopscotchShardServer:
     paper); H RedN-Parallel probe pairs each READ a bucket onto their
     response WR's ``[ctrl, flags, src]`` and CAS-convert it into the
     value-returning WRITE on a key match.  Value rows are
-    ``[1, v0..v{V-1}]`` — the leading found-flag word rides the same WRITE,
-    so the response region reads ``[found, value...]`` and a served miss is
-    ``[0, 0...]``, bit-exact with :func:`repro.kvstore.hopscotch.lookup`
-    (including the query-0-matches-empty-bucket edge, because empty rows
-    keep flag 1 and zero values).
+    ``[found, v0..v{V-1}]`` — the leading found-flag word rides the same
+    WRITE, so the response region reads ``[found, value...]`` and a served
+    miss is ``[0, 0...]``, bit-exact with
+    :func:`repro.kvstore.hopscotch.lookup`.  The flag word is *dynamic*:
+    ``device_state`` sets it to ``keys != EMPTY``, so a query of key 0 —
+    which CAS-matches every empty bucket exactly like the jnp probe does —
+    lands flag 0 and reads back as the miss it is (the empty-key ghost-hit
+    fix; a static flag 1 here used to report ``found=True`` with
+    garbage-zero values).
 
     WQ0 is a never-posted all-zero guard: a zero-padded request slot
     (capacity padding in the transport's receive window) probes address 0,
@@ -262,14 +277,17 @@ class HopscotchShardServer:
 
         keys: (n_buckets,) int32 (0 = empty); vals: (n_buckets, val_len).
         Pure jnp — works on traced arrays inside ``shard_map``.  The
-        found-flag words and val_ptr columns are static (baked at build
-        time); only keys and values are written here.
+        val_ptr columns are static (baked at build time); keys, values,
+        and the per-row found flag (``keys != EMPTY`` — empty rows must
+        answer a ghost-matching query 0 with found=0) are written here.
         """
         row_stride = self.val_len + 1
         rows = jnp.arange(self.n_buckets, dtype=jnp.int32)
         mem = self.state0.mem
         mem = mem.at[self.table_base + rows * BUCKET_WORDS].set(
             keys.astype(jnp.int32))
+        mem = mem.at[self.values_base + rows * row_stride].set(
+            (keys != EMPTY_KEY).astype(jnp.int32))
         vidx = (self.values_base + rows[:, None] * row_stride + 1
                 + jnp.arange(self.val_len, dtype=jnp.int32)[None, :])
         mem = mem.at[vidx.reshape(-1)].set(
@@ -335,12 +353,11 @@ def build_hopscotch_server(n_buckets: int, val_len: int,
     p = Program(mem_words)
     p.add_wq(1)                                   # WQ0: all-zero null bucket
     resp = p.alloc(row_stride, [MISS_SENTINEL] * row_stride, "resp")
-    # value rows: flag word 1 statically, even for empty rows — query 0
-    # CAS-matches an empty bucket exactly like the jnp oracle's probe does,
-    # and must land found=1 with zero value words
+    # value rows [found, v...]: the found flag is per-row dynamic state
+    # (device_state writes keys != EMPTY), so the static image is zeros —
+    # a query-0 CAS ghost-match on an empty row must land found=0
     values = p.alloc(n_buckets * row_stride,
-                     [1 if i % row_stride == 0 else 0
-                      for i in range(n_buckets * row_stride)], "values")
+                     [0] * (n_buckets * row_stride), "values")
     # table rows [key=0, pad, val_ptr]: val_ptr column baked statically
     tbl_init = [0] * (n_buckets * BUCKET_WORDS)
     for b in range(n_buckets):
@@ -378,6 +395,308 @@ def build_hopscotch_server(n_buckets: int, val_len: int,
         prog=p, spec=spec, state0=st0, n_buckets=n_buckets, val_len=val_len,
         neighborhood=neighborhood, table_base=table, values_base=values,
         resp_region=resp, recv_wq=rq.index)
+
+
+# ---------------------------------------------------------------------------
+# §3.5 — the sharded-store SET writer: CAS-claimed hopscotch writes
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class HopscotchShardWriter:
+    """The write-side companion of :class:`HopscotchShardServer`.
+
+    One pre-posted chain per owner shard makes SET a first-class offload
+    (§3.5: chained CAS builds atomics wider than one verb; the device
+    structure stays the source of truth).  The client SEND carries
+    ``[key, value x V, probe-bucket addrs x H]`` (the client computes the
+    hashes, like the paper); the chain then runs two phases:
+
+    * **match** — H RedN-Parallel probe pairs READ each bucket key onto a
+      conditional WR's control word and CAS-test it against the query key.
+      A hit converts the conditional into a Fig.-6-style template WRITE
+      that rewrites the two event WRs behind it into completion-suppressed
+      WRITEs: one copies the staged value over the bucket's value row
+      (through the val_ptr the probe READ forwarded into the template),
+      one lands ``[SET_UPDATED, bucket_addr]`` in the response region —
+      and the missing completions starve the claim phase entirely.
+    * **claim** — gated on *every* match probe completing un-hit, the
+      probes run again **sequentially**, each a
+      :func:`repro.core.constructs.emit_cas_claim`: CAS the bucket's key
+      word ``EMPTY -> key`` (the real atomic claim, against the table
+      itself), convert on success into the same suppressed
+      value-WRITE + ``[SET_INSERTED, bucket_addr]`` response pair, whose
+      missing completions break out of the remaining probes — first EMPTY
+      bucket wins, exactly like the host oracle's scan.
+
+    Neither phase firing leaves the pre-set default response
+    ``[SET_NEEDS_DISPLACEMENT, 0]`` — the host slow path's cue.
+
+    Contexts are ephemeral: the authoritative shard arrays live outside
+    the image, :meth:`device_state` scatters them in per run, and
+    :meth:`commit` folds a finished context's effects (status word, bucket
+    address, and the value row *the chain wrote*) back into the arrays.
+    Requests against one shard are serialized
+    (``transport.triggered_chain_stateful`` / :meth:`set_many` scan), as
+    the NIC serializes atomics against local memory — so a batch behaves
+    exactly like the host oracle applied in order.
+    """
+    prog: Program
+    spec: machine.MachineSpec
+    state0: machine.VMState
+    n_buckets: int
+    val_len: int
+    neighborhood: int
+    table_base: int
+    values_base: int
+    resp_region: int
+    recv_wq: int
+
+    resp_words = 2                     # [status, bucket addr]
+
+    @property
+    def engine(self) -> ChainEngine:
+        return ChainEngine.for_spec(self.spec)
+
+    def device_state(self, keys: jnp.ndarray,
+                     vals: jnp.ndarray) -> machine.VMState:
+        """Image with this shard's authoritative slice scattered in.
+
+        keys: (n_buckets,) int32 (0 = empty); vals: (n_buckets, val_len).
+        Pure jnp — works on traced arrays inside ``shard_map``/``scan``;
+        the val_ptr columns are static (baked at build time).
+        """
+        rows = jnp.arange(self.n_buckets, dtype=jnp.int32)
+        mem = self.state0.mem
+        mem = mem.at[self.table_base + rows * BUCKET_WORDS].set(
+            keys.astype(jnp.int32))
+        vidx = (self.values_base + rows[:, None] * self.val_len
+                + jnp.arange(self.val_len, dtype=jnp.int32)[None, :])
+        mem = mem.at[vidx.reshape(-1)].set(
+            vals.astype(jnp.int32).reshape(-1))
+        return self.state0._replace(mem=mem)
+
+    def device_payloads(self, queries: jnp.ndarray, home: jnp.ndarray,
+                        values: jnp.ndarray) -> jnp.ndarray:
+        """Client-side request assembly: ``[key, value x V, addrs x H]``.
+
+        queries: (B,) int32 keys (1..2^24-1); home: (B,) int32 home
+        buckets; values: (B, val_len) int32.
+        """
+        h = self.neighborhood
+        offs = jnp.arange(h, dtype=jnp.int32)
+        rows = (home[:, None] + offs[None, :]) % self.n_buckets
+        addrs = (self.table_base + rows * BUCKET_WORDS).astype(jnp.int32)
+        return jnp.concatenate(
+            [queries[:, None].astype(jnp.int32),
+             values.astype(jnp.int32).reshape(-1, self.val_len), addrs],
+            axis=1)
+
+    def commit(self, out_mem: jnp.ndarray, payload: jnp.ndarray,
+               keys: jnp.ndarray, vals: jnp.ndarray):
+        """Fold one quiesced context's effects into the shard arrays.
+
+        Returns ``(status, keys, vals)``.  Only UPDATED/INSERTED commit;
+        the committed value row is read back from where the chain wrote
+        it, not from the request.  A zero-padded request slot (key 0 — the
+        transport's capacity padding probes the null guard WQ) is never
+        committed and reports status 0.
+        """
+        status = out_mem[self.resp_region]
+        addr = out_mem[self.resp_region + 1]
+        applied = ((payload[0] != EMPTY_KEY)
+                   & ((status == SET_UPDATED) | (status == SET_INSERTED)))
+        row = jnp.where(applied,
+                        (addr - self.table_base) // BUCKET_WORDS, 0)
+        value = jax.lax.dynamic_slice(
+            out_mem, (self.values_base + row * self.val_len,),
+            (self.val_len,))
+        new_key = jnp.where(status == SET_INSERTED,
+                            payload[0].astype(keys.dtype), keys[row])
+        keys = keys.at[row].set(jnp.where(applied, new_key, keys[row]))
+        vals = vals.at[row].set(jnp.where(applied, value, vals[row]))
+        return jnp.where(payload[0] == EMPTY_KEY, 0, status), keys, vals
+
+    def run_one(self, keys: jnp.ndarray, vals: jnp.ndarray,
+                payload: jnp.ndarray, max_steps: int = 512):
+        """Serve one assembled request against the shard arrays: build the
+        image, deliver the SEND, run the chain to quiescence, commit.
+        The single step both :meth:`set_many` and the sharded path's scan
+        (``transport.triggered_chain_stateful``) are built from.
+        Returns ``(status, new_keys, new_vals)``.
+        """
+        st = machine.deliver(self.device_state(keys, vals), self.recv_wq,
+                             payload)
+        out = self.engine.run(st, max_steps)
+        return self.commit(out.mem, payload, keys, vals)
+
+    def set_many(self, keys: jnp.ndarray, vals: jnp.ndarray,
+                 queries: jnp.ndarray, home: jnp.ndarray,
+                 values: jnp.ndarray, max_steps: int = 512):
+        """Single-machine batched SET (tests / benchmarks; the sharded
+        path goes through ``transport.triggered_chain_stateful``).
+
+        One ``lax.scan`` over the request batch: each chain runs against
+        the arrays as left by its predecessors and its effects are
+        committed before the next — request i observes writes 0..i-1,
+        bit-exact with :func:`repro.kvstore.hopscotch.insert_many`.
+        Returns ``(status (B,), new_keys, new_vals)``.
+        """
+        payloads = self.device_payloads(queries, home, values)
+
+        def step(carry, pay):
+            status, tk, tv = self.run_one(*carry, pay, max_steps)
+            return (tk, tv), status
+
+        (nk, nv), statuses = jax.lax.scan(step, (keys, vals), payloads)
+        return statuses, nk, nv
+
+
+@functools.lru_cache(maxsize=None)
+def build_hopscotch_writer(n_buckets: int, val_len: int,
+                           neighborhood: int = 8) -> HopscotchShardWriter:
+    """Build (and cache per geometry) the per-shard hopscotch SET chain.
+
+    The request is one SEND: ``1 + val_len + neighborhood`` payload words
+    must fit the RECV scatter/message limits (§5.3: 16 scatters), so
+    ``val_len <= 15 - neighborhood``.
+    """
+    if not 1 <= neighborhood:
+        raise ValueError("neighborhood must be >= 1")
+    if 1 + val_len + neighborhood > min(isa.MAX_SCATTER, isa.MSG_WORDS):
+        raise ValueError(
+            f"val_len {val_len} + neighborhood {neighborhood} exceeds the "
+            f"one-SEND request budget ({isa.MAX_SCATTER}-scatter RECV)")
+    h = neighborhood
+
+    # size the image exactly: 1 guard WR + 2 recv slots + per probe
+    # (7 match-driver + 3 match-exec + 3 match-cond) + claim
+    # (5 driver-patch + 4 exec + 3 cond per probe); data grows down
+    code_words = (1 + 2 + h * (7 + 3 + 3) + 5 * h + 4 * h + 3 * h) \
+        * isa.WR_WORDS
+    data_words = (2 + 1 + val_len              # resp, key_w, val_stage
+                  + n_buckets * val_len        # value rows
+                  + n_buckets * BUCKET_WORDS   # table
+                  + h * 2 * (2 * isa.WR_WORDS + 2)   # templates + stages
+                  + 2 + val_len + h)           # scatter table
+    mem_words = -(-(code_words + data_words + 32) // 128) * 128
+
+    p = Program(mem_words)
+    p.add_wq(1)                 # WQ0: all-zero null bucket (padding guard)
+
+    # data: response defaults to the needs-displacement report
+    resp = p.alloc(2, [SET_NEEDS_DISPLACEMENT, 0], "resp")
+    key_w = p.word(0, "key")
+    val_stage = p.alloc(val_len, [0] * val_len, "val_stage")
+    values = p.alloc(n_buckets * val_len, name="values")
+    # table rows [key=0, pad, val_ptr]: val_ptr column baked statically
+    tbl_init = [0] * (n_buckets * BUCKET_WORDS)
+    for b in range(n_buckets):
+        tbl_init[b * BUCKET_WORDS + 2] = values + b * val_len
+    table = p.alloc(n_buckets * BUCKET_WORDS, tbl_init, "table")
+
+    rq = p.add_wq(2)
+
+    def _templates(stage_default):
+        """16-word Fig.-6 template (over the two event WRs): a suppressed
+        value WRITE (dst patched with the bucket's val_ptr at run time)
+        and a suppressed [status, bucket_addr] response WRITE."""
+        stage = p.alloc(2, [stage_default, 0])
+        tmpl = p.alloc(2 * isa.WR_WORDS, [
+            isa.pack_ctrl(isa.WRITE, 0), isa.FLAG_SUPPRESS_COMPLETION,
+            val_stage, 0, val_len, 0, 0, -1,
+            isa.pack_ctrl(isa.WRITE, 0), isa.FLAG_SUPPRESS_COMPLETION,
+            stage, resp, 2, 0, 0, -1])
+        return tmpl, stage
+
+    # --- match phase: H parallel probe pairs ------------------------------
+    rd1s, m_tmpls, m_mods = [], [], []
+    for pi in range(h):
+        tmpl, stage = _templates(SET_UPDATED)
+        mmod = p.add_wq(3, ordering=isa.ORD_DOORBELL, managed=True,
+                        initial_enable=0)
+        mdrv = p.add_wq(7, ordering=isa.ORD_DOORBELL, managed=True)
+        mexe = p.add_wq(3, ordering=isa.ORD_DOORBELL, managed=True,
+                        initial_enable=3)
+
+        c_i = mmod.post(isa.NOOP, src=tmpl,
+                        dst=mmod.future_wr_addr(1, "ctrl"),
+                        ln=2 * isa.WR_WORDS, tag=f"wr.mc{pi}")
+        mmod.post(isa.NOOP, tag=f"wr.me{pi}")     # event: value WRITE slot
+        mmod.post(isa.NOOP, tag=f"wr.mf{pi}")     # event: response slot
+
+        mdrv.wait(rq, 1, tag=f"wr.trig{pi}")
+        mdrv.write(src=key_w, dst=mexe.future_wr_addr(1, "opa"),
+                   tag=f"wr.key{pi}")             # CAS comparand <- key
+        rd1 = mdrv.read(src=0, dst=c_i.ctrl_addr, ln=1,
+                        tag=f"wr.read{pi}")       # src scatter-patched
+        mdrv.write(src=rd1.addr("src"), dst=mdrv.future_wr_addr(2, "src"),
+                   tag=f"wr.vp_patch{pi}")
+        mdrv.add(dst=mdrv.future_wr_addr(1, "src"), addend=2,
+                 tag=f"wr.vp_off{pi}")
+        mdrv.read(src=0, dst=tmpl + isa.F_DST, ln=1,
+                  tag=f"wr.vp{pi}")               # val_ptr -> template dst
+        mdrv.write(src=rd1.addr("src"), dst=stage + 1,
+                   tag=f"wr.addr{pi}")            # bucket addr -> response
+        mdrv.initial_enable = mdrv.n_posted + 1
+
+        mexe.wait(mdrv, 7, tag=f"wr.sync{pi}")
+        mexe.cas(dst=c_i.ctrl_addr, old=isa.pack_ctrl(isa.NOOP, 0),
+                 new=isa.pack_ctrl(isa.WRITE, 0), tag=f"wr.cas{pi}")
+        mexe.enable(mmod, upto=3, tag=f"wr.en{pi}")
+        rd1s.append(rd1)
+        m_tmpls.append(tmpl)
+        m_mods.append(mmod)
+
+    # --- claim phase: sequential CAS-claims, gated on an all-miss match ---
+    cdrv = p.add_wq(5 * h, ordering=isa.ORD_DOORBELL, managed=True)
+    cexe = p.add_wq(4 * h, ordering=isa.ORD_DOORBELL, managed=True)
+    cmod = p.add_wq(3 * h, ordering=isa.ORD_DOORBELL, managed=True,
+                    initial_enable=0)
+
+    claims = []
+    for pi in range(h):
+        tmpl, stage = _templates(SET_INSERTED)
+        if pi == 0:
+            # every cdrv patch below completed (and, transitively, every
+            # match probe finished without a hit)
+            cexe.wait(cdrv, 5 * h, tag="wr.cgate")
+        else:
+            # previous claim resolved un-claimed (its events completed)
+            cexe.wait(cmod, 3 * pi, tag=f"wr.cseq{pi}")
+        refs = constructs.emit_cas_claim(
+            cexe, cmod, cell=0, expect=EMPTY_KEY, new=0, then_src=tmpl,
+            then_dst=cmod.future_wr_addr(1, "ctrl"),
+            then_len=2 * isa.WR_WORDS)
+        cmod.post(isa.NOOP, tag=f"wr.ce{pi}")     # event: value WRITE slot
+        cmod.post(isa.NOOP, tag=f"wr.cf{pi}")     # event: response slot
+        cexe.enable(cmod, upto=3 * (pi + 1), tag=f"wr.cen{pi}")
+        claims.append((refs, tmpl, stage))
+    cexe.initial_enable = cexe.n_posted + 1
+
+    for pi in range(h):
+        cdrv.wait(m_mods[pi], 3, tag=f"wr.nomatch{pi}")
+    for pi, (refs, tmpl, stage) in enumerate(claims):
+        cdrv.write(src=rd1s[pi].addr("src"), dst=refs.cell_dst_addr,
+                   tag=f"wr.cdst{pi}")            # claim the probed bucket
+        cdrv.write(src=key_w, dst=refs.new_opb_addr,
+                   tag=f"wr.cnew{pi}")            # CAS new <- key
+        cdrv.write(src=m_tmpls[pi] + isa.F_DST, dst=tmpl + isa.F_DST,
+                   tag=f"wr.cvp{pi}")             # reuse probed val_ptr
+        cdrv.write(src=rd1s[pi].addr("src"), dst=stage + 1,
+                   tag=f"wr.caddr{pi}")           # bucket addr -> response
+    cdrv.initial_enable = cdrv.n_posted + 1
+
+    # RECV scatter: key, staged value words, one probe addr per READ
+    tbl = p.scatter_table(
+        [key_w] + [val_stage + j for j in range(val_len)]
+        + [rd.addr("src") for rd in rd1s])
+    rq.recv(scatter_table=tbl, tag="wr.recv")
+
+    spec, st0 = p.finalize()
+    return HopscotchShardWriter(
+        prog=p, spec=spec, state0=st0, n_buckets=n_buckets,
+        val_len=val_len, neighborhood=neighborhood, table_base=table,
+        values_base=values, resp_region=resp, recv_wq=rq.index)
 
 
 # ---------------------------------------------------------------------------

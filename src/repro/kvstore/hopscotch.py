@@ -1,23 +1,40 @@
 """Hopscotch hash table (paper §5.2) in JAX arrays.
 
-Inserts (the *set* path) run on the host with displacement, like RedN —
-"the server CPU populates; gets are offloaded".  The batched *get* is pure
-``jnp`` and doubles as the oracle for the Pallas ``hopscotch`` kernel.
+The host table is the *slow-path* helper of the device-resident store:
+update and in-neighborhood insert are chain-offloaded (§3.5 chained-CAS
+writes — see ``repro.core.programs.build_hopscotch_writer``); only
+displacement runs here, on a host copy synced *from* the authoritative
+device arrays.  The batched *get* is pure ``jnp`` and doubles as the
+oracle for the Pallas ``hopscotch`` kernel and the chain get server;
+:meth:`HopscotchTable.set_fast` / :func:`insert_many` are the matching
+oracles for the chain writer.
 
 Layout: open-addressed array of ``n_buckets``; a key hashing to bucket ``b``
 lives within the neighborhood ``[b, b+H)`` (wrapping).  ``keys[i] == 0``
 means empty.  Values are fixed-width word payloads in a parallel array.
+
+Because 0 doubles as the empty marker, a *query* of key 0 would compare
+equal to every empty bucket — the classic ghost-hit aliasing.  Every
+lookup path here (and the chain program, and the one-sided window compare
+in ``store.py``) masks ``found &= query != EMPTY``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 EMPTY = 0
 _MULT = 2654435761
+
+# SET outcome codes reported by the chain writer's response word.  Kept
+# numerically identical to repro.core.programs.SET_* (the chain is built
+# against those; core must not import kvstore) — cross-checked in tests.
+SET_UPDATED = 1              # key present in neighborhood, value rewritten
+SET_INSERTED = 2             # EMPTY bucket in neighborhood CAS-claimed
+SET_NEEDS_DISPLACEMENT = 3   # neighborhood full: host slow path required
 
 
 def bucket_of(key, n_buckets: int):
@@ -33,21 +50,55 @@ class HopscotchTable:
     keys: np.ndarray           # (n_buckets,) int32, 0 = empty
     values: np.ndarray         # (n_buckets, val_words) int32
     neighborhood: int          # H
+    # rows mutated by the most recent insert()/set_fast() — lets the device
+    # mirror apply O(touched) per-row updates instead of re-uploading the
+    # whole table
+    last_touched: List[int] = dataclasses.field(default_factory=list)
 
     @property
     def n_buckets(self) -> int:
         return len(self.keys)
 
     # -- host-side set path ---------------------------------------------------
+    def set_fast(self, key: int, value: Sequence[int]) -> int:
+        """The chain writer's exact fast-path semantics (no displacement).
+
+        Scan the neighborhood for the key (first match -> in-place value
+        write, ``SET_UPDATED``); otherwise CAS-claim the *first* EMPTY
+        bucket in the neighborhood (``SET_INSERTED``); otherwise report
+        ``SET_NEEDS_DISPLACEMENT`` without mutating anything.  Bit-exact
+        oracle for ``repro.core.programs.build_hopscotch_writer``.
+        """
+        assert key != EMPTY
+        n, H = self.n_buckets, self.neighborhood
+        home = int(bucket_of(key, n))
+        self.last_touched = []
+        for d in range(H):
+            i = (home + d) % n
+            if self.keys[i] == key:
+                self.values[i, :len(value)] = value
+                self.last_touched = [i]
+                return SET_UPDATED
+        for d in range(H):
+            i = (home + d) % n
+            if self.keys[i] == EMPTY:
+                self.keys[i] = key
+                self.values[i, :len(value)] = value
+                self.last_touched = [i]
+                return SET_INSERTED
+        return SET_NEEDS_DISPLACEMENT
+
     def insert(self, key: int, value: Sequence[int]) -> bool:
         assert key != EMPTY
         n, H = self.n_buckets, self.neighborhood
         home = int(bucket_of(key, n))
+        self.last_touched = []
         # update in place if present
         for d in range(H):
             i = (home + d) % n
             if self.keys[i] == key:
                 self.values[i, :len(value)] = value
+                self.last_touched = [i]
                 return True
         # find a free slot by linear probe
         free = None
@@ -73,6 +124,7 @@ class HopscotchTable:
                     self.keys[free] = ck
                     self.values[free] = self.values[cand]
                     self.keys[cand] = EMPTY
+                    self.last_touched += [free, cand]
                     free = cand
                     dist = (free - home) % n
                     moved = True
@@ -81,6 +133,7 @@ class HopscotchTable:
                 return False      # needs resize; caller's problem
         self.keys[free] = key
         self.values[free, :len(value)] = value
+        self.last_touched.append(free)
         return True
 
     def as_device(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -99,6 +152,8 @@ def lookup(keys: jnp.ndarray, values: jnp.ndarray, queries: jnp.ndarray,
     """Batched hopscotch get — the pure-jnp oracle.
 
     Returns (found: bool[B], value: int32[B, val_words]); misses yield 0s.
+    A query of ``EMPTY`` (0) is always a miss — without the mask it would
+    ghost-hit every empty bucket and report found with garbage-zero values.
     """
     n = keys.shape[0]
     home = bucket_of(queries, n)                                  # (B,)
@@ -106,8 +161,22 @@ def lookup(keys: jnp.ndarray, values: jnp.ndarray, queries: jnp.ndarray,
     idx = (home[:, None] + offs[None, :]) % n                     # (B, H)
     probed = keys[idx]                                            # (B, H)
     hit = probed == queries[:, None].astype(probed.dtype)
-    found = jnp.any(hit, axis=1)
+    found = jnp.any(hit, axis=1) & (queries != EMPTY)
     slot = jnp.argmax(hit, axis=1)
     rows = jnp.take_along_axis(idx, slot[:, None], axis=1)[:, 0]  # (B,)
     vals = values[rows] * found[:, None].astype(values.dtype)
     return found, vals
+
+
+def insert_many(table: HopscotchTable, keys, values) -> np.ndarray:
+    """Batched host insert oracle with the writer chain's semantics.
+
+    Applies the SET batch *in order* via :meth:`HopscotchTable.set_fast`
+    (update / in-neighborhood insert; needs-displacement rows leave the
+    table untouched) and returns the per-request status codes — the
+    reference the chain writer's response words are tested against.
+    """
+    return np.asarray(
+        [table.set_fast(int(k), [int(x) for x in np.asarray(v)])
+         for k, v in zip(np.asarray(keys).tolist(), values)],
+        np.int32)

@@ -19,11 +19,18 @@ All three return identical values on served requests (tested); they differ
 in collective phases and in which resource does the work — which is what
 the fidelity benchmarks price.
 
-Every path returns a :class:`GetResult` whose per-request ``ok`` mask says
-whether the response is authoritative: a request dropped at the transport's
-capacity limit, or deferred by the per-client admission stage
-(``sharded_get_isolated``), has ``ok=False`` and must never be read as a
-key miss.
+Writes are chain-offloaded too: :func:`sharded_set` routes SET batches to
+the owner shards, where the pre-posted *writer* chain
+(:func:`repro.core.programs.build_hopscotch_writer`) match-updates or
+CAS-claims buckets against the **authoritative device arrays** — the host
+tables are only a displacement slow-path helper that syncs *from* device
+(``rdma.failure.ShardedKVService.set``).
+
+Every path returns a :class:`GetResult` (sets: :class:`SetResult`) whose
+per-request ``ok`` mask says whether the response is authoritative: a
+request dropped at the transport's capacity limit, or deferred by the
+per-client admission stage (``sharded_get_isolated``), has ``ok=False``
+and must never be read as a key miss (or a failed set).
 """
 from __future__ import annotations
 
@@ -31,6 +38,7 @@ import dataclasses
 import functools
 from typing import NamedTuple, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
@@ -87,17 +95,19 @@ class ShardedKV:
                   for _ in range(n_shards)]
         return cls(tables, n_shards, val_words, neighborhood)
 
-    def set(self, key: int, value: Sequence[int]) -> bool:
-        """Host-side set (the server CPU populates, like the paper).
-
-        Keys live in the chain ISA's 24-bit id space (the CAS-convertible
-        control word packs ``opcode:8 | id:24``), exactly like
-        ``HashLookupOffload.insert``.
-        """
+    @staticmethod
+    def check_key(key: int):
+        """Keys live in the chain ISA's 24-bit id space (the CAS-convertible
+        control word packs ``opcode:8 | id:24``) — a wider key's top byte
+        would decode as an opcode once a probe READ lands it on a WR's ctrl
+        word, and key 0 is the EMPTY bucket marker."""
         if not 0 < key <= 0xFFFFFF:
-            # a wider key's top byte would decode as an opcode once the
-            # probe READ lands it on a response WR's ctrl word
             raise ValueError(f"keys are 24-bit chain ids, got {key:#x}")
+
+    def set(self, key: int, value: Sequence[int]) -> bool:
+        """Host-side set (bootstrap / displacement slow path; the serving
+        fast path is the chain-offloaded :func:`sharded_set`)."""
+        self.check_key(key)
         return self.tables[int(shard_of(key, self.n_shards))].insert(
             key, value)
 
@@ -105,6 +115,15 @@ class ShardedKV:
         keys = jnp.stack([jnp.asarray(t.keys) for t in self.tables])
         vals = jnp.stack([jnp.asarray(t.values) for t in self.tables])
         return keys, vals     # (S, B), (S, B, V)
+
+    def sync_from_device(self, keys, vals):
+        """Refresh the host tables *from* the authoritative device arrays
+        (the slow-path direction: chain-offloaded sets mutate the device
+        state; the host copy is only consulted for displacement)."""
+        kk, vv = np.asarray(keys), np.asarray(vals)
+        for s, t in enumerate(self.tables):
+            t.keys = kk[s].copy()
+            t.values = vv[s].copy()
 
 
 # ---------------------------------------------------------------------------
@@ -144,7 +163,9 @@ def _one_sided_get_local(keys, vals, queries, live, *, n_shards, capacity,
     window, ok = transport.one_sided_read(remote_window, dest, home, axis,
                                           n_shards, capacity, lv)  # (B, H)
     hit = window == q[:, None].astype(window.dtype)
-    found = jnp.any(hit, axis=1)
+    # a query of EMPTY (0) compares equal to every empty bucket in the
+    # window — mask it or it ghost-hits with garbage-zero values
+    found = jnp.any(hit, axis=1) & (q != hopscotch.EMPTY)
     slot = jnp.argmax(hit, axis=1).astype(jnp.int32)
     row = (home + slot) % n_buckets
 
@@ -199,13 +220,35 @@ def sharded_get(mesh: Mesh, axis: str, keys: jnp.ndarray, vals: jnp.ndarray,
     """
     n_shards = mesh.shape[axis]
     b_local = queries.shape[1]
-    capacity = capacity or b_local
+    # `capacity or b_local` would silently turn an explicit capacity=0
+    # into the default; 0 is a legal (drop-everything) limit
+    capacity = b_local if capacity is None else capacity
     if live is None:
         live = jnp.ones(queries.shape, jnp.bool_)
+    if capacity == 0:
+        # nothing can be dispatched: every live request is a capacity drop
+        return GetResult(
+            found=jnp.zeros(queries.shape, jnp.bool_),
+            values=jnp.zeros(queries.shape + (vals.shape[-1],), vals.dtype),
+            ok=jnp.zeros(queries.shape, jnp.bool_),
+            dropped=jnp.sum(live, axis=1, dtype=jnp.int32),
+            deferred=jnp.sum(~live, axis=1, dtype=jnp.int32))
 
+    mapped = _mapped_get(mesh, axis, method, n_shards, capacity,
+                         neighborhood, vals.shape[-1])
+    return GetResult(*mapped(keys, vals, queries, live))
+
+
+@functools.lru_cache(maxsize=None)
+def _mapped_get(mesh: Mesh, axis: str, method: str, n_shards: int,
+                capacity: int, neighborhood: int, val_words: int):
+    """Compile-cache the sharded get per (mesh, geometry): the shard_map
+    body is built once and jitted, so repeated serving calls reuse the
+    compiled step instead of re-tracing the chain VM loop per call (and
+    eager/jit callers cannot disagree about trace context)."""
     path = functools.partial(
         _PATHS[method], n_shards=n_shards, capacity=capacity, axis=axis,
-        neighborhood=neighborhood, val_words=vals.shape[-1])
+        neighborhood=neighborhood, val_words=val_words)
 
     def body(keys, vals, queries, live):
         found, v, ok = path(keys, vals, queries, live)
@@ -215,10 +258,9 @@ def sharded_get(mesh: Mesh, axis: str, keys: jnp.ndarray, vals: jnp.ndarray,
         return found, v, ok, dropped, deferred
 
     spec = P(axis)
-    mapped = shard_map(
+    return jax.jit(shard_map(
         body, mesh=mesh, in_specs=(spec, spec, spec, spec),
-        out_specs=(spec, spec, spec, spec, spec), check_vma=False)
-    return GetResult(*mapped(keys, vals, queries, live))
+        out_specs=(spec, spec, spec, spec, spec), check_vma=False))
 
 
 def sharded_get_isolated(mesh: Mesh, axis: str, keys: jnp.ndarray,
@@ -240,6 +282,119 @@ def sharded_get_isolated(mesh: Mesh, axis: str, keys: jnp.ndarray,
     live = admitted.reshape(queries.shape)
     return (sharded_get(mesh, axis, keys, vals, queries, live=live,
                         **kwargs), bucket)
+
+
+# ---------------------------------------------------------------------------
+# the chain-offloaded SET path (§3.5: the device structure is the source
+# of truth; the host is only the displacement slow path)
+# ---------------------------------------------------------------------------
+
+class SetResult(NamedTuple):
+    """Distributed set outcome.  ``status`` is authoritative only where
+    ``ok`` is True (a False row was dropped/deferred, status 0); values:
+    ``SET_UPDATED`` (1), ``SET_INSERTED`` (2), or
+    ``SET_NEEDS_DISPLACEMENT`` (3 — nothing committed, host slow path
+    required).  ``applied`` acks the rows the device arrays absorbed."""
+    status: jnp.ndarray     # (S, B) int32 — the path taken per request
+    applied: jnp.ndarray    # (S, B) bool — committed to the device arrays
+    ok: jnp.ndarray         # (S, B) bool — response authoritative
+    dropped: jnp.ndarray    # (S,) int32
+    deferred: jnp.ndarray   # (S,) int32
+
+
+def _writer_set_local(keys, vals, qk, qv, live, *, n_shards, capacity, axis,
+                      neighborhood, val_words, max_steps):
+    """Owner-side SET serving: the pre-posted writer chain CAS-claims /
+    updates buckets; requests against one shard are serialized so each
+    chain observes its predecessors' writes (no host lookup anywhere)."""
+    q = qk.reshape(-1)
+    dest = shard_of(q, n_shards)
+    n_buckets = keys.shape[1]
+    writer = programs.build_hopscotch_writer(n_buckets, val_words,
+                                             neighborhood)
+    payload = writer.device_payloads(q, hopscotch.bucket_of(q, n_buckets),
+                                     qv.reshape(-1, val_words))
+
+    def step(carry, pay):
+        status, tk, tv = writer.run_one(*carry, pay, max_steps)
+        return (tk, tv), status[None]
+
+    resp, ok, (nk, nv) = transport.triggered_chain_stateful(
+        step, (keys[0], vals[0]), payload, dest, n_shards, capacity, axis,
+        1, live.reshape(-1))
+    return resp[:, 0][None], ok[None], nk[None], nv[None]
+
+
+def sharded_set(mesh: Mesh, axis: str, keys: jnp.ndarray, vals: jnp.ndarray,
+                set_keys: jnp.ndarray, set_vals: jnp.ndarray,
+                neighborhood: int = 8, capacity: Optional[int] = None,
+                live: Optional[jnp.ndarray] = None,
+                max_steps: int = 512
+                ) -> Tuple[SetResult, jnp.ndarray, jnp.ndarray]:
+    """Batched chain-offloaded distributed SET.
+
+    set_keys: (S, B_local) int32 keys in 1..2^24-1 (dim 0 sharded; 0 marks
+    an unused slot — never dispatched, never committed, reported
+    ``ok=False``/status 0 and excluded from the drop/defer counters);
+    set_vals: (S, B_local, V).
+    Each request is routed to its owner shard, where the pre-posted
+    **writer chain program** (:func:`repro.core.programs.
+    build_hopscotch_writer`) match-updates or CAS-claims a bucket — the
+    same 1-RTT wire pattern as the redn get, with the *device arrays as
+    the authoritative store*.  Returns ``(SetResult, new_keys,
+    new_vals)``; the caller must adopt the returned arrays (functional
+    update, like any jnp state).  ``SET_NEEDS_DISPLACEMENT`` rows left
+    the store untouched and need the host slow path
+    (``failure.ShardedKVService.set``).
+    """
+    n_shards = mesh.shape[axis]
+    b_local = set_keys.shape[1]
+    capacity = b_local if capacity is None else capacity
+    if live is None:
+        live = jnp.ones(set_keys.shape, jnp.bool_)
+    real = set_keys != hopscotch.EMPTY
+    if capacity == 0:
+        zi = jnp.zeros(set_keys.shape, jnp.int32)
+        return (SetResult(
+            status=zi, applied=zi.astype(bool), ok=zi.astype(bool),
+            dropped=jnp.sum(live & real, axis=1, dtype=jnp.int32),
+            deferred=jnp.sum(~live & real, axis=1, dtype=jnp.int32)),
+            keys, vals)
+
+    mapped = _mapped_set(mesh, axis, n_shards, capacity, neighborhood,
+                         vals.shape[-1], max_steps)
+    status, ok, dropped, deferred, nk, nv = mapped(keys, vals, set_keys,
+                                                   set_vals, live)
+    applied = ok & ((status == programs.SET_UPDATED)
+                    | (status == programs.SET_INSERTED))
+    return SetResult(status, applied, ok, dropped, deferred), nk, nv
+
+
+@functools.lru_cache(maxsize=None)
+def _mapped_set(mesh: Mesh, axis: str, n_shards: int, capacity: int,
+                neighborhood: int, val_words: int, max_steps: int):
+    """Compile-cache the sharded set per (mesh, geometry), like
+    :func:`_mapped_get` — one trace of the writer-chain scan serves every
+    subsequent batch of the same shape."""
+    path = functools.partial(
+        _writer_set_local, n_shards=n_shards, capacity=capacity, axis=axis,
+        neighborhood=neighborhood, val_words=val_words,
+        max_steps=max_steps)
+
+    def body(keys, vals, qk, qv, live):
+        # unused (key-0) slots are inert: no dispatch slot, no counter
+        real = qk != hopscotch.EMPTY
+        live = live & real
+        status, ok, nk, nv = path(keys, vals, qk, qv, live)
+        deferred = jnp.sum(~live & real, dtype=jnp.int32).reshape(1)
+        dropped = (jnp.sum(live, dtype=jnp.int32)
+                   - jnp.sum(ok, dtype=jnp.int32)).reshape(1)
+        return status, ok, dropped, deferred, nk, nv
+
+    spec = P(axis)
+    return jax.jit(shard_map(
+        body, mesh=mesh, in_specs=(spec,) * 5, out_specs=(spec,) * 6,
+        check_vma=False))
 
 
 # ---------------------------------------------------------------------------

@@ -5,10 +5,11 @@ so the NIC keeps executing pre-posted recycled chains when the Memcached
 child (or the whole OS) dies.  The TPU analogue: the serving state — the
 recycled chain VM state, the hash table, the response regions — lives in
 *device buffers* owned by :class:`DeviceResidentService`; the *host driver*
-(config, logging, set-path plumbing) is a disposable Python object.
-Crashing and restarting the driver touches no device state, so gets keep
-being served with zero recovery time; a cold restart must rebuild the
-table and re-post chains (the multi-second gap Fig. 16 shows).
+(config, logging, displacement plumbing) is a disposable Python object.
+Crashing and restarting the driver touches no device state, so gets — and,
+on the sharded store, chain-offloaded fast-path sets — keep being served
+with zero recovery time; a cold restart must rebuild the table and re-post
+chains (the multi-second gap Fig. 16 shows).
 """
 from __future__ import annotations
 
@@ -95,14 +96,17 @@ class DeviceResidentService(_HostDriverLifecycle):
 @dataclasses.dataclass
 class ShardedKVService(_HostDriverLifecycle):
     """The §5.6 story at production scale: the *sharded* store's serving
-    state — device arrays plus the pre-posted per-shard chain program — is
-    device-resident; the host driver (set-path plumbing, config, logging)
-    is a disposable Python object.  Kill the driver and ``sharded gets``
-    keep executing their chain VM programs at the owner shards with zero
-    recovery time; only the *set* path (host CPU populates, like the
-    paper's Memcached) needs a live driver.
+    state — device arrays plus the pre-posted per-shard chain programs —
+    is device-resident; the host driver (config, logging, the displacement
+    slow path) is a disposable Python object.  Kill the driver and both
+    ``sharded gets`` *and* fast-path sets (update / in-neighborhood
+    insert) keep executing their chain VM programs at the owner shards
+    with zero recovery time; only hopscotch *displacement* — the rare
+    neighborhood-full insert — needs a live host, which syncs its table
+    copy *from* the authoritative device arrays, bubbles, and pushes back
+    per-row updates.
     """
-    kv: "kv_store.ShardedKV"       # host handle (the crash-prone set path)
+    kv: "kv_store.ShardedKV"       # host handle (displacement slow path)
     mesh: object                   # jax Mesh over the serving axis
     axis: str
     keys: object                   # (S, B) device array
@@ -138,12 +142,59 @@ class ShardedKVService(_HostDriverLifecycle):
         return kv_store.sharded_get(self.mesh, self.axis, self.keys,
                                     self.vals, q, method="redn", **kwargs)
 
-    # -- the set path (host-owned, dies with the driver) ---------------------
+    def set_many(self, set_keys, set_vals, **kwargs) -> "kv_store.SetResult":
+        """Batched chain-offloaded sets: the writer chain programs execute
+        at the owner shards against the authoritative device arrays.
+        Works with the driver dead.  ``SET_NEEDS_DISPLACEMENT`` rows left
+        the store untouched — route them through :meth:`set` (which needs
+        a live driver for the displacement)."""
+        import jax.numpy as jnp
+
+        qk = jnp.asarray(set_keys, jnp.int32)
+        qv = jnp.asarray(set_vals, jnp.int32)
+        if qk.ndim == 1:
+            qk, qv = qk[None, :], qv[None, :, :]
+        res, self.keys, self.vals = kv_store.sharded_set(
+            self.mesh, self.axis, self.keys, self.vals, qk, qv, **kwargs)
+        return res
+
+    # -- the set path: chain fast path + host displacement slow path ---------
     def set(self, key: int, value: Sequence[int]) -> bool:
+        """Update / in-neighborhood insert ride the writer chain (device
+        state only — survives a dead driver); only a neighborhood-full
+        insert falls back to host displacement, the one step that still
+        dies with the Memcached process."""
+        import jax.numpy as jnp
+
+        kv_store.ShardedKV.check_key(key)
+        n_shards = self.kv.n_shards
+        # one real request from shard 0; other source shards contribute a
+        # zero-padded slot that the writer's null guard ignores
+        qk = np.zeros((n_shards, 1), np.int32)
+        qk[0, 0] = key
+        qv = np.zeros((n_shards, 1, self.kv.val_words), np.int32)
+        qv[0, 0, :len(value)] = value
+        res = self.set_many(qk, qv)
+        status = int(np.asarray(res.status)[0, 0])
+        if status in (programs.SET_UPDATED, programs.SET_INSERTED):
+            return True
+
+        # needs-displacement: host slow path (§5.6's residual host role)
         if not self.host_alive():
             raise RuntimeError(
-                "set path needs the host driver (gets keep serving)")
-        ok = self.kv.set(key, value)
+                "displacement insert needs the host driver (gets and "
+                "fast-path sets keep serving)")
+        shard = int(kv_store.shard_of(key, n_shards))
+        t = self.kv.tables[shard]
+        # sync the host copy *from* the authoritative device slice, bubble,
+        # then push back only the touched rows (O(moves), not O(table))
+        t.keys = np.asarray(self.keys)[shard].copy()
+        t.values = np.asarray(self.vals)[shard].copy()
+        ok = t.insert(key, list(value))
         if ok:
-            self.keys, self.vals = self.kv.device_arrays()
+            rows = np.asarray(sorted(set(t.last_touched)), np.int32)
+            self.keys = self.keys.at[shard, rows].set(
+                jnp.asarray(t.keys[rows]))
+            self.vals = self.vals.at[shard, rows].set(
+                jnp.asarray(t.values[rows]))
         return ok

@@ -21,7 +21,10 @@ The owner-side work comes in two flavors:
 * :func:`triggered_chain_engine` — the RedN path proper: the arriving
   requests are delivered to a pre-posted **chain VM program** and executed
   by :class:`repro.core.engine.ChainEngine` where the data lives, one
-  vmapped run per serving step.
+  vmapped run per serving step;
+* :func:`triggered_chain_stateful` — the read-*write* variant (the SET
+  offload): the receive window streams through the chain sequentially and
+  the owner's authoritative state is threaded as a scan carry.
 """
 from __future__ import annotations
 
@@ -144,6 +147,33 @@ def triggered_chain(remote_fn: Callable, payload: jnp.ndarray,
     flat = recv.reshape(-1, recv.shape[-1])
     resp = remote_fn(flat).reshape(n_shards, capacity, resp_words)
     return combine(resp, dest, pos, ok, axis_name), ok
+
+
+def triggered_chain_stateful(step_fn: Callable, carry, payload: jnp.ndarray,
+                             dest: jnp.ndarray, n_shards: int, capacity: int,
+                             axis_name: str, resp_words: int,
+                             live: Optional[jnp.ndarray] = None):
+    """SEND-triggered chains that *mutate* owner state (the §3.5 read-write
+    offload — the SET path's wire pattern).
+
+    Same 1-RTT dispatch/combine structure as
+    :func:`triggered_chain_engine`, but the owner's receive window is
+    streamed through ``step_fn(carry, request_row) -> (carry, resp_row)``
+    **sequentially** (one ``lax.scan``), so every chain run observes every
+    earlier request's writes — the NIC serializes atomics against local
+    memory, and a batch therefore behaves exactly like the requests
+    applied one at a time.  ``carry`` is the owner's authoritative state
+    (e.g. the shard's hopscotch arrays); zero-padded window slots reach
+    ``step_fn`` too and must be self-guarding (the chain programs' null
+    guard WQ / key-0 commit mask).  Returns
+    ``(responses (B, resp_words), ok (B,), final_carry)``.
+    """
+    recv, pos, ok = dispatch(payload, dest, n_shards, capacity, axis_name,
+                             live)
+    flat = recv.reshape(-1, recv.shape[-1])
+    carry, resp = lax.scan(step_fn, carry, flat)
+    resp = resp.reshape(n_shards, capacity, resp_words)
+    return combine(resp, dest, pos, ok, axis_name), ok, carry
 
 
 def triggered_chain_engine(engine, state, recv_wq: int, resp_region: int,

@@ -165,6 +165,69 @@ def test_recycled_budget():
     assert b["A"] == 2 and b["E"] == 1 and b["C"] == 3 + 2
 
 
+# --- CAS-claim (§3.5) --------------------------------------------------------
+
+def _build_claim(cell_value, expect=0, new=42):
+    """resp = 1 iff the claim CAS won the cell (expect -> new)."""
+    p = assembler.Program(512)
+    one = p.word(1)
+    resp = p.word(0)
+    cell = p.word(cell_value)
+    mod = p.add_wq(4, managed=True, ordering=isa.ORD_DOORBELL)
+    ctl = p.add_wq(8)
+    refs = constructs.emit_cas_claim(ctl, mod, cell=cell, expect=expect,
+                                     new=new, then_src=one, then_dst=resp)
+    ctl.enable(mod, upto=mod.n_posted)
+    return p, resp, cell, refs
+
+
+@pytest.mark.parametrize("cell_value,won", [(0, True), (7, False),
+                                            (42, False)])
+def test_cas_claim_branches_on_ownership(cell_value, won):
+    """A winning claim swaps the cell and fires the then-branch; a losing
+    one leaves both the cell and the conditional untouched."""
+    p, resp, cell, _ = _build_claim(cell_value)
+    spec, st0 = p.finalize()
+    out = machine.run(spec, st0, 64)
+    assert int(out.mem[resp]) == (1 if won else 0)
+    assert int(out.mem[cell]) == (42 if won else cell_value)
+
+
+def test_cas_claim_nonzero_expect():
+    """expect != 0 also works: the return-old in the cond ctrl reads as
+    pack(NOOP, old), which the test-CAS compares against pack(NOOP,
+    expect)."""
+    for cell_value, won in [(9, True), (10, False)]:
+        p, resp, cell, _ = _build_claim(cell_value, expect=9, new=11)
+        spec, st0 = p.finalize()
+        out = machine.run(spec, st0, 64)
+        assert int(out.mem[resp]) == (1 if won else 0)
+        assert int(out.mem[cell]) == (11 if won else cell_value)
+
+
+def test_cas_claim_patched_cell_and_value():
+    """The hopscotch-writer usage: cell address and claim value arrive at
+    run time through the patch addresses the refs expose."""
+    p = assembler.Program(512)
+    one = p.word(1)
+    resp = p.word(0)
+    cell = p.word(0)
+    cell_addr_w = p.word(cell)                # "scattered" cell address
+    key_w = p.word(1234)
+    mod = p.add_wq(4, managed=True, ordering=isa.ORD_DOORBELL)
+    drv = p.add_wq(4)
+    ctl = p.add_wq(8)
+    ctl.wait(drv, 2)                          # patches land first
+    refs = constructs.emit_cas_claim(ctl, mod, then_src=one, then_dst=resp)
+    ctl.enable(mod, upto=mod.n_posted)
+    drv.write(src=cell_addr_w, dst=refs.cell_dst_addr)
+    drv.write(src=key_w, dst=refs.new_opb_addr)
+    spec, st0 = p.finalize()
+    out = machine.run(spec, st0, 64)
+    assert int(out.mem[resp]) == 1
+    assert int(out.mem[cell]) == 1234
+
+
 # --- mov emulation (Appendix A) ---------------------------------------------
 
 def test_mov_immediate():

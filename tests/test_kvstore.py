@@ -114,7 +114,8 @@ def test_hopscotch_server_bit_exact_with_oracle():
         assert t.insert(k, [k, k * 2])
     keys, vals = t.as_device()
     srv = programs.build_hopscotch_server(64, 2, 8)
-    # hits, misses, and the query-0-matches-empty-bucket oracle edge
+    # hits, misses, and query 0 — which must be a miss on both (the chain's
+    # dynamic found-flag rows de-alias empty buckets from real hits)
     q = jnp.asarray(list(range(1, 50)) + [0], jnp.int32)
     found, v = srv.get_many(keys, vals, q, hopscotch.bucket_of(q, 64))
     rfound, rv = hopscotch.lookup(keys, vals, q, 8)
@@ -186,6 +187,52 @@ def test_capacity_overflow_drops_are_flagged_not_missed(kv_setup, method):
     # separating it from a miss
     assert rfound[~ok].all()
     assert not np.asarray(res.found[0])[~ok].any()
+
+
+@pytest.mark.parametrize("method", ["redn", "one_sided", "two_sided"])
+def test_query_of_empty_key_is_a_miss_on_every_path(kv_setup, method):
+    """Regression: key 0 is the EMPTY bucket marker — a query of 0 used to
+    ghost-hit empty buckets and report found=True with garbage-zero
+    values on all three get paths."""
+    kv, keys = kv_setup
+    mesh = Mesh(np.array(jax.devices()[:1]), ("kv",))
+    dk, dv = kv.device_arrays()
+    q = jnp.asarray(np.asarray([0, int(keys[0]), 0], np.int32)[None])
+    res = store.sharded_get(mesh, "kv", dk, dv, q, method=method)
+    assert bool(np.asarray(res.ok).all())
+    found = np.asarray(res.found[0])
+    assert not found[0] and not found[2]
+    assert found[1]                         # real keys still hit
+    np.testing.assert_array_equal(np.asarray(res.values[0][0]), [0, 0])
+
+
+def test_query_zero_miss_in_lookup_and_reference_oracle(kv_setup):
+    kv, _ = kv_setup
+    dk, dv = kv.device_arrays()
+    found, vals = hopscotch.lookup(dk[0], dv[0],
+                                   jnp.asarray([0], jnp.int32), 8)
+    assert not bool(found[0])
+    rfound, rvals = store.reference_get(kv, np.asarray([0], np.int32))
+    assert not rfound[0] and (rvals[0] == 0).all()
+
+
+def test_capacity_zero_drops_everything(kv_setup):
+    """Regression: ``capacity or b_local`` silently promoted an explicit
+    capacity=0 to the default batch size; 0 is a legal drop-all limit."""
+    kv, keys = kv_setup
+    mesh = Mesh(np.array(jax.devices()[:1]), ("kv",))
+    dk, dv = kv.device_arrays()
+    q = jnp.asarray(keys[None, :16], jnp.int32)
+    res = store.sharded_get(mesh, "kv", dk, dv, q, capacity=0)
+    assert not np.asarray(res.ok).any()
+    assert not np.asarray(res.found).any()
+    assert int(res.dropped[0]) == 16 and int(res.deferred[0]) == 0
+    sres, nk, nv = store.sharded_set(
+        mesh, "kv", dk, dv, q, jnp.zeros(q.shape + (2,), jnp.int32),
+        capacity=0)
+    assert not np.asarray(sres.ok).any()
+    assert int(sres.dropped[0]) == 16
+    np.testing.assert_array_equal(np.asarray(nk), np.asarray(dk))
 
 
 def test_rtt_model():
@@ -268,7 +315,8 @@ def test_service_survives_host_crash():
 
 def test_sharded_service_survives_host_crash():
     """§5.6 on the *sharded* store: kill the host driver and the sharded
-    chain-VM gets keep serving; only the set path needs the driver."""
+    chain-VM gets — and the chain-offloaded fast-path sets — keep
+    serving; only displacement needs the driver."""
     items = [(k, [k * 3, k * 5]) for k in range(1, 17)]
     svc = failure.ShardedKVService.start(items)
     q = np.arange(1, 21, dtype=np.int32)
@@ -283,8 +331,15 @@ def test_sharded_service_survives_host_crash():
     assert bool(np.asarray(after.ok).all())
     assert np.asarray(after.found[0])[:16].all()
     assert not np.asarray(after.found[0])[16:].any()
-    with pytest.raises(RuntimeError):
-        svc.set(99, [1, 2])                # set path is host-owned
+    # the writer chain needs no host: update and insert serve driver-dead
+    assert svc.set(99, [1, 2])             # in-neighborhood insert
+    assert svc.set(4, [40, 41])            # update
+    got = svc.get_many(np.asarray([99, 4], np.int32))
+    assert bool(got.found[0][0]) and bool(got.found[0][1])
+    np.testing.assert_array_equal(np.asarray(got.values[0]),
+                                  [[1, 2], [40, 41]])
     svc.restart_host()
-    assert svc.set(99, [1, 2])
-    assert bool(svc.get_many(np.asarray([99], np.int32)).found[0][0])
+    assert svc.set(99, [7, 8])
+    np.testing.assert_array_equal(
+        np.asarray(svc.get_many(np.asarray([99], np.int32)).values[0][0]),
+        [7, 8])

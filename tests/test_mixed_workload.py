@@ -1,0 +1,34 @@
+"""Mixed get/set workload scenario (benchmarks/mixed_workload.py)."""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import mixed_workload  # noqa: E402
+
+
+def test_mixed_round_self_checks_smoke():
+    """One small write-heavy run: chain sets bit-exact with the host
+    oracle, both configurations converge to the same arrays, reads serve
+    the latest committed values, and query 0 stays a miss."""
+    m = mixed_workload.run_mixed(0.5, batch=12, rounds=2, seed=7)
+    assert all(m["checks"].values()), m["checks"]
+    hist = m["set_status_histogram"]
+    assert hist["updated"] + hist["inserted"] > 0
+    assert hist["dropped"] == 0
+
+
+@pytest.mark.slow
+def test_mixed_workload_benchmark_long_run(tmp_path):
+    """The full two-ratio run records the mixed-workload rows and checks
+    into the BENCH json."""
+    out = tmp_path / "BENCH_chains.json"
+    results = mixed_workload.main(out_path=str(out), long=True)
+    assert out.exists()
+    mw = results["mixed_workload"]
+    assert mw["95_5"]["batch"] == 96 and mw["50_50"]["rounds"] == 6
+    for name, ok in results["checks"].items():
+        if name.startswith("mixed"):
+            assert ok, name

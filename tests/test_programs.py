@@ -172,3 +172,67 @@ def test_recycled_server_miss_then_hit():
     assert srv.serve(5).tolist() == [0, 0]
     assert srv.serve(3).tolist() == [33, 34]
     assert srv.serve(5).tolist() == [0, 0]   # re-armed after the hit
+
+
+# --- §5.2/§3.5 hopscotch shard server + writer --------------------------------
+
+def test_hopscotch_server_query_zero_is_a_miss():
+    """The get chain's found-flag rows are dynamic (keys != EMPTY): a
+    query of 0 CAS-matches an empty bucket but must read back found=0 —
+    the static flag-1 rows used to report a ghost hit."""
+    import jax.numpy as jnp
+    from repro.kvstore import hopscotch
+    srv = programs.build_hopscotch_server(32, 2, 8)
+    row = int(hopscotch.bucket_of(77, 32))
+    keys = jnp.zeros((32,), jnp.int32).at[row].set(77)
+    vals = jnp.zeros((32, 2), jnp.int32).at[row].set(jnp.asarray([9, 10]))
+    q = jnp.asarray([0, 77, 3], jnp.int32)
+    found, v = srv.get_many(keys, vals, q, hopscotch.bucket_of(q, 32))
+    assert not bool(found[0]) and (np.asarray(v[0]) == 0).all()
+    assert bool(found[1]) and v[1].tolist() == [9, 10]
+    assert not bool(found[2])
+
+
+def test_hopscotch_writer_zero_padded_request_is_inert():
+    """A zero-padded receive-window slot (key 0, probe addrs 0) resolves
+    against the null guard WQ, reports status 0, and commits nothing."""
+    import jax.numpy as jnp
+    w = programs.build_hopscotch_writer(32, 2, 8)
+    keys = jnp.zeros((32,), jnp.int32).at[4].set(9)
+    vals = jnp.zeros((32, 2), jnp.int32).at[4].set(jnp.asarray([1, 2]))
+    pay = jnp.zeros((1 + 2 + 8,), jnp.int32)
+    st = machine.deliver(w.device_state(keys, vals), w.recv_wq, pay)
+    out = w.engine.run(st, 512)
+    status, nk, nv = w.commit(out.mem, pay, keys, vals)
+    assert int(status) == 0
+    np.testing.assert_array_equal(np.asarray(nk), np.asarray(keys))
+    np.testing.assert_array_equal(np.asarray(nv), np.asarray(vals))
+    assert not bool(out.halted)          # quiesced, not fuel-capped
+    assert int(out.steps) < 512
+
+
+def test_hopscotch_writer_single_requests_all_outcomes():
+    """One request per fresh context: update, first-empty claim, and the
+    needs-displacement default, each via the response word + bucket addr."""
+    import jax.numpy as jnp
+    from repro.kvstore import hopscotch
+    w = programs.build_hopscotch_writer(32, 2, 8)
+    keys = jnp.zeros((32,), jnp.int32)
+    vals = jnp.zeros((32, 2), jnp.int32)
+
+    def one(k, v, tk, tv):
+        pay = w.device_payloads(jnp.asarray([k], jnp.int32),
+                                hopscotch.bucket_of(jnp.asarray([k]), 32),
+                                jnp.asarray([v], jnp.int32))[0]
+        st = machine.deliver(w.device_state(tk, tv), w.recv_wq, pay)
+        out = w.engine.run(st, 512)
+        return w.commit(out.mem, pay, tk, tv)
+
+    s1, keys, vals = one(7, [70, 71], keys, vals)
+    assert int(s1) == programs.SET_INSERTED
+    s2, keys, vals = one(7, [72, 73], keys, vals)
+    assert int(s2) == programs.SET_UPDATED
+    home = int(hopscotch.bucket_of(7, 32))
+    row = int(np.argmax(np.asarray(keys) == 7))
+    assert (row - home) % 32 < 8
+    np.testing.assert_array_equal(np.asarray(vals[row]), [72, 73])

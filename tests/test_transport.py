@@ -141,3 +141,39 @@ def test_dispatch_live_mask_frees_slots():
     assert np.asarray(ok)[4:].all()
     np.testing.assert_array_equal(np.asarray(out)[4:, 0],
                                   np.arange(5, n + 1))
+
+
+def test_triggered_chain_stateful_serializes_and_threads_carry():
+    """The SET wire pattern: the owner scans its receive window through a
+    stateful step — each request observes every earlier one's writes, and
+    over-capacity rows are dropped (ok=False) without touching state."""
+    from jax.sharding import Mesh
+    from repro.compat import shard_map
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("kv",))
+    n, cap = 6, 4
+    payload = jnp.arange(1, n + 1, dtype=jnp.int32)[:, None]
+    dest = jnp.zeros((n,), jnp.int32)
+
+    def step(carry, req):
+        # "chain": append req to a running sum; respond with the sum so
+        # far (request i sees requests 0..i) — zero-padded slots inert
+        carry = carry + req[0]
+        return carry, carry[None]
+
+    def body(p, d):
+        resp, ok, carry = transport.triggered_chain_stateful(
+            step, jnp.zeros((), jnp.int32), p, d, 1, cap, "kv", 1)
+        return resp, ok, carry[None]
+
+    spec = jax.sharding.PartitionSpec()
+    f = shard_map(body, mesh=mesh, in_specs=(spec, spec),
+                  out_specs=(spec, spec, spec), check_vma=False)
+    resp, ok, carry = f(payload, dest)
+    assert np.asarray(ok)[:cap].all() and not np.asarray(ok)[cap:].any()
+    # prefix sums prove sequential execution over the shared carry
+    np.testing.assert_array_equal(np.asarray(resp)[:cap, 0],
+                                  np.cumsum(np.arange(1, cap + 1)))
+    # dropped rows: zeroed response, and their payloads never reached step
+    assert (np.asarray(resp)[cap:] == 0).all()
+    assert int(carry[0]) == np.arange(1, cap + 1).sum()
