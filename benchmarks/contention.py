@@ -125,7 +125,8 @@ def real_isolated_serving(flood: int = 48, capacity: int = 24) -> dict:
     victim_keys = np.arange(101, 101 + N_VICTIMS * VICTIM_REQS)
     hot_key = 7
     for k in [hot_key, *victim_keys]:
-        kv.set(int(k), [int(k) % 251, int(k) % 241])
+        if not kv.set(int(k), [int(k) % 251, int(k) % 241]):
+            raise RuntimeError(f"seeding key {k} needs a resize")
     mesh = Mesh(np.array(jax.devices()[:1]), ("kv",))
     dk, dv = kv.device_arrays()
 

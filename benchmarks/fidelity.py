@@ -221,7 +221,8 @@ def fig14_memcached():
     rng = np.random.RandomState(0)
     keys = rng.choice(np.arange(1, 1 << 20), 200, replace=False)
     for k in keys:
-        kv.set(int(k), [int(k) % 251] * 4)
+        if not kv.set(int(k), [int(k) % 251] * 4):
+            raise RuntimeError(f"seeding key {k} needs a resize")
     mesh = Mesh(np.array(jax.devices()[:1]), ("kv",))
     dk, dv = kv.device_arrays()
     q = jnp.asarray(keys[None, :128].astype(np.int32))

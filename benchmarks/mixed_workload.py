@@ -15,7 +15,8 @@ configurations:
 
 Every round's self-checks (recorded into ``BENCH_chains.json``):
 the chain SET statuses are bit-exact with the batched host oracle
-(`hopscotch.insert_many`), both configurations end with identical device
+(`hopscotch.insert_many_displaced` — the writer + displacer escalation
+replay), both configurations end with identical device
 arrays, all live keys read back with their latest values on both get
 paths, and a query of key 0 stays a miss (the ghost-hit regression).
 
@@ -59,7 +60,8 @@ def run_mixed(get_ratio: float, batch: int, rounds: int,
     kv = store.ShardedKV.build(1, N_BUCKETS, VAL_WORDS)
     seed_keys = rng.choice(np.arange(*KEY_SPACE), size=48, replace=False)
     for k in seed_keys:
-        kv.set(int(k), _value_of(k, 0))
+        if not kv.set(int(k), _value_of(k, 0)):
+            raise RuntimeError(f"seeding key {k} needs a resize")
     mesh = Mesh(np.array(jax.devices()[:1]), ("kv",))
     dk, dv = kv.device_arrays()
 
@@ -67,7 +69,8 @@ def run_mixed(get_ratio: float, batch: int, rounds: int,
     # + full device re-upload per batch)
     base_kv = store.ShardedKV.build(1, N_BUCKETS, VAL_WORDS)
     for k in seed_keys:
-        base_kv.set(int(k), _value_of(k, 0))
+        if not base_kv.set(int(k), _value_of(k, 0)):
+            raise RuntimeError(f"seeding key {k} needs a resize")
     bdk, bdv = base_kv.device_arrays()
 
     # the chain-set oracle mirror (checks only, not timed)
@@ -79,7 +82,7 @@ def run_mixed(get_ratio: float, batch: int, rounds: int,
                   reads_serve_latest=True, paths_agree=True,
                   query0_misses=True)
     redn_us, base_us = [], []
-    statuses = np.zeros(4, np.int64)     # histogram of SET outcomes
+    statuses = np.zeros(6, np.int64)     # histogram of SET outcomes
 
     # the store compile-caches its shard_map serving steps per geometry,
     # so rounds after the first measure execution, not tracing
@@ -112,8 +115,11 @@ def run_mixed(get_ratio: float, batch: int, rounds: int,
         # --- baseline: host RPC get + host set with full re-upload -------
         def base_round(bdk=bdk, bdv=bdv, gq=gq):
             g = jax.block_until_ready(base_get(bdk, bdv, gq))
-            for k, v in zip(set_k.tolist(), set_v.tolist()):
-                base_kv.tables[0].set_fast(int(k), v)
+            # same two-pass order as the chain pipeline (fast pass, then
+            # displacements) — an inline-displacing order can disagree
+            # about which keys fit once the table is tight
+            hopscotch.insert_many_displaced(base_kv.tables[0], set_k,
+                                            set_v)
             nk, nv = base_kv.device_arrays()     # the old O(table) upload
             jax.block_until_ready((nk, nv))
             return g, nk, nv
@@ -133,14 +139,17 @@ def run_mixed(get_ratio: float, batch: int, rounds: int,
                                           bres.values[0])).all())
 
         st = np.asarray(sres.status[0])
-        ref = hopscotch.insert_many(oracle, set_k, set_v)
+        # the chain pipeline escalates needs-displacement rows to the
+        # displacer stage, so the oracle replays both passes
+        ref = hopscotch.insert_many_displaced(oracle, set_k, set_v)
         checks["sets_bit_exact"] &= bool((st == ref).all())
         checks["arrays_agree"] &= bool(
             np.array_equal(np.asarray(dk[0]), oracle.keys)
             and np.array_equal(np.asarray(dv[0]), oracle.values))
-        np.add.at(statuses, np.clip(st, 0, 3), 1)
+        np.add.at(statuses, np.clip(st, 0, 5), 1)
         for k, v, s in zip(set_k.tolist(), set_v.tolist(), st.tolist()):
-            if s in (hopscotch.SET_UPDATED, hopscotch.SET_INSERTED):
+            if s in (hopscotch.SET_UPDATED, hopscotch.SET_INSERTED,
+                     hopscotch.SET_DISPLACED):
                 latest[int(k)] = v
 
     q0 = store.sharded_get(mesh, "kv", dk, dv,
@@ -159,7 +168,9 @@ def run_mixed(get_ratio: float, batch: int, rounds: int,
             "dropped": int(statuses[0]),
             "updated": int(statuses[1]),
             "inserted": int(statuses[2]),
-            "needs_displacement": int(statuses[3]),
+            "needs_displacement": int(statuses[3]),   # always 0: escalated
+            "displaced": int(statuses[4]),
+            "needs_resize": int(statuses[5]),
         },
         "checks": checks,
     }

@@ -22,7 +22,8 @@ def main():
                                   val_words=4)
     n_keys = 400
     for k in range(1, n_keys + 1):
-        kv.set(k, [k, k * 2, k * 3, k * 5])
+        if not kv.set(k, [k, k * 2, k * 3, k * 5]):
+            raise RuntimeError(f"seeding key {k} needs a resize")
     dk, dv = kv.device_arrays()
     mesh = Mesh(np.array(jax.devices()[:1]), ("kv",))
 

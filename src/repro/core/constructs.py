@@ -12,6 +12,18 @@ later conditional WR's control word, selects the success branch — the
 primitive behind the chain-offloaded hopscotch SET (claim an EMPTY
 bucket, then WRITE the value).
 
+``enable-branch`` — the Calc-verb inequality conditional (Table 3):
+``MAX``/``MIN`` clamp a loaded value against a threshold, a CAS converts
+a NOOP into an **ENABLE** (the cond WR's static opa/opb are the ENABLE
+operands), so ``if (v <= thr)`` releases one WQ and ``else`` the other —
+the data-dependent loop exit of the hopscotch displacement bubble.
+
+``displace-move`` — :func:`emit_cas_claim` inverted: a chained sequence
+that *releases* a bucket instead of acquiring one (value row copied out,
+key moved by a patched READ, the mover retired with a CAS ``key ->
+EMPTY``, the stale value row zeroed), advancing the bubble's carry words
+— one iteration of the hopscotch displacement loop.
+
 ``while`` (unrolled) — Fig. 5: the iteration body replicated with statically
 baked addresses; per-iteration budget 1 copy + 1 atomic + 3 WAIT/ENABLE
 (Table 2).
@@ -126,8 +138,157 @@ def emit_cas_claim(ctl: WQBuilder, mod: WQBuilder, *, cell: int = 0,
 
 
 # ---------------------------------------------------------------------------
-# while, unrolled (Fig. 5) and with break (Fig. 6)
+# enable-branch: if (v <= threshold) ENABLE(then) else ENABLE(else)
 # ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EnableBranchRefs:
+    cond_then: WRRef    # becomes ENABLE(then_wq, then_upto) iff v <= thr
+    cond_else: WRRef    # becomes ENABLE(else_wq, else_upto) iff v >  thr
+    then_ctrl_addr: int  # the caller loads v (24-bit) here ...
+    else_ctrl_addr: int  # ... and here (both copies see the same v)
+
+
+def emit_enable_branch(ctl: WQBuilder, mod: WQBuilder, *, threshold: int,
+                       then_wq: int, then_upto: int, else_wq: int,
+                       else_upto: int, load, tag: str = "br") -> \
+        EnableBranchRefs:
+    """Data-dependent two-way branch: exactly one of two WQs is released.
+
+    The chain ISA has no signed compare, but the Calc verbs give one
+    (Table 3: MAX/MIN "used for inequality predicates"): load ``v`` into
+    two conditional NOOPs' control words (``pack(NOOP, v)`` is just ``v``
+    for 24-bit values), clamp one with ``MAX(.., thr)`` and the other with
+    ``MIN(.., thr+1)``, and CAS each against its clamp constant —
+    ``max(v, thr) == thr  <=>  v <= thr`` and
+    ``min(v, thr+1) == thr+1  <=>  v > thr``, so *exactly one* CAS
+    converts its NOOP.  The conversion target is ``pack(ENABLE, 0)`` and
+    the cond WRs carry their ENABLE operands (target WQ / watermark) in
+    their static opa/opb fields, so the surviving branch *is* the release
+    of its WQ — no template copy, one verb per arm.  This is the
+    data-dependent exit the hopscotch displacer's bubble loop breaks on
+    (``dist < H``) and the movability test its window scan selects with.
+
+    ``load(then_ctrl_addr, else_ctrl_addr)`` is called between the cond
+    posts and the clamp/test verbs; it must emit (into ``ctl``) the verbs
+    that put ``v`` into both control words (e.g. a probe READ plus a
+    WRITE copy, plus any ADD bias).  ``ctl`` must be doorbell-ordered so
+    the loads precede the clamps.  Budget: 2C (conds) + the load +
+    2 Calc + 2A (CAS) + 1E (the mod release).
+    """
+    if not 0 <= threshold < isa.ID_MASK:
+        # threshold+1 must stay in the 24-bit id space: pack_ctrl masks
+        # it, and a wrapped comparand would let BOTH arms convert for v=0
+        raise ValueError(
+            f"threshold must be in [0, {isa.ID_MASK}), got {threshold:#x}")
+    cond_then = mod.post(isa.NOOP, opa=then_upto, opb=then_wq,
+                         tag=f"{tag}.then")
+    cond_else = mod.post(isa.NOOP, opa=else_upto, opb=else_wq,
+                         tag=f"{tag}.else")
+    load(cond_then.ctrl_addr, cond_else.ctrl_addr)
+    ctl.max_(dst=cond_then.ctrl_addr,
+             operand=isa.pack_ctrl(isa.NOOP, threshold), tag=f"{tag}.clamp<")
+    ctl.min_(dst=cond_else.ctrl_addr,
+             operand=isa.pack_ctrl(isa.NOOP, threshold + 1),
+             tag=f"{tag}.clamp>")
+    ctl.cas(dst=cond_then.ctrl_addr,
+            old=isa.pack_ctrl(isa.NOOP, threshold),
+            new=isa.pack_ctrl(isa.ENABLE, 0), tag=f"{tag}.test<")
+    ctl.cas(dst=cond_else.ctrl_addr,
+            old=isa.pack_ctrl(isa.NOOP, threshold + 1),
+            new=isa.pack_ctrl(isa.ENABLE, 0), tag=f"{tag}.test>")
+    ctl.enable(mod, upto=mod.n_posted, tag=f"{tag}.release")
+    return EnableBranchRefs(cond_then=cond_then, cond_else=cond_else,
+                            then_ctrl_addr=cond_then.ctrl_addr,
+                            else_ctrl_addr=cond_else.ctrl_addr)
+
+
+# ---------------------------------------------------------------------------
+# displace-move: one hopscotch bubble step (the §3.5 claim pattern, inverted)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DisplaceMoveRefs:
+    value_copy: WRRef    # cand's value row -> free's value row
+    key_move: WRRef      # cand's key word  -> free's key word
+    vacate: WRRef        # the CAS that retires cand: key -> EMPTY
+    zero_row: WRRef      # zeroes cand's (now stale) value row
+
+
+def emit_displace_move(ctl: WQBuilder, *, cand_w: int, free_w: int,
+                       dist_w: int, back: int, val_len: int, zeros: int,
+                       status_addr: int, status_val: int, next_wq: int,
+                       next_upto: int, empty_key: int = 0,
+                       tag: str = "mv") -> DisplaceMoveRefs:
+    """One hopscotch bubble step, entirely in verbs.
+
+    :func:`emit_cas_claim` *acquires* a cell (CAS ``EMPTY -> key``); this
+    is its inverse — the §3.5 chained-CAS pattern extended to *release*
+    one: copy the movable entry at ``mem[cand_w]`` (a bucket address held
+    in a carry word) into the free bucket at ``mem[free_w]``, then CAS
+    the mover's key word ``key -> EMPTY`` so the vacated bucket becomes
+    the new free slot.  Order matters and the doorbell-ordered ``ctl``
+    provides it: value row first, key second (a concurrent reader sees
+    either the old bucket or a fully-written new one, never a key without
+    its value), the vacate CAS third (its comparand is re-read from the
+    bucket, so a raced mover would lose the CAS rather than corrupt), the
+    stale value row zeroed last (a vacated bucket must not leak its old
+    value words to a later claimant).  Finally the carry words are
+    advanced — ``free <- cand``, ``dist -= back`` — and the next bubble
+    lap's break-check WQ is released.
+
+    All bucket addressing is self-modifying: every probe/patch WRITE
+    derives from the ``cand_w``/``free_w`` carry words, so one pre-posted
+    move serves whatever window position the previous lap's scan chose.
+    ``[bucket+2]`` must hold the bucket's value-row pointer (the shared
+    ``[key, pad, val_ptr]`` row layout).
+    """
+    assert back >= 1
+
+    # value row: READ both bucket rows' val_ptrs into the copy's src/dst
+    ctl.write(src=cand_w, dst=ctl.future_wr_addr(2, "src"),
+              tag=f"{tag}.p_vpc")
+    ctl.add(dst=ctl.future_wr_addr(1, "src"), addend=2, tag=f"{tag}.o_vpc")
+    ctl.read(src=0, dst=ctl.future_wr_addr(4, "src"), ln=1,
+             tag=f"{tag}.vp_cand")
+    ctl.write(src=free_w, dst=ctl.future_wr_addr(2, "src"),
+              tag=f"{tag}.p_vpf")
+    ctl.add(dst=ctl.future_wr_addr(1, "src"), addend=2, tag=f"{tag}.o_vpf")
+    ctl.read(src=0, dst=ctl.future_wr_addr(1, "dst"), ln=1,
+             tag=f"{tag}.vp_free")
+    value_copy = ctl.write(src=0, dst=0, ln=val_len, tag=f"{tag}.val")
+
+    # key: one READ moves it, both ends patched from the carry words
+    ctl.write(src=cand_w, dst=ctl.future_wr_addr(2, "src"),
+              tag=f"{tag}.p_ksrc")
+    ctl.write(src=free_w, dst=ctl.future_wr_addr(1, "dst"),
+              tag=f"{tag}.p_kdst")
+    key_move = ctl.read(src=0, dst=0, ln=1, tag=f"{tag}.key")
+
+    # vacate: CAS the mover's key word key -> EMPTY (comparand re-read
+    # from the bucket itself, so only the expected occupant is retired)
+    ctl.write(src=cand_w, dst=ctl.future_wr_addr(1, "src"),
+              tag=f"{tag}.p_rk")
+    ctl.read(src=0, dst=ctl.future_wr_addr(2, "opa"), ln=1,
+             tag=f"{tag}.rk")
+    ctl.write(src=cand_w, dst=ctl.future_wr_addr(1, "dst"),
+              tag=f"{tag}.p_vac")
+    vacate = ctl.cas(dst=0, old=0, new=empty_key, tag=f"{tag}.vacate")
+
+    # the vacated bucket's value row is dead — zero it (its val_ptr is
+    # already sitting in the value copy's src field)
+    ctl.write(src=value_copy.addr("src"), dst=ctl.future_wr_addr(1, "dst"),
+              tag=f"{tag}.p_zero")
+    zero_row = ctl.write(src=zeros, dst=0, ln=val_len, tag=f"{tag}.zero")
+
+    # record that a displacement happened, advance the carries, and hand
+    # off to the next lap's break-check
+    ctl.write_imm(dst=status_addr, value=status_val, tag=f"{tag}.status")
+    ctl.write(src=cand_w, dst=free_w, tag=f"{tag}.free")
+    ctl.add(dst=dist_w, addend=-back, tag=f"{tag}.dist")
+    ctl.enable(next_wq, upto=next_upto, tag=f"{tag}.next")
+    return DisplaceMoveRefs(value_copy=value_copy, key_move=key_move,
+                            vacate=vacate, zero_row=zero_row)
 
 @dataclasses.dataclass
 class WhileRefs:

@@ -10,10 +10,11 @@
   layout so one READ performs both of Fig. 9's patches); the CAS converts
   the response NOOP into the value-returning WRITE only on a key match.
   Sequential (RedN-Seq) and parallel (RedN-Parallel) probe variants.
-* :class:`HopscotchShardServer` / :class:`HopscotchShardWriter` — §5.2's
-  sharded-store *get* and §3.5's CAS-claiming *set* as per-shard chain
-  programs over the same hopscotch layout (the device arrays are the
-  store's source of truth; only displacement falls back to the host).
+* :class:`HopscotchShardServer` / :class:`HopscotchShardWriter` /
+  :class:`HopscotchShardDisplacer` — §5.2's sharded-store *get*, §3.5's
+  CAS-claiming *set*, and the bounded hopscotch displacement bubble as
+  per-shard chain programs over the same hopscotch layout (the device
+  arrays are the store's source of truth; no SET path touches the host).
 * :class:`ListTraversalOffload` — Fig. 12's linked-list walk, unrolled, with
   the optional Fig. 6-style break.
 * :func:`build_recycled_get_server` — a §3.4 WQ-recycled *get* server: the
@@ -44,11 +45,24 @@ from .engine import ChainEngine
 EMPTY_KEY = 0          # bucket key 0 == empty; live keys are 1..2^24-1
 MISS_SENTINEL = 0      # response region default (paper: "default value 0")
 
-# SET outcome codes reported by the hopscotch writer chain's response word
-# (mirrored in repro.kvstore.hopscotch, which core must not import)
+# SET outcome codes reported by the hopscotch writer/displacer chains'
+# response words (mirrored in repro.kvstore.hopscotch, which core must not
+# import — kept numerically identical, cross-checked in tests)
 SET_UPDATED = 1              # key matched in neighborhood, value rewritten
 SET_INSERTED = 2             # EMPTY bucket CAS-claimed, key + value written
-SET_NEEDS_DISPLACEMENT = 3   # neighborhood full: host slow path required
+SET_NEEDS_DISPLACEMENT = 3   # neighborhood full: displacer chain required
+SET_DISPLACED = 4            # displacer bubbled a slot home and claimed it
+SET_NEEDS_RESIZE = 5         # bounded search/bubble failed: resize required
+
+# the hopscotch home-bucket hash, array form — numerically identical to
+# repro.kvstore.hopscotch.bucket_of (core must not import kvstore; the
+# displacer's device_state derives per-bucket home distances with it)
+_HASH_MULT = 2654435761
+
+
+def bucket_home(keys: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
+    k = keys.astype(jnp.uint32) * jnp.uint32(_HASH_MULT)
+    return (k % jnp.uint32(n_buckets)).astype(jnp.int32)
 
 
 def _batched_get(off, keys: Sequence[int], max_steps: int):
@@ -401,6 +415,86 @@ def build_hopscotch_server(n_buckets: int, val_len: int,
 # §3.5 — the sharded-store SET writer: CAS-claimed hopscotch writes
 # ---------------------------------------------------------------------------
 
+def _set_templates(p: Program, val_stage: int, val_len: int, resp: int,
+                   stage_default: int):
+    """16-word Fig.-6 template (over two event WRs): a suppressed value
+    WRITE (dst patched with the bucket's val_ptr at run time) and a
+    suppressed ``[status, bucket_addr]`` response WRITE.  Shared by the
+    writer's match/claim phases and the displacer's match/claim phases."""
+    stage = p.alloc(2, [stage_default, 0])
+    tmpl = p.alloc(2 * isa.WR_WORDS, [
+        isa.pack_ctrl(isa.WRITE, 0), isa.FLAG_SUPPRESS_COMPLETION,
+        val_stage, 0, val_len, 0, 0, -1,
+        isa.pack_ctrl(isa.WRITE, 0), isa.FLAG_SUPPRESS_COMPLETION,
+        stage, resp, 2, 0, 0, -1])
+    return tmpl, stage
+
+
+def _emit_set_match_phase(p: Program, rq, h: int, key_w: int, val_stage: int,
+                          val_len: int, resp: int,
+                          home_w: Optional[int] = None):
+    """The SET programs' shared match phase: H parallel probe pairs.
+
+    Each probe READs its bucket's key onto a conditional WR's control
+    word and CAS-tests it against the query key; a hit converts the
+    conditional into a Fig.-6 template WRITE whose two suppressed event
+    WRITEs rewrite the bucket's value row and land ``[SET_UPDATED,
+    bucket_addr]`` in the response region — and the missing event
+    completions starve everything gated on ``wait(m_mod, 3)`` (the
+    writer's claim phase, the displacer's search phase).
+
+    Probe addresses: with ``home_w=None`` each probe READ's src is left
+    for the RECV scatter (the writer's client sends all H addresses);
+    with ``home_w`` set they are derived in-chain as ``home + d *
+    BUCKET_WORDS`` from the single scattered home address (the
+    displacer's unwrapped frame).  Returns ``(rd1s, m_tmpls, m_mods)``.
+    """
+    rd1s, m_tmpls, m_mods = [], [], []
+    for pi in range(h):
+        tmpl, stage = _set_templates(p, val_stage, val_len, resp,
+                                     SET_UPDATED)
+        mmod = p.add_wq(3, ordering=isa.ORD_DOORBELL, managed=True,
+                        initial_enable=0)
+        mdrv = p.add_wq(9 if home_w is not None else 7,
+                        ordering=isa.ORD_DOORBELL, managed=True)
+        mexe = p.add_wq(3, ordering=isa.ORD_DOORBELL, managed=True,
+                        initial_enable=3)
+
+        c_i = mmod.post(isa.NOOP, src=tmpl,
+                        dst=mmod.future_wr_addr(1, "ctrl"),
+                        ln=2 * isa.WR_WORDS, tag=f"wr.mc{pi}")
+        mmod.post(isa.NOOP, tag=f"wr.me{pi}")     # event: value WRITE slot
+        mmod.post(isa.NOOP, tag=f"wr.mf{pi}")     # event: response slot
+
+        mdrv.wait(rq, 1, tag=f"wr.trig{pi}")
+        if home_w is not None:
+            mdrv.write(src=home_w, dst=mdrv.future_wr_addr(3, "src"),
+                       tag=f"wr.home{pi}")        # probe addr <- home + d*BW
+            mdrv.add(dst=mdrv.future_wr_addr(2, "src"),
+                     addend=pi * BUCKET_WORDS, tag=f"wr.hoff{pi}")
+        mdrv.write(src=key_w, dst=mexe.future_wr_addr(1, "opa"),
+                   tag=f"wr.key{pi}")             # CAS comparand <- key
+        rd1 = mdrv.read(src=0, dst=c_i.ctrl_addr, ln=1,
+                        tag=f"wr.read{pi}")       # src scatter/self-patched
+        mdrv.write(src=rd1.addr("src"), dst=mdrv.future_wr_addr(2, "src"),
+                   tag=f"wr.vp_patch{pi}")
+        mdrv.add(dst=mdrv.future_wr_addr(1, "src"), addend=2,
+                 tag=f"wr.vp_off{pi}")
+        mdrv.read(src=0, dst=tmpl + isa.F_DST, ln=1,
+                  tag=f"wr.vp{pi}")               # val_ptr -> template dst
+        last = mdrv.write(src=rd1.addr("src"), dst=stage + 1,
+                          tag=f"wr.addr{pi}")     # bucket addr -> response
+        mdrv.initial_enable = mdrv.n_posted + 1
+
+        mexe.wait(mdrv, last.completion_count, tag=f"wr.sync{pi}")
+        mexe.cas(dst=c_i.ctrl_addr, old=isa.pack_ctrl(isa.NOOP, 0),
+                 new=isa.pack_ctrl(isa.WRITE, 0), tag=f"wr.cas{pi}")
+        mexe.enable(mmod, upto=3, tag=f"wr.en{pi}")
+        rd1s.append(rd1)
+        m_tmpls.append(tmpl)
+        m_mods.append(mmod)
+    return rd1s, m_tmpls, m_mods
+
 @dataclasses.dataclass(frozen=True, eq=False)
 class HopscotchShardWriter:
     """The write-side companion of :class:`HopscotchShardServer`.
@@ -429,7 +523,8 @@ class HopscotchShardWriter:
       bucket wins, exactly like the host oracle's scan.
 
     Neither phase firing leaves the pre-set default response
-    ``[SET_NEEDS_DISPLACEMENT, 0]`` — the host slow path's cue.
+    ``[SET_NEEDS_DISPLACEMENT, 0]`` — the cue for the displacer-chain
+    escalation stage (:class:`HopscotchShardDisplacer`).
 
     Contexts are ephemeral: the authoritative shard arrays live outside
     the image, :meth:`device_state` scatters them in per run, and
@@ -456,6 +551,17 @@ class HopscotchShardWriter:
     @property
     def engine(self) -> ChainEngine:
         return ChainEngine.for_spec(self.spec)
+
+    @property
+    def fuel(self) -> int:
+        """An exact safe step budget for one request: no WQ in the SET
+        programs is recycled, so every posted WR executes at most once
+        and the total posted count bounds any run — callers that expose
+        tunable unroll bounds (the displacer's ``max_search``/
+        ``max_moves``) must use this rather than a fixed guess, or a
+        larger unroll silently exhausts fuel mid-bubble and misreports
+        a placeable key as ``SET_NEEDS_RESIZE``."""
+        return int(np.asarray(self.state0.tail).sum()) + 1
 
     def device_state(self, keys: jnp.ndarray,
                      vals: jnp.ndarray) -> machine.VMState:
@@ -596,56 +702,9 @@ def build_hopscotch_writer(n_buckets: int, val_len: int,
 
     rq = p.add_wq(2)
 
-    def _templates(stage_default):
-        """16-word Fig.-6 template (over the two event WRs): a suppressed
-        value WRITE (dst patched with the bucket's val_ptr at run time)
-        and a suppressed [status, bucket_addr] response WRITE."""
-        stage = p.alloc(2, [stage_default, 0])
-        tmpl = p.alloc(2 * isa.WR_WORDS, [
-            isa.pack_ctrl(isa.WRITE, 0), isa.FLAG_SUPPRESS_COMPLETION,
-            val_stage, 0, val_len, 0, 0, -1,
-            isa.pack_ctrl(isa.WRITE, 0), isa.FLAG_SUPPRESS_COMPLETION,
-            stage, resp, 2, 0, 0, -1])
-        return tmpl, stage
-
-    # --- match phase: H parallel probe pairs ------------------------------
-    rd1s, m_tmpls, m_mods = [], [], []
-    for pi in range(h):
-        tmpl, stage = _templates(SET_UPDATED)
-        mmod = p.add_wq(3, ordering=isa.ORD_DOORBELL, managed=True,
-                        initial_enable=0)
-        mdrv = p.add_wq(7, ordering=isa.ORD_DOORBELL, managed=True)
-        mexe = p.add_wq(3, ordering=isa.ORD_DOORBELL, managed=True,
-                        initial_enable=3)
-
-        c_i = mmod.post(isa.NOOP, src=tmpl,
-                        dst=mmod.future_wr_addr(1, "ctrl"),
-                        ln=2 * isa.WR_WORDS, tag=f"wr.mc{pi}")
-        mmod.post(isa.NOOP, tag=f"wr.me{pi}")     # event: value WRITE slot
-        mmod.post(isa.NOOP, tag=f"wr.mf{pi}")     # event: response slot
-
-        mdrv.wait(rq, 1, tag=f"wr.trig{pi}")
-        mdrv.write(src=key_w, dst=mexe.future_wr_addr(1, "opa"),
-                   tag=f"wr.key{pi}")             # CAS comparand <- key
-        rd1 = mdrv.read(src=0, dst=c_i.ctrl_addr, ln=1,
-                        tag=f"wr.read{pi}")       # src scatter-patched
-        mdrv.write(src=rd1.addr("src"), dst=mdrv.future_wr_addr(2, "src"),
-                   tag=f"wr.vp_patch{pi}")
-        mdrv.add(dst=mdrv.future_wr_addr(1, "src"), addend=2,
-                 tag=f"wr.vp_off{pi}")
-        mdrv.read(src=0, dst=tmpl + isa.F_DST, ln=1,
-                  tag=f"wr.vp{pi}")               # val_ptr -> template dst
-        mdrv.write(src=rd1.addr("src"), dst=stage + 1,
-                   tag=f"wr.addr{pi}")            # bucket addr -> response
-        mdrv.initial_enable = mdrv.n_posted + 1
-
-        mexe.wait(mdrv, 7, tag=f"wr.sync{pi}")
-        mexe.cas(dst=c_i.ctrl_addr, old=isa.pack_ctrl(isa.NOOP, 0),
-                 new=isa.pack_ctrl(isa.WRITE, 0), tag=f"wr.cas{pi}")
-        mexe.enable(mmod, upto=3, tag=f"wr.en{pi}")
-        rd1s.append(rd1)
-        m_tmpls.append(tmpl)
-        m_mods.append(mmod)
+    # --- match phase: H parallel probe pairs (shared with the displacer) --
+    rd1s, m_tmpls, m_mods = _emit_set_match_phase(
+        p, rq, h, key_w, val_stage, val_len, resp)
 
     # --- claim phase: sequential CAS-claims, gated on an all-miss match ---
     cdrv = p.add_wq(5 * h, ordering=isa.ORD_DOORBELL, managed=True)
@@ -655,7 +714,8 @@ def build_hopscotch_writer(n_buckets: int, val_len: int,
 
     claims = []
     for pi in range(h):
-        tmpl, stage = _templates(SET_INSERTED)
+        tmpl, stage = _set_templates(p, val_stage, val_len, resp,
+                                     SET_INSERTED)
         if pi == 0:
             # every cdrv patch below completed (and, transitively, every
             # match probe finished without a hit)
@@ -697,6 +757,355 @@ def build_hopscotch_writer(n_buckets: int, val_len: int,
         prog=p, spec=spec, state0=st0, n_buckets=n_buckets,
         val_len=val_len, neighborhood=neighborhood, table_base=table,
         values_base=values, resp_region=resp, recv_wq=rq.index)
+
+
+# ---------------------------------------------------------------------------
+# §3.5 + Fig. 5/6 — the hopscotch DISPLACER: the bubble loop as a chain
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class HopscotchShardDisplacer(HopscotchShardWriter):
+    """The displacement escalation of :class:`HopscotchShardWriter` — the
+    last piece of SET the host used to own, as one pre-posted chain.
+
+    A neighborhood-full insert needs the hopscotch *bubble*: find the
+    first EMPTY bucket past the neighborhood, repeatedly move a bucket
+    from the window ``[free-H+1, free)`` into it (any resident whose own
+    home is within H of the free slot may move), and stop once the free
+    slot lands inside the requester's neighborhood — a loop with three
+    data-dependent exits.  This program is that loop, bounded and
+    unrolled (Fig. 5), with Calc-verb branch constructs
+    (:func:`repro.core.constructs.emit_enable_branch`) as the exits:
+
+    * **match** — the shared H-probe phase; a hit updates in place
+      (``SET_UPDATED``) and starves everything below.
+    * **search** — up to ``max_search`` sequential probes from the home
+      bucket; the first key-is-EMPTY branch latches the free slot's
+      address and home-distance into the ``free``/``dist`` carry words.
+    * **bubble** — up to ``max_moves`` laps.  Each lap opens with a
+      break-check (``dist <= H-1`` releases the claim phase — the loop's
+      early exit) and then scans the window ``back = H-1 .. 1``: a probe
+      READs the candidate's *home-distance word* (the ``pad`` field the
+      writer never used — :meth:`device_state` precomputes it per bucket)
+      and branches on ``pad + back <= H-1``; the first movable candidate
+      releases an :func:`~repro.core.constructs.emit_displace_move` (value
+      row out, key READ across, CAS ``key -> EMPTY``, stale row zeroed,
+      carries advanced) and the next lap's break-check.
+    * **claim** — :func:`~repro.core.constructs.emit_cas_claim` on the
+      final free slot (``EMPTY -> key``), committing the value row and a
+      ``[SET_INSERTED | SET_DISPLACED, bucket_addr]`` response (the
+      status word is flipped to ``SET_DISPLACED`` by the first move).
+
+    Any dead end — no EMPTY within ``max_search``, a window with nothing
+    movable, ``max_moves`` exhausted — simply quiesces, leaving the
+    pre-set default response ``[SET_NEEDS_RESIZE, 0]``; :meth:`commit`
+    then discards the image's partial moves, so a failed SET leaves the
+    store bit-identical (exactly like the bounded host oracle
+    ``hopscotch.HopscotchTable.set_full``).
+
+    **The unwrapped frame.** Verbs add constants; they do not reduce
+    modulo the table.  So the image carries ``n_buckets + max_search``
+    bucket/value rows where row ``r`` mirrors bucket ``r % n_buckets``,
+    and every address this request touches is the *unwrapped* position
+    ``home + d`` (``d < max_search``) — within one request each bucket
+    appears at exactly one unwrapped position, so the two copies can
+    never diverge mid-run.  :meth:`commit` folds the image back by
+    per-word diff against the pre-state (at most one copy of any word
+    changed), which also makes the multi-row effects of a bubble —
+    unknowable from the response alone — commit exactly.
+    """
+    max_search: int = 0
+    max_moves: int = 0
+
+    def device_state(self, keys: jnp.ndarray,
+                     vals: jnp.ndarray) -> machine.VMState:
+        """Image with the shard slice scattered into the unwrapped frame.
+
+        Each of the ``n + max_search`` rows gets ``[key, pad, val_ptr]``
+        where ``pad`` is the resident key's home distance ``(row -
+        home(key)) % n`` — the word the movability branch reads.  EMPTY
+        rows get ``pad = H`` so no window offset can make them "movable"
+        (they are never candidates in a valid table; the marker keeps
+        arbitrary images safe too).
+        """
+        n, ext = self.n_buckets, self.n_buckets + self.max_search
+        v = self.val_len
+        rows = jnp.arange(ext, dtype=jnp.int32)
+        src = rows % n
+        k = keys.astype(jnp.int32)[src]
+        pad = jnp.where(k != EMPTY_KEY,
+                        (src - bucket_home(k, n)) % n,
+                        self.neighborhood).astype(jnp.int32)
+        mem = self.state0.mem
+        mem = mem.at[self.table_base + rows * BUCKET_WORDS].set(k)
+        mem = mem.at[self.table_base + rows * BUCKET_WORDS + 1].set(pad)
+        vidx = (self.values_base + rows[:, None] * v
+                + jnp.arange(v, dtype=jnp.int32)[None, :])
+        mem = mem.at[vidx.reshape(-1)].set(
+            vals.astype(jnp.int32)[src].reshape(-1))
+        return self.state0._replace(mem=mem)
+
+    def device_payloads(self, queries: jnp.ndarray, home: jnp.ndarray,
+                        values: jnp.ndarray) -> jnp.ndarray:
+        """``[key, value x V, home_addr]`` — one scattered home address;
+        the chain derives every probe address from it (the unwrapped
+        frame makes them plain ``home + d * BUCKET_WORDS`` sums)."""
+        addrs = (self.table_base
+                 + home.astype(jnp.int32) * BUCKET_WORDS)
+        return jnp.concatenate(
+            [queries[:, None].astype(jnp.int32),
+             values.astype(jnp.int32).reshape(-1, self.val_len),
+             addrs[:, None]], axis=1)
+
+    def commit(self, out_mem: jnp.ndarray, payload: jnp.ndarray,
+               keys: jnp.ndarray, vals: jnp.ndarray):
+        """Fold a quiesced context back into the shard arrays by diff.
+
+        A bubble touches up to ``2 * max_moves + 1`` bucket rows at
+        positions the response does not enumerate; but any touched word
+        lives in exactly one copy (primary row ``b`` or mirror ``n + b``,
+        ``b < max_search``), so ``where(img != pre, img, mirror-merged)``
+        reconstructs the post-state exactly.  Nothing commits unless the
+        status is UPDATED/INSERTED/DISPLACED — a NEEDS_RESIZE run (or a
+        zero-padded request, which quiesces in the match phase against
+        the null guard) leaves the arrays bit-identical.
+        """
+        n, s, v = self.n_buckets, self.max_search, self.val_len
+        status = out_mem[self.resp_region]
+        applied = ((payload[0] != EMPTY_KEY)
+                   & ((status == SET_UPDATED) | (status == SET_INSERTED)
+                      | (status == SET_DISPLACED)))
+        rows = jnp.arange(n, dtype=jnp.int32)
+        mir = jnp.arange(s, dtype=jnp.int32)
+
+        base_k = keys.astype(jnp.int32)
+        img_k = out_mem[self.table_base + rows * BUCKET_WORDS]
+        mir_k = out_mem[self.table_base + (n + mir) * BUCKET_WORDS]
+        merged_k = base_k.at[:s].set(
+            jnp.where(mir_k != base_k[:s], mir_k, base_k[:s]))
+        new_k = jnp.where(img_k != base_k, img_k, merged_k)
+
+        base_v = vals.astype(jnp.int32)
+        cols = jnp.arange(v, dtype=jnp.int32)[None, :]
+        img_v = out_mem[self.values_base + rows[:, None] * v + cols]
+        mir_v = out_mem[self.values_base + (n + mir)[:, None] * v + cols]
+        merged_v = base_v.at[:s].set(
+            jnp.where(mir_v != base_v[:s], mir_v, base_v[:s]))
+        new_v = jnp.where(img_v != base_v, img_v, merged_v)
+
+        keys_out = jnp.where(applied, new_k, base_k).astype(keys.dtype)
+        vals_out = jnp.where(applied, new_v, base_v).astype(vals.dtype)
+        return (jnp.where(payload[0] == EMPTY_KEY, 0, status),
+                keys_out, vals_out)
+
+
+@functools.lru_cache(maxsize=None)
+def build_hopscotch_displacer(n_buckets: int, val_len: int,
+                              neighborhood: int = 8, max_search: int = 16,
+                              max_moves: int = 8) -> HopscotchShardDisplacer:
+    """Build (and cache per geometry) the per-shard displacement chain.
+
+    ``max_search`` bounds the free-slot probe from the home bucket (and
+    sizes the unwrapped mirror rows); ``max_moves`` bounds the bubble.
+    Both bounds are mirrored by the host oracle
+    ``hopscotch.HopscotchTable.set_full``.
+    """
+    h, s, m = neighborhood, max_search, max_moves
+    if h < 2:
+        raise ValueError("displacement needs a neighborhood >= 2 "
+                         "(the bubble window [free-H+1, free) is empty)")
+    if not h <= s <= n_buckets:
+        raise ValueError(
+            f"max_search must be in [neighborhood, n_buckets], got {s}")
+    if m < 1:
+        raise ValueError("max_moves must be >= 1")
+    if 1 + val_len + 1 > min(isa.MAX_SCATTER, isa.MSG_WORDS):
+        raise ValueError(
+            f"val_len {val_len} exceeds the one-SEND request budget")
+    ext = n_buckets + s
+
+    # exact image sizing: WQ slots (code) + data
+    SCTL, SMOD, SFND = 9, 2, 4            # per search probe
+    BCTL, BMOD = 7, 2                     # per break-check
+    PCTL, PMOD, PMOVE = 13, 2, 20         # per window probe
+    CLDRV, CLMOD = 9, 3
+    # null-guard sizing: a zero-padded request derives its H probe
+    # addresses from home_w = 0, so the guard's zero words must cover
+    # every derived read — probe pi reads [pi*BW] and [pi*BW + 2] — and
+    # the ghost update's value write of val_len words at val_ptr 0
+    guard_slots = max(2, -(-((h - 1) * BUCKET_WORDS + 3) // isa.WR_WORDS),
+                      -(-val_len // isa.WR_WORDS))
+    wq_slots = (guard_slots + 2 + h * (3 + 9 + 3) + (h + 1)
+                + s * (SCTL + SMOD + SFND) + (m + 1) * (BCTL + BMOD)
+                + m * (h - 1) * (PCTL + PMOD + PMOVE) + CLDRV + CLMOD)
+    data_words = (2 + 5 + 2 * val_len            # resp, carries, stages
+                  + ext * val_len                # value rows (mirrored)
+                  + ext * BUCKET_WORDS           # table (mirrored)
+                  + (h + 1) * 18                 # match + claim templates
+                  + 2 + val_len + 1)             # scatter table
+    mem_words = -(-(wq_slots * isa.WR_WORDS + data_words + 32) // 128) * 128
+
+    p = Program(mem_words)
+    # WQ0: the null region a zero-padded request's match probes hit —
+    # sized so every derived probe address (h-1)*BW + 2 and the ghost
+    # update's val_len zero-write at val_ptr 0 land on guard zeros, never
+    # on a live WR (the RECV's fields sit right behind it)
+    guard = p.add_wq(guard_slots)
+
+    resp = p.alloc(2, [SET_NEEDS_RESIZE, 0], "resp")
+    key_w = p.word(0, "key")
+    home_w = p.word(0, "home")
+    free_w = p.word(0, "free")     # carry: free slot's (unwrapped) address
+    dist_w = p.word(0, "dist")     # carry: its bucket distance from home
+    cand_w = p.word(0, "cand")     # scratch: current window candidate
+    val_stage = p.alloc(val_len, [0] * val_len, "val_stage")
+    zeros_v = p.alloc(val_len, [0] * val_len, "zeros")
+    values = p.alloc(ext * val_len, name="values")
+    tbl_init = [0] * (ext * BUCKET_WORDS)
+    for b in range(ext):
+        tbl_init[b * BUCKET_WORDS + 2] = values + b * val_len
+    table = p.alloc(ext * BUCKET_WORDS, tbl_init, "table")
+
+    rq = p.add_wq(2)
+
+    # --- match phase (shared emission; probe addrs derived from home) -----
+    _, _, m_mods = _emit_set_match_phase(
+        p, rq, h, key_w, val_stage, val_len, resp, home_w=home_w)
+
+    # --- create the control-flow WQs up front (branches name successors) --
+    sgate = p.add_wq(h + 1, ordering=isa.ORD_DOORBELL, managed=True)
+    sctl = [p.add_wq(SCTL, ordering=isa.ORD_DOORBELL, managed=True,
+                     initial_enable=0) for _ in range(s)]
+    smod = [p.add_wq(SMOD, ordering=isa.ORD_DOORBELL, managed=True,
+                     initial_enable=0) for _ in range(s)]
+    sfnd = [p.add_wq(SFND, ordering=isa.ORD_DOORBELL, managed=True,
+                     initial_enable=0) for _ in range(s)]
+    bctl = [p.add_wq(BCTL, ordering=isa.ORD_DOORBELL, managed=True,
+                     initial_enable=0) for _ in range(m + 1)]
+    bmod = [p.add_wq(BMOD, ordering=isa.ORD_DOORBELL, managed=True,
+                     initial_enable=0) for _ in range(m + 1)]
+    pctl = [[p.add_wq(PCTL, ordering=isa.ORD_DOORBELL, managed=True,
+                      initial_enable=0) for _ in range(h - 1)]
+            for _ in range(m)]
+    pmod = [[p.add_wq(PMOD, ordering=isa.ORD_DOORBELL, managed=True,
+                      initial_enable=0) for _ in range(h - 1)]
+            for _ in range(m)]
+    pmove = [[p.add_wq(PMOVE, ordering=isa.ORD_DOORBELL, managed=True,
+                       initial_enable=0) for _ in range(h - 1)]
+             for _ in range(m)]
+    cldrv = p.add_wq(CLDRV, ordering=isa.ORD_DOORBELL, managed=True,
+                     initial_enable=0)
+    clmod = p.add_wq(CLMOD, ordering=isa.ORD_DOORBELL, managed=True,
+                     initial_enable=0)
+
+    # --- search phase: gated on every match probe resolving un-hit --------
+    for pi in range(h):
+        sgate.wait(m_mods[pi], 3, tag=f"dp.nomatch{pi}")
+    sgate.enable(sctl[0], upto=SCTL, tag="dp.search")
+    sgate.initial_enable = sgate.n_posted + 1
+
+    for si in range(s):
+        ctl = sctl[si]
+
+        def load_key(a_addr, b_addr, ctl=ctl, si=si):
+            ctl.write(src=home_w, dst=ctl.future_wr_addr(2, "src"),
+                      tag=f"dp.sp{si}")
+            ctl.add(dst=ctl.future_wr_addr(1, "src"),
+                    addend=si * BUCKET_WORDS, tag=f"dp.so{si}")
+            ctl.read(src=0, dst=a_addr, ln=1, tag=f"dp.skey{si}")
+            ctl.write(src=a_addr, dst=b_addr, tag=f"dp.scp{si}")
+
+        nxt = (sctl[si + 1].index, SCTL) if si + 1 < s else (guard.index, 0)
+        constructs.emit_enable_branch(
+            ctl, smod[si], threshold=EMPTY_KEY,
+            then_wq=sfnd[si].index, then_upto=SFND,
+            else_wq=nxt[0], else_upto=nxt[1], load=load_key,
+            tag=f"dp.sbr{si}")
+
+        # found: latch the free slot's unwrapped address + home distance
+        sfnd[si].write(src=home_w, dst=free_w, tag=f"dp.free{si}")
+        sfnd[si].add(dst=free_w, addend=si * BUCKET_WORDS,
+                     tag=f"dp.foff{si}")
+        sfnd[si].write_imm(dst=dist_w, value=si, tag=f"dp.dist{si}")
+        sfnd[si].enable(bctl[0], upto=BCTL, tag=f"dp.go{si}")
+
+    # --- bubble laps: break-check + window scan + one move ----------------
+    for li in range(m + 1):
+        def load_dist(a_addr, b_addr, ctl=bctl[li], li=li):
+            ctl.write(src=dist_w, dst=a_addr, tag=f"dp.bd{li}")
+            ctl.write(src=dist_w, dst=b_addr, tag=f"dp.bd2{li}")
+
+        cont = ((pctl[li][0].index, PCTL) if li < m else (guard.index, 0))
+        constructs.emit_enable_branch(
+            bctl[li], bmod[li], threshold=h - 1,
+            then_wq=cldrv.index, then_upto=CLDRV,
+            else_wq=cont[0], else_upto=cont[1], load=load_dist,
+            tag=f"dp.brk{li}")
+
+    cl_tmpl, cl_stage = _set_templates(p, val_stage, val_len, resp,
+                                       SET_INSERTED)
+
+    for li in range(m):
+        for j in range(h - 1):
+            back = h - 1 - j            # scan order: farthest-back first
+            ctl = pctl[li][j]
+            ctl.write(src=free_w, dst=cand_w, tag=f"dp.c{li}.{j}")
+            ctl.add(dst=cand_w, addend=-back * BUCKET_WORDS,
+                    tag=f"dp.cb{li}.{j}")
+
+            def load_pad(a_addr, b_addr, ctl=ctl, back=back):
+                ctl.write(src=cand_w, dst=ctl.future_wr_addr(2, "src"),
+                          tag="dp.pp")
+                ctl.add(dst=ctl.future_wr_addr(1, "src"), addend=1,
+                        tag="dp.po")
+                ctl.read(src=0, dst=a_addr, ln=1, tag="dp.pad")
+                ctl.write(src=a_addr, dst=b_addr, tag="dp.pcp")
+                ctl.add(dst=a_addr, addend=back, tag="dp.pb1")
+                ctl.add(dst=b_addr, addend=back, tag="dp.pb2")
+
+            nxt = ((pctl[li][j + 1].index, PCTL) if j + 1 < h - 1
+                   else (guard.index, 0))
+            constructs.emit_enable_branch(
+                ctl, pmod[li][j], threshold=h - 1,
+                then_wq=pmove[li][j].index, then_upto=PMOVE,
+                else_wq=nxt[0], else_upto=nxt[1], load=load_pad,
+                tag=f"dp.mv{li}.{j}")
+
+            constructs.emit_displace_move(
+                pmove[li][j], cand_w=cand_w, free_w=free_w, dist_w=dist_w,
+                back=back, val_len=val_len, zeros=zeros_v,
+                status_addr=cl_stage, status_val=SET_DISPLACED,
+                next_wq=bctl[li + 1].index, next_upto=BCTL,
+                empty_key=EMPTY_KEY, tag=f"dp.mv{li}.{j}")
+
+    # --- claim phase: CAS-claim the final free slot -----------------------
+    cldrv.write(src=free_w, dst=cldrv.future_wr_addr(2, "src"),
+                tag="dp.clvp")
+    cldrv.add(dst=cldrv.future_wr_addr(1, "src"), addend=2, tag="dp.clvo")
+    cldrv.read(src=0, dst=cl_tmpl + isa.F_DST, ln=1, tag="dp.clv")
+    cldrv.write(src=free_w, dst=cl_stage + 1, tag="dp.claddr")
+    cldrv.write(src=free_w, dst=cldrv.future_wr_addr(2, "dst"),
+                tag="dp.clcell")
+    cldrv.write(src=key_w, dst=cldrv.future_wr_addr(1, "opb"),
+                tag="dp.clnew")
+    constructs.emit_cas_claim(
+        cldrv, clmod, cell=0, expect=EMPTY_KEY, new=0, then_src=cl_tmpl,
+        then_dst=clmod.future_wr_addr(1, "ctrl"), then_len=2 * isa.WR_WORDS)
+    clmod.post(isa.NOOP, tag="dp.cle")        # event: value WRITE slot
+    clmod.post(isa.NOOP, tag="dp.clf")        # event: response slot
+    cldrv.enable(clmod, upto=3, tag="dp.clen")
+
+    # RECV scatter: key, staged value words, the single home address
+    tbl = p.scatter_table(
+        [key_w] + [val_stage + j for j in range(val_len)] + [home_w])
+    rq.recv(scatter_table=tbl, tag="dp.recv")
+
+    spec, st0 = p.finalize()
+    return HopscotchShardDisplacer(
+        prog=p, spec=spec, state0=st0, n_buckets=n_buckets,
+        val_len=val_len, neighborhood=neighborhood, table_base=table,
+        values_base=values, resp_region=resp, recv_wq=rq.index,
+        max_search=max_search, max_moves=max_moves)
 
 
 # ---------------------------------------------------------------------------

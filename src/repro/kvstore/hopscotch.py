@@ -1,17 +1,24 @@
 """Hopscotch hash table (paper §5.2) in JAX arrays.
 
-The host table is the *slow-path* helper of the device-resident store:
-update and in-neighborhood insert are chain-offloaded (§3.5 chained-CAS
-writes — see ``repro.core.programs.build_hopscotch_writer``); only
-displacement runs here, on a host copy synced *from* the authoritative
-device arrays.  The batched *get* is pure ``jnp`` and doubles as the
-oracle for the Pallas ``hopscotch`` kernel and the chain get server;
-:meth:`HopscotchTable.set_fast` / :func:`insert_many` are the matching
-oracles for the chain writer.
+The host table is the *oracle* of the device-resident store: every verb
+of SET now executes on-chain — update and in-neighborhood insert via
+§3.5 chained-CAS writes (``repro.core.programs.build_hopscotch_writer``)
+and the displacement bubble via the bounded unrolled loop chain
+(``repro.core.programs.build_hopscotch_displacer``) — and the methods
+here replicate those programs' semantics bit-exactly for the tests.  The
+batched *get* is pure ``jnp`` and doubles as the oracle for the Pallas
+``hopscotch`` kernel and the chain get server; :meth:`HopscotchTable.
+set_fast` / :func:`insert_many` mirror the fast writer chain and
+:meth:`HopscotchTable.set_full` / :func:`insert_many_displaced` the
+writer + displacer escalation pipeline.
 
 Layout: open-addressed array of ``n_buckets``; a key hashing to bucket ``b``
 lives within the neighborhood ``[b, b+H)`` (wrapping).  ``keys[i] == 0``
 means empty.  Values are fixed-width word payloads in a parallel array.
+Value rows are always written *full-width* (zero-filled past the given
+words) and zeroed when a bucket is vacated — the chain programs copy and
+zero whole ``val_words`` rows, so a host path that left stale trailing
+words (or a stale vacated row) would diverge from the device truth.
 
 Because 0 doubles as the empty marker, a *query* of key 0 would compare
 equal to every empty bucket — the classic ghost-hit aliasing.  Every
@@ -21,7 +28,7 @@ in ``store.py``) masks ``found &= query != EMPTY``.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -29,12 +36,20 @@ import numpy as np
 EMPTY = 0
 _MULT = 2654435761
 
-# SET outcome codes reported by the chain writer's response word.  Kept
-# numerically identical to repro.core.programs.SET_* (the chain is built
-# against those; core must not import kvstore) — cross-checked in tests.
+# SET outcome codes reported by the chain writer/displacer response words.
+# Kept numerically identical to repro.core.programs.SET_* (the chains are
+# built against those; core must not import kvstore) — cross-checked in
+# tests.
 SET_UPDATED = 1              # key present in neighborhood, value rewritten
 SET_INSERTED = 2             # EMPTY bucket in neighborhood CAS-claimed
-SET_NEEDS_DISPLACEMENT = 3   # neighborhood full: host slow path required
+SET_NEEDS_DISPLACEMENT = 3   # neighborhood full: displacer chain required
+SET_DISPLACED = 4            # displacement bubbled a slot home and claimed it
+SET_NEEDS_RESIZE = 5         # bounded search/bubble failed: resize required
+
+# the displacer chain's bounds (mirrored defaults; the chain is unrolled
+# to exactly these, so the oracle must stop exactly where it does)
+DEFAULT_MAX_SEARCH = 16      # linear-probe window for the first EMPTY slot
+DEFAULT_MAX_MOVES = 8        # bubble laps before reporting needs-resize
 
 
 def bucket_of(key, n_buckets: int):
@@ -50,18 +65,21 @@ class HopscotchTable:
     keys: np.ndarray           # (n_buckets,) int32, 0 = empty
     values: np.ndarray         # (n_buckets, val_words) int32
     neighborhood: int          # H
-    # rows mutated by the most recent insert()/set_fast() — lets the device
-    # mirror apply O(touched) per-row updates instead of re-uploading the
-    # whole table
-    last_touched: List[int] = dataclasses.field(default_factory=list)
 
     @property
     def n_buckets(self) -> int:
         return len(self.keys)
 
-    # -- host-side set path ---------------------------------------------------
+    def _write_row(self, i: int, value: Sequence[int]):
+        """Full-width value-row write (zero-filled tail): the chain
+        programs always move whole ``val_words`` rows, so a shorter
+        update must not leave the old value's trailing words behind."""
+        self.values[i] = 0
+        self.values[i, :len(value)] = value
+
+    # -- host-side set paths --------------------------------------------------
     def set_fast(self, key: int, value: Sequence[int]) -> int:
-        """The chain writer's exact fast-path semantics (no displacement).
+        """The fast writer chain's exact semantics (no displacement).
 
         Scan the neighborhood for the key (first match -> in-place value
         write, ``SET_UPDATED``); otherwise CAS-claim the *first* EMPTY
@@ -72,69 +90,94 @@ class HopscotchTable:
         assert key != EMPTY
         n, H = self.n_buckets, self.neighborhood
         home = int(bucket_of(key, n))
-        self.last_touched = []
         for d in range(H):
             i = (home + d) % n
             if self.keys[i] == key:
-                self.values[i, :len(value)] = value
-                self.last_touched = [i]
+                self._write_row(i, value)
                 return SET_UPDATED
         for d in range(H):
             i = (home + d) % n
             if self.keys[i] == EMPTY:
                 self.keys[i] = key
-                self.values[i, :len(value)] = value
-                self.last_touched = [i]
+                self._write_row(i, value)
                 return SET_INSERTED
         return SET_NEEDS_DISPLACEMENT
 
-    def insert(self, key: int, value: Sequence[int]) -> bool:
+    def set_full(self, key: int, value: Sequence[int],
+                 max_search: int = DEFAULT_MAX_SEARCH,
+                 max_moves: int = DEFAULT_MAX_MOVES) -> int:
+        """The displacer chain's exact semantics — the full bounded SET.
+
+        Update if present; else probe ``[home, home + max_search)`` for
+        the first EMPTY slot; else bubble it toward the neighborhood with
+        up to ``max_moves`` hopscotch moves, scanning each window
+        ``back = H-1 .. 1`` for the first resident whose home distance
+        ``pad`` satisfies ``pad + back <= H-1`` (the movability predicate
+        the chain evaluates on the precomputed per-bucket distance word).
+        Every vacated bucket's value row is zeroed, exactly as the
+        chain's ``emit_displace_move`` does.  A dead end — no EMPTY slot
+        in the search window, a window with nothing movable, or the move
+        budget exhausted — returns ``SET_NEEDS_RESIZE`` and leaves the
+        table **bit-identical** (the chain's commit discards partial
+        moves), which is why the bubble below is planned first and
+        applied only on success.  Bit-exact oracle for
+        ``repro.core.programs.build_hopscotch_displacer``.
+        """
         assert key != EMPTY
         n, H = self.n_buckets, self.neighborhood
         home = int(bucket_of(key, n))
-        self.last_touched = []
-        # update in place if present
         for d in range(H):
             i = (home + d) % n
             if self.keys[i] == key:
-                self.values[i, :len(value)] = value
-                self.last_touched = [i]
-                return True
-        # find a free slot by linear probe
-        free = None
-        for d in range(n):
-            i = (home + d) % n
+                self._write_row(i, value)
+                return SET_UPDATED
+
+        free = dist = None
+        for s in range(min(max_search, n)):
+            i = (home + s) % n
             if self.keys[i] == EMPTY:
-                free = i
-                dist = d
+                free, dist = i, s
                 break
         if free is None:
-            return False
-        # hopscotch displacement: bubble the free slot into the neighborhood
+            return SET_NEEDS_RESIZE
+
+        moves: List[Tuple[int, int]] = []     # (free, cand) plan
         while dist >= H:
-            moved = False
+            if len(moves) >= max_moves:
+                return SET_NEEDS_RESIZE
             for back in range(H - 1, 0, -1):
                 cand = (free - back) % n
                 ck = int(self.keys[cand])
                 if ck == EMPTY:
-                    continue
-                c_home = int(bucket_of(ck, n))
-                # distance from cand's home to the free slot (wrapping)
-                if (free - c_home) % n < H:
-                    self.keys[free] = ck
-                    self.values[free] = self.values[cand]
-                    self.keys[cand] = EMPTY
-                    self.last_touched += [free, cand]
-                    free = cand
-                    dist = (free - home) % n
-                    moved = True
+                    continue          # pad marker H: never movable
+                pad = (cand - int(bucket_of(ck, n))) % n
+                if pad + back <= H - 1:
+                    moves.append((free, cand))
+                    free, dist = cand, dist - back
                     break
-            if not moved:
-                return False      # needs resize; caller's problem
+            else:
+                return SET_NEEDS_RESIZE
+        for f, c in moves:
+            self.keys[f] = self.keys[c]
+            self.values[f] = self.values[c]
+            self.keys[c] = EMPTY
+            self.values[c] = 0        # vacated rows must not leak values
         self.keys[free] = key
-        self.values[free, :len(value)] = value
-        self.last_touched.append(free)
-        return True
+        self._write_row(free, value)
+        return SET_DISPLACED if moves else SET_INSERTED
+
+    def insert(self, key: int, value: Sequence[int],
+               max_search: int = DEFAULT_MAX_SEARCH,
+               max_moves: int = DEFAULT_MAX_MOVES) -> bool:
+        """Bounded hopscotch insert/update; False = needs resize.
+
+        Thin wrapper over :meth:`set_full` (the displacer-chain oracle):
+        bounded to the chain's unrolled search window and move budget,
+        and — unlike the old unbounded bubble — guaranteed to leave the
+        table untouched when it fails.
+        """
+        return self.set_full(key, value, max_search,
+                             max_moves) != SET_NEEDS_RESIZE
 
     def as_device(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
         return jnp.asarray(self.keys), jnp.asarray(self.values)
@@ -169,7 +212,7 @@ def lookup(keys: jnp.ndarray, values: jnp.ndarray, queries: jnp.ndarray,
 
 
 def insert_many(table: HopscotchTable, keys, values) -> np.ndarray:
-    """Batched host insert oracle with the writer chain's semantics.
+    """Batched host insert oracle with the fast writer chain's semantics.
 
     Applies the SET batch *in order* via :meth:`HopscotchTable.set_fast`
     (update / in-neighborhood insert; needs-displacement rows leave the
@@ -180,3 +223,24 @@ def insert_many(table: HopscotchTable, keys, values) -> np.ndarray:
         [table.set_fast(int(k), [int(x) for x in np.asarray(v)])
          for k, v in zip(np.asarray(keys).tolist(), values)],
         np.int32)
+
+
+def insert_many_displaced(table: HopscotchTable, keys, values,
+                          max_search: int = DEFAULT_MAX_SEARCH,
+                          max_moves: int = DEFAULT_MAX_MOVES) -> np.ndarray:
+    """The two-stage escalation oracle for ``store.sharded_set``.
+
+    The sharded SET path applies a batch as two serialized chain passes:
+    every request through the fast writer *in order*, then every
+    ``SET_NEEDS_DISPLACEMENT`` row through the displacer *in order* (so a
+    displacement observes every fast-path write of its batch, and earlier
+    displacements' vacated slots).  This replays exactly that order on
+    the host table and returns the merged per-request statuses.
+    """
+    ks = np.asarray(keys)
+    vals = [np.asarray(v) for v in values]
+    st = insert_many(table, ks, vals)
+    for i in np.where(st == SET_NEEDS_DISPLACEMENT)[0]:
+        st[i] = table.set_full(
+            int(ks[i]), [int(x) for x in vals[i]], max_search, max_moves)
+    return st

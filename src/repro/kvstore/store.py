@@ -19,12 +19,14 @@ All three return identical values on served requests (tested); they differ
 in collective phases and in which resource does the work — which is what
 the fidelity benchmarks price.
 
-Writes are chain-offloaded too: :func:`sharded_set` routes SET batches to
-the owner shards, where the pre-posted *writer* chain
-(:func:`repro.core.programs.build_hopscotch_writer`) match-updates or
-CAS-claims buckets against the **authoritative device arrays** — the host
-tables are only a displacement slow-path helper that syncs *from* device
-(``rdma.failure.ShardedKVService.set``).
+Writes are chain-offloaded too — *all* of them: :func:`sharded_set`
+routes SET batches to the owner shards, where the pre-posted *writer*
+chain (:func:`repro.core.programs.build_hopscotch_writer`) match-updates
+or CAS-claims buckets against the **authoritative device arrays**, and
+any ``SET_NEEDS_DISPLACEMENT`` rows escalate to the *displacer* chain
+(:func:`repro.core.programs.build_hopscotch_displacer`), which runs the
+bounded hopscotch bubble on-device.  The host tables are pure oracles;
+no SET path touches them.
 
 Every path returns a :class:`GetResult` (sets: :class:`SetResult`) whose
 per-request ``ok`` mask says whether the response is authoritative: a
@@ -68,6 +70,65 @@ def shard_of(key, n_shards: int):
             % jnp.uint32(n_shards)).astype(jnp.int32)
 
 
+def keys_homed_at(bucket: int, count: int, n_buckets: int, start: int = 1,
+                  n_shards: Optional[int] = None, shard: int = 0):
+    """Brute-force enumerate 24-bit keys whose home bucket is ``bucket``
+    (optionally also pinned to one owner shard).
+
+    The engineered-collision helper the displacement tests and
+    benchmarks share: hopscotch displacement only triggers when a whole
+    neighborhood fills, so scenarios are built from keys with chosen
+    homes.  Centralized here (the one module that sees both the bucket
+    hash and the shard hash) so a hashing change cannot silently strand
+    the scenarios on wrong buckets.
+    """
+    out, k = [], start
+    while len(out) < count:
+        if k > 0xFFFFFF:
+            # never hand out keys past the id space: the chain truncates
+            # to 24 bits while the host oracle would hash the full int —
+            # exactly the parity split this helper exists to prevent
+            raise ValueError(
+                f"ran out of 24-bit keys homed at bucket {bucket} "
+                f"(found {len(out)}/{count} from start={start})")
+        if (int(hopscotch.bucket_of(k, n_buckets)) == bucket
+                and (n_shards is None
+                     or int(shard_of(k, n_shards)) == shard)):
+            out.append(k)
+        k += 1
+    return out
+
+
+def _check_key_batch(arr, *, what: str, allow_zero: bool, live=None):
+    """Host-side 24-bit key validation for the batched paths.
+
+    Keys live in the chain ISA's id space (``opcode:8 | id:24`` — see
+    :meth:`ShardedKV.check_key`): a wider key's top byte would decode as
+    an opcode once a probe READ lands it on a WR's control word, and a
+    negative key aliases some other key's bit pattern.  The batched
+    entry points are eager (they jit internally), so concrete inputs are
+    validated here; traced inputs (callers who wrapped the store in
+    their own jit) skip the check — garbage-in keys then surface as
+    ordinary misses/claims of their masked alias, never as decoded
+    opcodes, because the scatter path truncates to the id field anyway.
+    Rows masked dead by an admission stage (``live=False``) are never
+    dispatched, so a sentinel there is legal and skipped.
+    """
+    if isinstance(arr, jax.core.Tracer) or isinstance(live, jax.core.Tracer):
+        return
+    a = np.asarray(arr)
+    lo = 0 if allow_zero else 1
+    bad = (a < lo) | (a > 0xFFFFFF)
+    if live is not None:
+        bad &= np.asarray(live).astype(bool)
+    if bad.any():
+        offender = a[bad].ravel()[0]
+        raise ValueError(
+            f"{what} keys are 24-bit chain ids"
+            f"{' (0 = unused slot)' if allow_zero else ''}; "
+            f"got {int(offender):#x}")
+
+
 class GetResult(NamedTuple):
     """Distributed get outcome. ``found``/``values`` are authoritative only
     where ``ok`` is True — a False row was dropped (capacity) or deferred
@@ -105,8 +166,8 @@ class ShardedKV:
             raise ValueError(f"keys are 24-bit chain ids, got {key:#x}")
 
     def set(self, key: int, value: Sequence[int]) -> bool:
-        """Host-side set (bootstrap / displacement slow path; the serving
-        fast path is the chain-offloaded :func:`sharded_set`)."""
+        """Host-side set (bootstrap/tests only; serving goes through the
+        chain-offloaded :func:`sharded_set`, displacement included)."""
         self.check_key(key)
         return self.tables[int(shard_of(key, self.n_shards))].insert(
             key, value)
@@ -118,8 +179,8 @@ class ShardedKV:
 
     def sync_from_device(self, keys, vals):
         """Refresh the host tables *from* the authoritative device arrays
-        (the slow-path direction: chain-offloaded sets mutate the device
-        state; the host copy is only consulted for displacement)."""
+        (chain-offloaded sets mutate only the device state; the host copy
+        is a debugging/verification mirror)."""
         kk, vv = np.asarray(keys), np.asarray(vals)
         for s, t in enumerate(self.tables):
             t.keys = kk[s].copy()
@@ -218,6 +279,7 @@ def sharded_get(mesh: Mesh, axis: str, keys: jnp.ndarray, vals: jnp.ndarray,
     count (see :func:`sharded_get_isolated` for the token-bucket stage
     that produces it).  Returns a :class:`GetResult`.
     """
+    _check_key_batch(queries, what="query", allow_zero=True, live=live)
     n_shards = mesh.shape[axis]
     b_local = queries.shape[1]
     # `capacity or b_local` would silently turn an explicit capacity=0
@@ -239,13 +301,33 @@ def sharded_get(mesh: Mesh, axis: str, keys: jnp.ndarray, vals: jnp.ndarray,
     return GetResult(*mapped(keys, vals, queries, live))
 
 
-@functools.lru_cache(maxsize=None)
+# Compile caches for the shard_map serving bodies, keyed on *mesh
+# geometry* (axis names, shape, device ids) rather than the Mesh object:
+# an lru_cache keyed on the Mesh itself retained every test's mesh — and
+# through it the devices' buffers — for the process lifetime, and two
+# equal-geometry meshes each paid a full re-trace.  One entry per
+# distinct geometry (the first mesh of a geometry is captured by the
+# compiled closure; later equal meshes share it).
+_MAPPED_CACHE: dict = {}
+
+
+def _mesh_fingerprint(mesh: Mesh):
+    return (tuple(mesh.axis_names), tuple(mesh.devices.shape),
+            tuple(d.id for d in mesh.devices.flat))
+
+
 def _mapped_get(mesh: Mesh, axis: str, method: str, n_shards: int,
                 capacity: int, neighborhood: int, val_words: int):
-    """Compile-cache the sharded get per (mesh, geometry): the shard_map
-    body is built once and jitted, so repeated serving calls reuse the
-    compiled step instead of re-tracing the chain VM loop per call (and
-    eager/jit callers cannot disagree about trace context)."""
+    """Compile-cache the sharded get per (mesh geometry, path geometry):
+    the shard_map body is built once and jitted, so repeated serving
+    calls reuse the compiled step instead of re-tracing the chain VM
+    loop per call (and eager/jit callers cannot disagree about trace
+    context)."""
+    key = ("get", _mesh_fingerprint(mesh), axis, method, n_shards,
+           capacity, neighborhood, val_words)
+    cached = _MAPPED_CACHE.get(key)
+    if cached is not None:
+        return cached
     path = functools.partial(
         _PATHS[method], n_shards=n_shards, capacity=capacity, axis=axis,
         neighborhood=neighborhood, val_words=val_words)
@@ -258,9 +340,11 @@ def _mapped_get(mesh: Mesh, axis: str, method: str, n_shards: int,
         return found, v, ok, dropped, deferred
 
     spec = P(axis)
-    return jax.jit(shard_map(
+    fn = jax.jit(shard_map(
         body, mesh=mesh, in_specs=(spec, spec, spec, spec),
         out_specs=(spec, spec, spec, spec, spec), check_vma=False))
+    _MAPPED_CACHE[key] = fn
+    return fn
 
 
 def sharded_get_isolated(mesh: Mesh, axis: str, keys: jnp.ndarray,
@@ -286,15 +370,21 @@ def sharded_get_isolated(mesh: Mesh, axis: str, keys: jnp.ndarray,
 
 # ---------------------------------------------------------------------------
 # the chain-offloaded SET path (§3.5: the device structure is the source
-# of truth; the host is only the displacement slow path)
+# of truth; update, insert, and displacement all execute on-chain)
 # ---------------------------------------------------------------------------
 
 class SetResult(NamedTuple):
     """Distributed set outcome.  ``status`` is authoritative only where
     ``ok`` is True (a False row was dropped/deferred, status 0); values:
-    ``SET_UPDATED`` (1), ``SET_INSERTED`` (2), or
-    ``SET_NEEDS_DISPLACEMENT`` (3 — nothing committed, host slow path
-    required).  ``applied`` acks the rows the device arrays absorbed."""
+    ``SET_UPDATED`` (1), ``SET_INSERTED`` (2), ``SET_DISPLACED`` (4 —
+    the displacer bubbled a slot into the neighborhood and claimed it),
+    or ``SET_NEEDS_RESIZE`` (5 — the bounded search/bubble failed;
+    nothing committed, the table needs to grow).
+    ``SET_NEEDS_DISPLACEMENT`` (3) is internal-only — the fast writer's
+    cue to the displacer stage; every such row resolves to 1/2/4/5
+    within the same call (the escalation re-dispatch provably cannot
+    drop), so callers never observe it.  ``applied`` acks the rows the
+    device arrays absorbed."""
     status: jnp.ndarray     # (S, B) int32 — the path taken per request
     applied: jnp.ndarray    # (S, B) bool — committed to the device arrays
     ok: jnp.ndarray         # (S, B) bool — response authoritative
@@ -303,52 +393,125 @@ class SetResult(NamedTuple):
 
 
 def _writer_set_local(keys, vals, qk, qv, live, *, n_shards, capacity, axis,
-                      neighborhood, val_words, max_steps):
+                      neighborhood, val_words, max_steps, max_search,
+                      max_moves):
     """Owner-side SET serving: the pre-posted writer chain CAS-claims /
     updates buckets; requests against one shard are serialized so each
-    chain observes its predecessors' writes (no host lookup anywhere)."""
+    chain observes its predecessors' writes (no host lookup anywhere).
+
+    Rows the fast writer answers ``SET_NEEDS_DISPLACEMENT`` re-run
+    through the *displacer* chain as a second stateful stage (same
+    dispatch/scan/combine pattern, one more RTT for just those rows):
+    the bounded hopscotch bubble executes on-device, so a
+    neighborhood-full insert needs no host either.  The escalation
+    re-dispatch can never drop: stage-2 live rows are a subset of
+    stage-1's admitted rows, and ``rank_within_dest`` ranks only live
+    rows, so every stage-2 rank is <= its stage-1 rank < capacity.
+    """
     q = qk.reshape(-1)
     dest = shard_of(q, n_shards)
     n_buckets = keys.shape[1]
+    lv = live.reshape(-1)
     writer = programs.build_hopscotch_writer(n_buckets, val_words,
                                              neighborhood)
     payload = writer.device_payloads(q, hopscotch.bucket_of(q, n_buckets),
                                      qv.reshape(-1, val_words))
 
-    def step(carry, pay):
-        status, tk, tv = writer.run_one(*carry, pay, max_steps)
-        return (tk, tv), status[None]
+    def _guarded_step(run_one, budget):
+        """Scan step that skips the chain VM entirely for the window's
+        zero-padded slots (key 0: capacity padding and non-dispatched
+        rows).  Per-slot lax.cond is safe here — the scan body contains
+        no collectives, unlike the dispatch/combine around it, so shards
+        may branch independently; batching the whole escalation stage
+        behind a global `any(live)` would put collectives under a cond.
+        A padded slot's run is a proven no-op (status 0, carry
+        unchanged), so skipping it is bit-identical and keeps
+        steady-state serving from paying a quiesce-run per dead slot."""
+        def live_slot(op):
+            tk, tv, p = op
+            return run_one(tk, tv, p, budget)
+
+        def dead_slot(op):
+            tk, tv, p = op
+            return jnp.zeros((), jnp.int32), tk, tv
+
+        def step(carry, pay):
+            st, tk, tv = jax.lax.cond(
+                pay[0] != hopscotch.EMPTY, live_slot, dead_slot,
+                (carry[0], carry[1], pay))
+            return (tk, tv), st[None]
+        return step
 
     resp, ok, (nk, nv) = transport.triggered_chain_stateful(
-        step, (keys[0], vals[0]), payload, dest, n_shards, capacity, axis,
-        1, live.reshape(-1))
-    return resp[:, 0][None], ok[None], nk[None], nv[None]
+        _guarded_step(writer.run_one, max_steps), (keys[0], vals[0]),
+        payload, dest, n_shards, capacity, axis, 1, lv)
+    status = resp[:, 0]
+    live2 = ok & (status == programs.SET_NEEDS_DISPLACEMENT)
+
+    if neighborhood < 2 or max_search < neighborhood:
+        # degenerate geometries the displacer cannot be built for — an
+        # H=1 bubble's window [free-H+1, free) is empty, and a search
+        # window smaller than the neighborhood (tiny shard, or a
+        # caller-chosen bound) probes only already-known-full buckets.
+        # Either way an escalated row is unplaceable, which is exactly
+        # the bounded oracle's SET_NEEDS_RESIZE answer — resolve it
+        # without building a displacer.
+        status = jnp.where(live2, jnp.int32(programs.SET_NEEDS_RESIZE),
+                           status)
+        return status[None], ok[None], nk[None], nv[None]
+
+    # --- escalation: the displacement bubble, still on-chain --------------
+    disp = programs.build_hopscotch_displacer(
+        n_buckets, val_words, neighborhood, max_search, max_moves)
+    payload2 = disp.device_payloads(q, hopscotch.bucket_of(q, n_buckets),
+                                    qv.reshape(-1, val_words))
+    # the displacer's step budget must cover its full unroll (which
+    # grows with max_search/max_moves) — `fuel` is the exact bound, so
+    # no tunable geometry can exhaust fuel mid-bubble and misreport a
+    # placeable key as needs-resize
+    disp_steps = max(max_steps, disp.fuel)
+    step2 = _guarded_step(disp.run_one, disp_steps)
+
+    resp2, ok2, (nk, nv) = transport.triggered_chain_stateful(
+        step2, (nk, nv), payload2, dest, n_shards, capacity, axis, 1,
+        live2)
+    status = jnp.where(live2 & ok2, resp2[:, 0], status)
+    return status[None], ok[None], nk[None], nv[None]
 
 
 def sharded_set(mesh: Mesh, axis: str, keys: jnp.ndarray, vals: jnp.ndarray,
                 set_keys: jnp.ndarray, set_vals: jnp.ndarray,
                 neighborhood: int = 8, capacity: Optional[int] = None,
                 live: Optional[jnp.ndarray] = None,
-                max_steps: int = 512
+                max_steps: int = 512,
+                max_search: int = hopscotch.DEFAULT_MAX_SEARCH,
+                max_moves: int = hopscotch.DEFAULT_MAX_MOVES
                 ) -> Tuple[SetResult, jnp.ndarray, jnp.ndarray]:
-    """Batched chain-offloaded distributed SET.
+    """Batched chain-offloaded distributed SET — displacement included.
 
     set_keys: (S, B_local) int32 keys in 1..2^24-1 (dim 0 sharded; 0 marks
     an unused slot — never dispatched, never committed, reported
-    ``ok=False``/status 0 and excluded from the drop/defer counters);
-    set_vals: (S, B_local, V).
+    ``ok=False``/status 0 and excluded from the drop/defer counters;
+    wider or negative keys raise); set_vals: (S, B_local, V).
     Each request is routed to its owner shard, where the pre-posted
     **writer chain program** (:func:`repro.core.programs.
     build_hopscotch_writer`) match-updates or CAS-claims a bucket — the
     same 1-RTT wire pattern as the redn get, with the *device arrays as
-    the authoritative store*.  Returns ``(SetResult, new_keys,
-    new_vals)``; the caller must adopt the returned arrays (functional
-    update, like any jnp state).  ``SET_NEEDS_DISPLACEMENT`` rows left
-    the store untouched and need the host slow path
-    (``failure.ShardedKVService.set``).
+    the authoritative store*.  Rows the writer reports
+    ``SET_NEEDS_DISPLACEMENT`` escalate to the **displacer chain**
+    (:func:`repro.core.programs.build_hopscotch_displacer`, bounded by
+    ``max_search``/``max_moves``) in a second stateful stage, so every
+    SET outcome — update, insert, displacement — is computed by verbs
+    against device state; only ``SET_NEEDS_RESIZE`` (table full) leaves
+    a request uncommitted.  Returns ``(SetResult, new_keys, new_vals)``;
+    the caller must adopt the returned arrays (functional update, like
+    any jnp state).
     """
+    _check_key_batch(set_keys, what="set", allow_zero=True, live=live)
     n_shards = mesh.shape[axis]
     b_local = set_keys.shape[1]
+    # the displacer's search window cannot exceed the shard's bucket count
+    max_search = min(max_search, int(keys.shape[1]))
     capacity = b_local if capacity is None else capacity
     if live is None:
         live = jnp.ones(set_keys.shape, jnp.bool_)
@@ -362,24 +525,30 @@ def sharded_set(mesh: Mesh, axis: str, keys: jnp.ndarray, vals: jnp.ndarray,
             keys, vals)
 
     mapped = _mapped_set(mesh, axis, n_shards, capacity, neighborhood,
-                         vals.shape[-1], max_steps)
+                         vals.shape[-1], max_steps, max_search, max_moves)
     status, ok, dropped, deferred, nk, nv = mapped(keys, vals, set_keys,
                                                    set_vals, live)
     applied = ok & ((status == programs.SET_UPDATED)
-                    | (status == programs.SET_INSERTED))
+                    | (status == programs.SET_INSERTED)
+                    | (status == programs.SET_DISPLACED))
     return SetResult(status, applied, ok, dropped, deferred), nk, nv
 
 
-@functools.lru_cache(maxsize=None)
 def _mapped_set(mesh: Mesh, axis: str, n_shards: int, capacity: int,
-                neighborhood: int, val_words: int, max_steps: int):
-    """Compile-cache the sharded set per (mesh, geometry), like
-    :func:`_mapped_get` — one trace of the writer-chain scan serves every
-    subsequent batch of the same shape."""
+                neighborhood: int, val_words: int, max_steps: int,
+                max_search: int, max_moves: int):
+    """Compile-cache the sharded set per (mesh geometry, path geometry),
+    like :func:`_mapped_get` — one trace of the writer + displacer scan
+    serves every subsequent batch of the same shape."""
+    key = ("set", _mesh_fingerprint(mesh), axis, n_shards, capacity,
+           neighborhood, val_words, max_steps, max_search, max_moves)
+    cached = _MAPPED_CACHE.get(key)
+    if cached is not None:
+        return cached
     path = functools.partial(
         _writer_set_local, n_shards=n_shards, capacity=capacity, axis=axis,
         neighborhood=neighborhood, val_words=val_words,
-        max_steps=max_steps)
+        max_steps=max_steps, max_search=max_search, max_moves=max_moves)
 
     def body(keys, vals, qk, qv, live):
         # unused (key-0) slots are inert: no dispatch slot, no counter
@@ -392,9 +561,11 @@ def _mapped_set(mesh: Mesh, axis: str, n_shards: int, capacity: int,
         return status, ok, dropped, deferred, nk, nv
 
     spec = P(axis)
-    return jax.jit(shard_map(
+    fn = jax.jit(shard_map(
         body, mesh=mesh, in_specs=(spec,) * 5, out_specs=(spec,) * 6,
         check_vma=False))
+    _MAPPED_CACHE[key] = fn
+    return fn
 
 
 # ---------------------------------------------------------------------------

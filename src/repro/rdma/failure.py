@@ -5,11 +5,11 @@ so the NIC keeps executing pre-posted recycled chains when the Memcached
 child (or the whole OS) dies.  The TPU analogue: the serving state — the
 recycled chain VM state, the hash table, the response regions — lives in
 *device buffers* owned by :class:`DeviceResidentService`; the *host driver*
-(config, logging, displacement plumbing) is a disposable Python object.
-Crashing and restarting the driver touches no device state, so gets — and,
-on the sharded store, chain-offloaded fast-path sets — keep being served
-with zero recovery time; a cold restart must rebuild the table and re-post
-chains (the multi-second gap Fig. 16 shows).
+(config, logging) is a disposable Python object.  Crashing and restarting
+the driver touches no device state, so gets — and, on the sharded store,
+*every* chain-offloaded set, hopscotch displacement included — keep being
+served with zero recovery time; a cold restart must rebuild the table and
+re-post chains (the multi-second gap Fig. 16 shows).
 """
 from __future__ import annotations
 
@@ -97,16 +97,16 @@ class DeviceResidentService(_HostDriverLifecycle):
 class ShardedKVService(_HostDriverLifecycle):
     """The §5.6 story at production scale: the *sharded* store's serving
     state — device arrays plus the pre-posted per-shard chain programs —
-    is device-resident; the host driver (config, logging, the displacement
-    slow path) is a disposable Python object.  Kill the driver and both
-    ``sharded gets`` *and* fast-path sets (update / in-neighborhood
-    insert) keep executing their chain VM programs at the owner shards
-    with zero recovery time; only hopscotch *displacement* — the rare
-    neighborhood-full insert — needs a live host, which syncs its table
-    copy *from* the authoritative device arrays, bubbles, and pushes back
-    per-row updates.
+    is device-resident; the host driver (config, logging) is a disposable
+    Python object.  Kill the driver and sharded gets *and every* SET path
+    — update, in-neighborhood insert, *and* hopscotch displacement (the
+    bounded bubble runs as the displacer chain at the owner shard) — keep
+    executing their chain VM programs with zero recovery time.  The host
+    holds no serving role at all anymore; only a ``SET_NEEDS_RESIZE``
+    answer (table genuinely full) requires operator intervention, and
+    that is a capacity event, not a failure-recovery one.
     """
-    kv: "kv_store.ShardedKV"       # host handle (displacement slow path)
+    kv: "kv_store.ShardedKV"       # host handle (bootstrap/geometry only)
     mesh: object                   # jax Mesh over the serving axis
     axis: str
     keys: object                   # (S, B) device array
@@ -124,7 +124,14 @@ class ShardedKVService(_HostDriverLifecycle):
 
         kv = kv_store.ShardedKV.build(n_shards, buckets_per_shard, val_words)
         for k, v in items:
-            kv.set(int(k), list(v))
+            if not kv.set(int(k), list(v)):
+                # the bounded host insert mirrors the chain's search/move
+                # budget — a failure here would silently drop the item
+                # and surface later as an inexplicable miss
+                raise ValueError(
+                    f"bootstrap insert of key {int(k)} needs a resize "
+                    f"(buckets_per_shard={buckets_per_shard} too tight "
+                    "for this item set)")
         keys, vals = kv.device_arrays()
         mesh = Mesh(np.array(jax.devices()[:n_shards]), (axis,))
         return cls(kv=kv, mesh=mesh, axis=axis, keys=keys, vals=vals,
@@ -144,10 +151,11 @@ class ShardedKVService(_HostDriverLifecycle):
 
     def set_many(self, set_keys, set_vals, **kwargs) -> "kv_store.SetResult":
         """Batched chain-offloaded sets: the writer chain programs execute
-        at the owner shards against the authoritative device arrays.
-        Works with the driver dead.  ``SET_NEEDS_DISPLACEMENT`` rows left
-        the store untouched — route them through :meth:`set` (which needs
-        a live driver for the displacement)."""
+        at the owner shards against the authoritative device arrays, and
+        neighborhood-full rows escalate to the displacer chain in the
+        same call.  Works with the driver dead.  Only ``SET_NEEDS_RESIZE``
+        rows (bounded search/bubble exhausted — the table must grow) are
+        left uncommitted."""
         import jax.numpy as jnp
 
         qk = jnp.asarray(set_keys, jnp.int32)
@@ -158,43 +166,22 @@ class ShardedKVService(_HostDriverLifecycle):
             self.mesh, self.axis, self.keys, self.vals, qk, qv, **kwargs)
         return res
 
-    # -- the set path: chain fast path + host displacement slow path ---------
+    # -- the set path: fully chain-served, displacement included -------------
     def set(self, key: int, value: Sequence[int]) -> bool:
-        """Update / in-neighborhood insert ride the writer chain (device
-        state only — survives a dead driver); only a neighborhood-full
-        insert falls back to host displacement, the one step that still
-        dies with the Memcached process."""
-        import jax.numpy as jnp
-
+        """One SET through the full chain pipeline — update,
+        in-neighborhood insert, or displacement, all device state only,
+        all serving with the driver dead.  False means the *bounded*
+        displacement could not place the key (``SET_NEEDS_RESIZE``):
+        the store is intact and needs a resize, not a restart."""
         kv_store.ShardedKV.check_key(key)
         n_shards = self.kv.n_shards
         # one real request from shard 0; other source shards contribute a
-        # zero-padded slot that the writer's null guard ignores
+        # zero-padded slot that the chains' null guards ignore
         qk = np.zeros((n_shards, 1), np.int32)
         qk[0, 0] = key
         qv = np.zeros((n_shards, 1, self.kv.val_words), np.int32)
         qv[0, 0, :len(value)] = value
         res = self.set_many(qk, qv)
         status = int(np.asarray(res.status)[0, 0])
-        if status in (programs.SET_UPDATED, programs.SET_INSERTED):
-            return True
-
-        # needs-displacement: host slow path (§5.6's residual host role)
-        if not self.host_alive():
-            raise RuntimeError(
-                "displacement insert needs the host driver (gets and "
-                "fast-path sets keep serving)")
-        shard = int(kv_store.shard_of(key, n_shards))
-        t = self.kv.tables[shard]
-        # sync the host copy *from* the authoritative device slice, bubble,
-        # then push back only the touched rows (O(moves), not O(table))
-        t.keys = np.asarray(self.keys)[shard].copy()
-        t.values = np.asarray(self.vals)[shard].copy()
-        ok = t.insert(key, list(value))
-        if ok:
-            rows = np.asarray(sorted(set(t.last_touched)), np.int32)
-            self.keys = self.keys.at[shard, rows].set(
-                jnp.asarray(t.keys[rows]))
-            self.vals = self.vals.at[shard, rows].set(
-                jnp.asarray(t.values[rows]))
-        return ok
+        return status in (programs.SET_UPDATED, programs.SET_INSERTED,
+                          programs.SET_DISPLACED)

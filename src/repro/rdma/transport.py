@@ -167,6 +167,14 @@ def triggered_chain_stateful(step_fn: Callable, carry, payload: jnp.ndarray,
     ``step_fn`` too and must be self-guarding (the chain programs' null
     guard WQ / key-0 commit mask).  Returns
     ``(responses (B, resp_words), ok (B,), final_carry)``.
+
+    Stages compose: a caller may re-dispatch a *subset* of one stage's
+    admitted rows through a second stateful stage, threading the carry
+    through both (the SET path's displacement escalation does exactly
+    this).  Because :func:`rank_within_dest` ranks only live rows, every
+    row of a ``live2 <= ok1`` subset gets a rank <= its stage-1 rank, so
+    at equal capacity the escalation stage can never introduce new drops
+    — the invariant ``test_escalation_subset_never_drops`` pins down.
     """
     recv, pos, ok = dispatch(payload, dest, n_shards, capacity, axis_name,
                              live)

@@ -296,3 +296,150 @@ def test_mov_indexed_matches_python(vals, off):
     spec, st0 = p.finalize()
     out = machine.run(spec, st0, 64)
     assert int(out.mem[r_dst]) == vals[off]
+
+
+# --- enable-branch (Calc-verb inequality conditional) -------------------------
+
+def _build_branch(v, threshold):
+    """if (v <= thr) then wq_a writes 1 else wq_b writes 2 into resp."""
+    p = assembler.Program(512)
+    v_w = p.word(v)
+    one, two = p.word(1), p.word(2)
+    resp = p.word(0)
+    wq_a = p.add_wq(2, managed=True, ordering=isa.ORD_DOORBELL,
+                    initial_enable=0)
+    wq_b = p.add_wq(2, managed=True, ordering=isa.ORD_DOORBELL,
+                    initial_enable=0)
+    wq_a.write(src=one, dst=resp)
+    wq_b.write(src=two, dst=resp)
+    mod = p.add_wq(2, managed=True, ordering=isa.ORD_DOORBELL,
+                   initial_enable=0)
+    ctl = p.add_wq(10, managed=True, ordering=isa.ORD_DOORBELL,
+                   initial_enable=99)
+
+    def load(a_addr, b_addr):
+        ctl.write(src=v_w, dst=a_addr)
+        ctl.write(src=v_w, dst=b_addr)
+
+    constructs.emit_enable_branch(
+        ctl, mod, threshold=threshold, then_wq=wq_a.index, then_upto=2,
+        else_wq=wq_b.index, else_upto=2, load=load)
+    spec, st0 = p.finalize()
+    out = machine.run(spec, st0, 64)
+    return int(out.mem[resp])
+
+
+@pytest.mark.parametrize("v,thr,want", [
+    (0, 0, 1), (1, 0, 2), (3, 7, 1), (7, 7, 1), (8, 7, 2),
+    (0xFFFFFE, 0xFFFFFE, 1), (0xFFFFFD, 3, 2)])
+def test_enable_branch_selects_exactly_one_wq(v, thr, want):
+    assert _build_branch(v, thr) == want
+
+
+@settings(max_examples=25, deadline=None)
+@given(v=st.integers(0, isa.ID_MASK - 1),
+       thr=st.integers(0, isa.ID_MASK - 1))
+def test_enable_branch_matches_python(v, thr):
+    assert _build_branch(v, thr) == (1 if v <= thr else 2)
+
+
+# --- displace-move (one hopscotch bubble step) --------------------------------
+
+def test_displace_move_moves_vacates_and_zeroes():
+    """One move step over the shared [key, pad, val_ptr] row layout:
+    value row copied, key moved, mover CASed to EMPTY, stale row zeroed,
+    carries advanced, next WQ released."""
+    V, BW = 2, 3
+    p = assembler.Program(1024)
+    status = p.word(0)
+    vals = p.alloc(4 * V, [11, 12, 21, 22, 31, 32, 0, 0], "vals")
+    tbl_init = []
+    for b, key in enumerate([101, 102, 103, 0]):
+        tbl_init += [key, b, vals + b * V]
+    table = p.alloc(4 * BW, tbl_init, "table")
+    zeros = p.alloc(V, [0] * V)
+    cand_w = p.word(table + 1 * BW)     # move bucket 1 ...
+    free_w = p.word(table + 3 * BW)     # ... into (empty) bucket 3
+    dist_w = p.word(5)
+    nxt = p.add_wq(2, managed=True, ordering=isa.ORD_DOORBELL,
+                   initial_enable=0)
+    done = p.word(0)
+    nxt.write_imm(dst=done, value=77)
+    ctl = p.add_wq(24, managed=True, ordering=isa.ORD_DOORBELL,
+                   initial_enable=99)
+    refs = constructs.emit_displace_move(
+        ctl, cand_w=cand_w, free_w=free_w, dist_w=dist_w, back=2,
+        val_len=V, zeros=zeros, status_addr=status, status_val=4,
+        next_wq=nxt.index, next_upto=2)
+    spec, st0 = p.finalize()
+    out = machine.run(spec, st0, 128)
+    mem = np.asarray(out.mem)
+    # key + value moved into the free bucket
+    assert mem[table + 3 * BW] == 102
+    assert mem[vals + 3 * V: vals + 3 * V + V].tolist() == [21, 22]
+    # mover vacated, its value row zeroed
+    assert mem[table + 1 * BW] == 0
+    assert mem[vals + 1 * V: vals + 1 * V + V].tolist() == [0, 0]
+    # other buckets untouched
+    assert mem[table] == 101 and mem[table + 2 * BW] == 103
+    assert mem[vals: vals + V].tolist() == [11, 12]
+    # carries advanced, status recorded, next stage released
+    assert mem[cand_w] == mem[free_w] == table + 1 * BW
+    assert mem[dist_w] == 3
+    assert mem[status] == 4
+    assert mem[done] == 77
+    assert refs.vacate.wq == ctl.index
+
+
+def test_displace_move_vacate_cas_guards_raced_mover():
+    """The vacate CAS re-reads its comparand from the bucket — if the
+    resident changed under us the CAS must lose rather than clobber.
+    (Single-writer serialization makes this unreachable in the store;
+    the construct still guards it.)"""
+    V, BW = 1, 3
+    p = assembler.Program(512)
+    status = p.word(0)
+    vals = p.alloc(2 * V, [5, 0])
+    table = p.alloc(2 * BW, [9, 0, vals, 0, 1, vals + 1])
+    zeros = p.alloc(V, [0])
+    cand_w = p.word(table)
+    free_w = p.word(table + BW)
+    dist_w = p.word(4)
+    nxt = p.add_wq(1, managed=True, ordering=isa.ORD_DOORBELL,
+                   initial_enable=0)
+    nxt.noop()
+    ctl = p.add_wq(24, managed=True, ordering=isa.ORD_DOORBELL,
+                   initial_enable=99)
+    constructs.emit_displace_move(
+        ctl, cand_w=cand_w, free_w=free_w, dist_w=dist_w, back=1,
+        val_len=V, zeros=zeros, status_addr=status, status_val=4,
+        next_wq=nxt.index, next_upto=1)
+    # sabotage: swap the resident key after build, before execution —
+    # the comparand re-read makes the CAS observe the *new* key, so the
+    # vacate still applies to what it read; emulate a racing writer by
+    # changing the key between the comparand READ and the CAS instead:
+    # overwrite the CAS's patched comparand post-hoc via a stale opa.
+    spec, st0 = p.finalize()
+    # run up to just after the comparand READ (12 WRs), then mutate
+    s = st0
+    for _ in range(13):
+        s = machine.step(spec, s)
+    s = s._replace(mem=s.mem.at[table].set(777))    # racing writer
+    out = machine.run(spec, s, 128)
+    mem = np.asarray(out.mem)
+    # the CAS compared the *old* key against the new resident: no vacate
+    assert mem[table] == 777
+
+
+def test_enable_branch_rejects_id_mask_threshold():
+    """threshold+1 must stay inside the 24-bit id space: at ID_MASK the
+    packed else-comparand would wrap to 0 and BOTH arms could convert."""
+    p = assembler.Program(512)
+    mod = p.add_wq(2, managed=True, ordering=isa.ORD_DOORBELL,
+                   initial_enable=0)
+    ctl = p.add_wq(10, managed=True, ordering=isa.ORD_DOORBELL,
+                   initial_enable=99)
+    with pytest.raises(ValueError, match="threshold"):
+        constructs.emit_enable_branch(
+            ctl, mod, threshold=isa.ID_MASK, then_wq=0, then_upto=1,
+            else_wq=0, else_upto=1, load=lambda a, b: None)

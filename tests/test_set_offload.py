@@ -18,14 +18,8 @@ NB = 64
 def _keys_with_home(bucket, count, n_buckets=NB, start=1, n_shards=None):
     """Brute-force 24-bit keys whose home bucket is `bucket` (optionally
     pinned to shard 0, for service-level displacement scenarios)."""
-    out, k = [], start
-    while len(out) < count:
-        if (int(hopscotch.bucket_of(k, n_buckets)) == bucket
-                and (n_shards is None
-                     or int(store.shard_of(k, n_shards)) == 0)):
-            out.append(k)
-        k += 1
-    return out
+    return store.keys_homed_at(bucket, count, n_buckets, start=start,
+                               n_shards=n_shards)
 
 
 def test_set_status_codes_match_across_layers():
@@ -231,33 +225,39 @@ def test_sharded_set_capacity_drops_are_not_acks(mesh_kv):
     np.testing.assert_array_equal(np.asarray(f), ok)
 
 
-# --- §5.6: the service-level displacement slow path ---------------------------
+# --- §5.6: displacement is chain-served too (no host role left) ---------------
 
-def test_service_displacement_syncs_from_device_and_pushes_rows():
-    """A neighborhood-full insert escalates to the host: the driver syncs
-    its table *from* the authoritative device arrays, bubbles, and pushes
-    per-row updates back — afterwards every key (including the displaced
-    one) is served by the chain get path."""
+def test_service_displacement_serves_with_driver_dead():
+    """The acceptance scenario: a neighborhood-full insert — the one SET
+    path that used to fall back to the host — completes through the
+    displacer chain with the driver crashed, and every key (including
+    the displaced one) is served by the chain get path afterwards."""
     nb, home = 128, 40
     staggered = [_keys_with_home((home + d) % nb, 1, n_buckets=nb,
                                  start=200 + 97 * d, n_shards=1)[0]
                  for d in range(8)]
     svc = failure.ShardedKVService.start(
         [(k, [k % 7, k % 11]) for k in staggered])
-    # overwrite one value through the chain so the host copy is stale —
-    # the slow path must pick the *device* truth up, not the seed tables
+    # overwrite one value through the chain so any stale host copy would
+    # be caught: displacement must move the *device* truth around
     assert svc.set(staggered[2], [42, 43])
     z = _keys_with_home(home, 1, n_buckets=nb, start=50000, n_shards=1)[0]
     svc.crash_host()
-    with pytest.raises(RuntimeError, match="displacement"):
-        svc.set(z, [9, 9])
-    svc.restart_host()
-    assert svc.set(z, [9, 9])
+    assert not svc.host_alive()
+    assert svc.set(z, [9, 9])          # displacement, host driver dead
     r = svc.get_many(np.asarray(staggered + [z], np.int32))
     assert np.asarray(r.found[0]).all()
     want = [[k % 7, k % 11] for k in staggered] + [[9, 9]]
     want[2] = [42, 43]
     np.testing.assert_array_equal(np.asarray(r.values[0]), want)
+    # bit-exact with the bounded host oracle replayed over the same story
+    ref = hopscotch.make_table(nb, 2, neighborhood=8)
+    for k in staggered:
+        assert ref.set_full(k, [k % 7, k % 11]) == hopscotch.SET_INSERTED
+    assert ref.set_full(staggered[2], [42, 43]) == hopscotch.SET_UPDATED
+    assert ref.set_full(z, [9, 9]) == hopscotch.SET_DISPLACED
+    np.testing.assert_array_equal(np.asarray(svc.keys[0]), ref.keys)
+    np.testing.assert_array_equal(np.asarray(svc.vals[0]), ref.values)
 
 
 def test_service_set_many_batched(mesh_kv):

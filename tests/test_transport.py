@@ -177,3 +177,40 @@ def test_triggered_chain_stateful_serializes_and_threads_carry():
     # dropped rows: zeroed response, and their payloads never reached step
     assert (np.asarray(resp)[cap:] == 0).all()
     assert int(carry[0]) == np.arange(1, cap + 1).sum()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_escalation_subset_never_drops(data):
+    """Two-stage dispatch (the SET path's displacement escalation): any
+    subset of stage-1's admitted rows, re-ranked at the same capacity,
+    stays within capacity — the escalation stage cannot introduce new
+    drops, so stage-2 `ok` covers every escalated row."""
+    n = data.draw(st.integers(1, 40))
+    cap = data.draw(st.integers(1, 8))
+    dests = jnp.asarray(
+        data.draw(st.lists(st.integers(0, 3), min_size=n, max_size=n)),
+        jnp.int32)
+    live1 = jnp.asarray(
+        data.draw(st.lists(st.booleans(), min_size=n, max_size=n)))
+    ok1 = (transport.rank_within_dest(dests, live1) < cap) & live1
+    subset = jnp.asarray(
+        data.draw(st.lists(st.booleans(), min_size=n, max_size=n)))
+    live2 = ok1 & subset
+    pos2 = transport.rank_within_dest(dests, live2)
+    ok2 = (pos2 < cap) & live2
+    np.testing.assert_array_equal(np.asarray(ok2), np.asarray(live2))
+
+
+def test_escalation_subset_never_drops_deterministic():
+    """Seeded sweep of the same invariant (runs without hypothesis)."""
+    rng = np.random.RandomState(11)
+    for _ in range(50):
+        n = rng.randint(1, 40)
+        cap = rng.randint(1, 8)
+        dests = jnp.asarray(rng.randint(0, 4, size=n), jnp.int32)
+        live1 = jnp.asarray(rng.rand(n) < 0.7)
+        ok1 = (transport.rank_within_dest(dests, live1) < cap) & live1
+        live2 = ok1 & jnp.asarray(rng.rand(n) < 0.5)
+        ok2 = (transport.rank_within_dest(dests, live2) < cap) & live2
+        np.testing.assert_array_equal(np.asarray(ok2), np.asarray(live2))
