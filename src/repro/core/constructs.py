@@ -290,6 +290,51 @@ def emit_displace_move(ctl: WQBuilder, *, cand_w: int, free_w: int,
     return DisplaceMoveRefs(value_copy=value_copy, key_move=key_move,
                             vacate=vacate, zero_row=zero_row)
 
+# ---------------------------------------------------------------------------
+# bucket-vacate: retire a bucket held in a carry word (the migrator's tail)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BucketVacateRefs:
+    vacate: WRRef        # the CAS that retires the bucket: key -> EMPTY
+    zero_row: WRRef      # zeroes the bucket's (now stale) value row
+
+
+def emit_bucket_vacate(ctl: WQBuilder, *, bucket_w: int, val_len: int,
+                       zeros: int, empty_key: int = 0,
+                       tag: str = "vac") -> BucketVacateRefs:
+    """Release the bucket whose address sits in ``mem[bucket_w]``.
+
+    The tail half of :func:`emit_displace_move`, factored for chains that
+    vacate a bucket *without* first copying it anywhere (the table-growth
+    migrator: once a key is safe in the new frame — claimed there, or
+    found already present — the source bucket is simply retired).  Same
+    discipline as the move: the vacate CAS's comparand is re-read from
+    the bucket itself (a raced occupant loses the CAS rather than being
+    clobbered), and the stale value row is zeroed *after* the key is gone
+    through the row's own ``val_ptr`` (``[bucket+2]``, the shared
+    ``[key, pad, val_ptr]`` layout) so a later claimant of the slot can
+    never read the retired value.  ``ctl`` must be doorbell-ordered.
+    Budget: 6C + 2A over 8 WRs — 4 WRITEs + 2 READs (patches counted as
+    copies), the vacate CAS, and the val_ptr-offset ADD.
+    """
+    # key retire: CAS key -> EMPTY, comparand re-read from the bucket
+    ctl.write(src=bucket_w, dst=ctl.future_wr_addr(1, "src"),
+              tag=f"{tag}.p_rk")
+    ctl.read(src=0, dst=ctl.future_wr_addr(2, "opa"), ln=1, tag=f"{tag}.rk")
+    ctl.write(src=bucket_w, dst=ctl.future_wr_addr(1, "dst"),
+              tag=f"{tag}.p_vac")
+    vacate = ctl.cas(dst=0, old=0, new=empty_key, tag=f"{tag}.vacate")
+
+    # stale value row: val_ptr derived from the bucket row, then zeroed
+    ctl.write(src=bucket_w, dst=ctl.future_wr_addr(2, "src"),
+              tag=f"{tag}.p_vp")
+    ctl.add(dst=ctl.future_wr_addr(1, "src"), addend=2, tag=f"{tag}.o_vp")
+    ctl.read(src=0, dst=ctl.future_wr_addr(1, "dst"), ln=1, tag=f"{tag}.vp")
+    zero_row = ctl.write(src=zeros, dst=0, ln=val_len, tag=f"{tag}.zero")
+    return BucketVacateRefs(vacate=vacate, zero_row=zero_row)
+
+
 @dataclasses.dataclass
 class WhileRefs:
     cond_wrs: List[WRRef]          # C_i per iteration (+ tail slot if break)

@@ -15,6 +15,11 @@
   CAS-claiming *set*, and the bounded hopscotch displacement bubble as
   per-shard chain programs over the same hopscotch layout (the device
   arrays are the store's source of truth; no SET path touches the host).
+* :class:`HopscotchShardMigrator` — online table growth (§5.6 "resize
+  while serving"): one source bucket per lap re-homed into a doubled
+  frame — Calc-verb select on the new mask bit, match-discard for
+  double-residency transients, CAS-claim + cross-frame value copy, and
+  a vacate of the source bucket; maintenance is an offload too.
 * :class:`ListTraversalOffload` — Fig. 12's linked-list walk, unrolled, with
   the optional Fig. 6-style break.
 * :func:`build_recycled_get_server` — a §3.4 WQ-recycled *get* server: the
@@ -53,6 +58,13 @@ SET_INSERTED = 2             # EMPTY bucket CAS-claimed, key + value written
 SET_NEEDS_DISPLACEMENT = 3   # neighborhood full: displacer chain required
 SET_DISPLACED = 4            # displacer bubbled a slot home and claimed it
 SET_NEEDS_RESIZE = 5         # bounded search/bubble failed: resize required
+
+# migration outcome codes reported by the table-growth migrator chain
+# (also mirrored in repro.kvstore.hopscotch; disjoint from the SET codes
+# so a mixed trace can never alias a migration with a write)
+MIG_MOVED = 6                # source bucket re-homed into the new frame
+MIG_DISCARDED = 7            # key already in the new frame: stale copy dropped
+MIG_NEEDS_DISPLACE = 8       # new-frame neighborhood full: displacer needed
 
 # the hopscotch home-bucket hash, array form — numerically identical to
 # repro.kvstore.hopscotch.bucket_of (core must not import kvstore; the
@@ -1106,6 +1118,417 @@ def build_hopscotch_displacer(n_buckets: int, val_len: int,
         val_len=val_len, neighborhood=neighborhood, table_base=table,
         values_base=values, resp_region=resp, recv_wq=rq.index,
         max_search=max_search, max_moves=max_moves)
+
+
+# ---------------------------------------------------------------------------
+# §5.6 extension — the table-growth MIGRATOR: online resize as a chain
+# ---------------------------------------------------------------------------
+
+def _mig_templates(p: Program, resp: int, status_default: int,
+                   enable_wq: int, enable_upto: int):
+    """16-word migrator template (two event WRs): a suppressed
+    ``[status, bucket_addr]`` response WRITE and a suppressed **ENABLE**
+    releasing the vacate path.  The ENABLE-as-event is what lets one
+    Fig.-6 conversion both answer and hand control to the retirement WQ
+    without a third event slot (a 3-WR template would exceed the one-WRITE
+    ``MAX_COPY`` budget)."""
+    stage = p.alloc(2, [status_default, 0])
+    tmpl = p.alloc(2 * isa.WR_WORDS, [
+        isa.pack_ctrl(isa.WRITE, 0), isa.FLAG_SUPPRESS_COMPLETION,
+        stage, resp, 2, 0, 0, -1,
+        isa.pack_ctrl(isa.ENABLE, 0), isa.FLAG_SUPPRESS_COMPLETION,
+        -1, -1, 1, enable_upto, enable_wq, -1])
+    return tmpl, stage
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class HopscotchShardMigrator:
+    """One lap of online table growth (§5.6 "resize *while* serving").
+
+    The store grows by migrating one **source bucket** per request from
+    the old ``n``-bucket frame into a doubled ``2n``-bucket frame that
+    serves concurrently (the double-frame mode in ``kvstore.store``).
+    The chain per lap:
+
+    * **select** — the new home under the doubled geometry is
+      ``h_old + sel * n`` where ``sel`` is the next hash bit the wider
+      mask exposes (``n`` must be a power of two).  The client scatters
+      ``sel`` and the *lower-half* probe base; a Calc-verb branch
+      (:func:`repro.core.constructs.emit_enable_branch` on ``sel``)
+      either releases the probes directly or first ADDs ``n`` buckets to
+      the base — the mask recompute, in verbs.
+    * **match** — H parallel probe pairs test the new-frame neighborhood
+      for the key.  A hit means the key was re-written into the new
+      frame while this stale copy still sat in the old frame (the
+      double-frame SET routes writes by watermark): the conversion lands
+      ``[MIG_DISCARDED, addr]`` and releases the **vacate** WQ directly —
+      the old copy is dropped, the newer value wins.  Missing event
+      completions starve the claim phase.
+    * **claim** — gated on an all-miss match, sequential
+      :func:`~repro.core.constructs.emit_cas_claim` probes CAS the first
+      EMPTY new-frame bucket ``EMPTY -> key``; the winning conversion
+      lands ``[MIG_MOVED, addr]`` and releases the per-probe **copy** WQ,
+      whose WRITE moves the old value row across frames (src/dst both
+      patched from the frames' val_ptrs) before releasing the vacate.
+    * **vacate** — :func:`~repro.core.constructs.emit_bucket_vacate` on
+      the source bucket: CAS ``key -> EMPTY`` (comparand re-read), stale
+      value row zeroed.  Runs only after the key is safe in the new
+      frame, so a concurrent double-frame get always finds the key in at
+      least one frame.
+
+    A full new-frame neighborhood quiesces with the pre-set default
+    ``[MIG_NEEDS_DISPLACE, 0]`` and the source bucket untouched — the
+    caller escalates through the new frame's displacer chain.  The new
+    frame is mirrored unwrapped (``2n + H - 1`` rows) exactly like the
+    displacer's frame, and :meth:`commit` folds it back by per-word diff.
+    """
+    prog: Program
+    spec: machine.MachineSpec
+    state0: machine.VMState
+    n_buckets: int             # OLD frame size n; the new frame holds 2n
+    val_len: int
+    neighborhood: int
+    old_table_base: int
+    old_values_base: int
+    new_table_base: int
+    new_values_base: int
+    resp_region: int
+    recv_wq: int
+
+    resp_words = 2             # [status, bucket addr]
+
+    @property
+    def engine(self) -> ChainEngine:
+        return ChainEngine.for_spec(self.spec)
+
+    @property
+    def fuel(self) -> int:
+        """Exact step budget (no WQ recycles; see
+        :attr:`HopscotchShardWriter.fuel`)."""
+        return int(np.asarray(self.state0.tail).sum()) + 1
+
+    def device_state(self, old_keys: jnp.ndarray, old_vals: jnp.ndarray,
+                     new_keys: jnp.ndarray,
+                     new_vals: jnp.ndarray) -> machine.VMState:
+        """Image with both frames scattered in (new frame unwrapped:
+        rows ``r >= 2n`` mirror ``r - 2n``).  Pure jnp — works on traced
+        arrays inside ``shard_map``/``scan``."""
+        n, h, v = self.n_buckets, self.neighborhood, self.val_len
+        ext = 2 * n + h - 1
+        mem = self.state0.mem
+
+        rows_o = jnp.arange(n, dtype=jnp.int32)
+        mem = mem.at[self.old_table_base + rows_o * BUCKET_WORDS].set(
+            old_keys.astype(jnp.int32))
+        oidx = (self.old_values_base + rows_o[:, None] * v
+                + jnp.arange(v, dtype=jnp.int32)[None, :])
+        mem = mem.at[oidx.reshape(-1)].set(
+            old_vals.astype(jnp.int32).reshape(-1))
+
+        rows_n = jnp.arange(ext, dtype=jnp.int32)
+        src = rows_n % (2 * n)
+        mem = mem.at[self.new_table_base + rows_n * BUCKET_WORDS].set(
+            new_keys.astype(jnp.int32)[src])
+        nidx = (self.new_values_base + rows_n[:, None] * v
+                + jnp.arange(v, dtype=jnp.int32)[None, :])
+        mem = mem.at[nidx.reshape(-1)].set(
+            new_vals.astype(jnp.int32)[src].reshape(-1))
+        return self.state0._replace(mem=mem)
+
+    def device_payloads(self, buckets: jnp.ndarray,
+                        old_keys: jnp.ndarray) -> jnp.ndarray:
+        """Request assembly: ``[key, sel, old_addr, lo_base]`` per source
+        bucket.  ``buckets``: (B,) int32 source-bucket indices;
+        ``old_keys``: the shard's (n,) old-frame key column.  The client
+        computes the hash (as everywhere) and sends the *select bit* the
+        doubled mask exposes plus the lower-half probe base; the chain
+        recomputes the actual home by branching on ``sel``.  Rows whose
+        source bucket is EMPTY are zeroed — inert padding."""
+        n = self.n_buckets
+        shift = n.bit_length() - 1
+        k = old_keys.astype(jnp.int32)[buckets]
+        live = k != EMPTY_KEY
+        h_old = bucket_home(k, n)
+        ku = k.astype(jnp.uint32) * jnp.uint32(_HASH_MULT)
+        sel = ((ku >> shift) & jnp.uint32(1)).astype(jnp.int32)
+        old_addr = (self.old_table_base
+                    + buckets.astype(jnp.int32) * BUCKET_WORDS)
+        lo = self.new_table_base + h_old * BUCKET_WORDS
+        pay = jnp.stack([k, sel, old_addr, lo], axis=1)
+        return pay * live[:, None].astype(pay.dtype)
+
+    def commit(self, out_mem: jnp.ndarray, payload: jnp.ndarray,
+               old_keys: jnp.ndarray, old_vals: jnp.ndarray,
+               new_keys: jnp.ndarray, new_vals: jnp.ndarray):
+        """Fold one quiesced lap back into both frames.
+
+        Old frame rows are read straight off the image (the lap touches
+        only the source bucket); the new frame folds by per-word diff
+        with the mirror merge (a claim may land on an unwrapped row).
+        Nothing commits unless the status is MOVED/DISCARDED — a
+        NEEDS_DISPLACE lap (or a zero-padded slot) leaves both frames
+        bit-identical.  Returns ``(status, old_keys, old_vals, new_keys,
+        new_vals)``."""
+        n, h, v = self.n_buckets, self.neighborhood, self.val_len
+        status = out_mem[self.resp_region]
+        applied = ((payload[0] != EMPTY_KEY)
+                   & ((status == MIG_MOVED) | (status == MIG_DISCARDED)))
+
+        rows_o = jnp.arange(n, dtype=jnp.int32)
+        img_ko = out_mem[self.old_table_base + rows_o * BUCKET_WORDS]
+        cols = jnp.arange(v, dtype=jnp.int32)[None, :]
+        img_vo = out_mem[self.old_values_base + rows_o[:, None] * v + cols]
+
+        rows_n = jnp.arange(2 * n, dtype=jnp.int32)
+        mir = jnp.arange(h - 1, dtype=jnp.int32)
+        base_kn = new_keys.astype(jnp.int32)
+        img_kn = out_mem[self.new_table_base + rows_n * BUCKET_WORDS]
+        mir_kn = out_mem[self.new_table_base + (2 * n + mir) * BUCKET_WORDS]
+        merged_kn = base_kn.at[:h - 1].set(
+            jnp.where(mir_kn != base_kn[:h - 1], mir_kn, base_kn[:h - 1]))
+        new_kn = jnp.where(img_kn != base_kn, img_kn, merged_kn)
+
+        base_vn = new_vals.astype(jnp.int32)
+        img_vn = out_mem[self.new_values_base + rows_n[:, None] * v + cols]
+        mir_vn = out_mem[self.new_values_base + (2 * n + mir)[:, None] * v
+                         + cols]
+        merged_vn = base_vn.at[:h - 1].set(
+            jnp.where(mir_vn != base_vn[:h - 1], mir_vn,
+                      base_vn[:h - 1]))
+        new_vn = jnp.where(img_vn != base_vn, img_vn, merged_vn)
+
+        old_keys_out = jnp.where(applied, img_ko,
+                                 old_keys.astype(jnp.int32))
+        old_vals_out = jnp.where(applied, img_vo,
+                                 old_vals.astype(jnp.int32))
+        new_keys_out = jnp.where(applied, new_kn, base_kn)
+        new_vals_out = jnp.where(applied, new_vn, base_vn)
+        return (jnp.where(payload[0] == EMPTY_KEY, 0, status),
+                old_keys_out.astype(old_keys.dtype),
+                old_vals_out.astype(old_vals.dtype),
+                new_keys_out.astype(new_keys.dtype),
+                new_vals_out.astype(new_vals.dtype))
+
+    def run_one(self, old_keys: jnp.ndarray, old_vals: jnp.ndarray,
+                new_keys: jnp.ndarray, new_vals: jnp.ndarray,
+                payload: jnp.ndarray, max_steps: int = 2048):
+        """One migration lap: build the double-frame image, deliver the
+        trigger, run to quiescence, commit.  Returns ``(status,
+        old_keys, old_vals, new_keys, new_vals)``."""
+        st = machine.deliver(
+            self.device_state(old_keys, old_vals, new_keys, new_vals),
+            self.recv_wq, payload)
+        out = self.engine.run(st, max_steps)
+        return self.commit(out.mem, payload, old_keys, old_vals,
+                           new_keys, new_vals)
+
+
+@functools.lru_cache(maxsize=None)
+def build_hopscotch_migrator(n_buckets: int, val_len: int,
+                             neighborhood: int = 8
+                             ) -> HopscotchShardMigrator:
+    """Build (and cache per geometry) the per-shard table-growth chain.
+
+    ``n_buckets`` is the OLD frame size and must be a power of two — the
+    doubled geometry's home recompute is "one more mask bit", which is
+    what the in-chain select branch implements.
+    """
+    h = neighborhood
+    if h < 1:
+        raise ValueError("neighborhood must be >= 1")
+    if n_buckets < 1 or (n_buckets & (n_buckets - 1)):
+        raise ValueError(
+            f"resize needs a power-of-two bucket count (the doubled "
+            f"mask exposes exactly one more hash bit), got {n_buckets}")
+    if val_len > isa.MAX_COPY:
+        raise ValueError(
+            f"val_len {val_len} exceeds the one-WRITE row copy budget")
+    n = n_buckets
+    ext = 2 * n + h - 1
+
+    # exact image sizing (code slots + data words)
+    SELDRV, SELMOD = 11 + h, 2
+    GOLO, GOHI = h, h + 1
+    MDRV, MEXE, MMOD = 5, 3, 3
+    CDRV, CEXE, CMOD = 7 * h, 4 * h, 3 * h
+    VCLAIM, VMATCH = 2, 8
+    # null-guard: a zero-padded slot probes [0, (h-1)*BW + key] and its
+    # ghost vacate reads [0..2] and zero-writes val_len words at ptr 0
+    guard_slots = max(2, -(-((h - 1) * BUCKET_WORDS + 3) // isa.WR_WORDS),
+                      -(-val_len // isa.WR_WORDS))
+    wq_slots = (guard_slots + 2 + SELDRV + SELMOD + GOLO + GOHI
+                + h * (MDRV + MEXE + MMOD) + CDRV + CEXE + CMOD
+                + h * VCLAIM + VMATCH)
+    data_words = (2 + 5 + val_len                    # resp, words, zeros
+                  + n * (val_len + BUCKET_WORDS)     # old frame
+                  + ext * (val_len + BUCKET_WORDS)   # new frame (mirrored)
+                  + 2 * h * 18                       # match+claim templates
+                  + 1 + 4)                           # scatter table
+    mem_words = -(-(wq_slots * isa.WR_WORDS + data_words + 32) // 128) * 128
+
+    p = Program(mem_words)
+    guard = p.add_wq(guard_slots)          # WQ0: the padding null region
+
+    resp = p.alloc(2, [MIG_NEEDS_DISPLACE, 0], "resp")
+    key_w = p.word(0, "key")
+    sel_w = p.word(0, "sel")               # the doubled mask's new bit
+    old_addr_w = p.word(0, "old_addr")     # source bucket (old frame)
+    base_w = p.word(0, "base")             # probe base (new frame, lo half)
+    vptr_w = p.word(0, "vptr")             # source bucket's value row
+    zeros_v = p.alloc(val_len, [0] * val_len, "zeros")
+
+    values_old = p.alloc(n * val_len, name="values_old")
+    tbl_o = [0] * (n * BUCKET_WORDS)
+    for b in range(n):
+        tbl_o[b * BUCKET_WORDS + 2] = values_old + b * val_len
+    table_old = p.alloc(n * BUCKET_WORDS, tbl_o, "table_old")
+    values_new = p.alloc(ext * val_len, name="values_new")
+    tbl_n = [0] * (ext * BUCKET_WORDS)
+    for b in range(ext):
+        tbl_n[b * BUCKET_WORDS + 2] = values_new + b * val_len
+    table_new = p.alloc(ext * BUCKET_WORDS, tbl_n, "table_new")
+
+    rq = p.add_wq(2)
+
+    # --- control-flow WQs up front (templates/branches name successors) ---
+    seldrv = p.add_wq(SELDRV, ordering=isa.ORD_DOORBELL, managed=True)
+    selmod = p.add_wq(SELMOD, ordering=isa.ORD_DOORBELL, managed=True,
+                      initial_enable=0)
+    golo = p.add_wq(GOLO, ordering=isa.ORD_DOORBELL, managed=True,
+                    initial_enable=0)
+    gohi = p.add_wq(GOHI, ordering=isa.ORD_DOORBELL, managed=True,
+                    initial_enable=0)
+    vmatch = p.add_wq(VMATCH, ordering=isa.ORD_DOORBELL, managed=True,
+                      initial_enable=0)
+    vclaim = [p.add_wq(VCLAIM, ordering=isa.ORD_DOORBELL, managed=True,
+                       initial_enable=0) for _ in range(h)]
+
+    # --- vacate: retire the source bucket once the key is safe -----------
+    constructs.emit_bucket_vacate(vmatch, bucket_w=old_addr_w,
+                                  val_len=val_len, zeros=zeros_v,
+                                  empty_key=EMPTY_KEY, tag="mg.vac")
+
+    # --- per-probe cross-frame value copy (claim path only) --------------
+    vclaim_wrs = []
+    for pi in range(h):
+        vw = vclaim[pi].write(src=0, dst=0, ln=val_len, tag=f"mg.vcp{pi}")
+        vclaim[pi].enable(vmatch, upto=vmatch.n_posted, tag=f"mg.vgo{pi}")
+        vclaim_wrs.append(vw)
+
+    # --- match phase: H parallel probe pairs against the new frame -------
+    rd1s, m_mods, m_drvs = [], [], []
+    for pi in range(h):
+        m_tmpl, m_stage = _mig_templates(p, resp, MIG_DISCARDED,
+                                         vmatch.index, vmatch.n_posted)
+        mmod = p.add_wq(MMOD, ordering=isa.ORD_DOORBELL, managed=True,
+                        initial_enable=0)
+        mdrv = p.add_wq(MDRV, ordering=isa.ORD_DOORBELL, managed=True,
+                        initial_enable=0)
+        mexe = p.add_wq(MEXE, ordering=isa.ORD_DOORBELL, managed=True,
+                        initial_enable=3)
+
+        c_i = mmod.post(isa.NOOP, src=m_tmpl,
+                        dst=mmod.future_wr_addr(1, "ctrl"),
+                        ln=2 * isa.WR_WORDS, tag=f"mg.mc{pi}")
+        mmod.post(isa.NOOP, tag=f"mg.me{pi}")     # event: response slot
+        mmod.post(isa.NOOP, tag=f"mg.mf{pi}")     # event: ENABLE(vacate)
+
+        mdrv.write(src=base_w, dst=mdrv.future_wr_addr(2, "src"),
+                   tag=f"mg.mb{pi}")              # probe addr <- base + d*BW
+        mdrv.add(dst=mdrv.future_wr_addr(1, "src"),
+                 addend=pi * BUCKET_WORDS, tag=f"mg.mo{pi}")
+        rd1 = mdrv.read(src=0, dst=c_i.ctrl_addr, ln=1, tag=f"mg.mr{pi}")
+        mdrv.write(src=key_w, dst=mexe.future_wr_addr(1, "opa"),
+                   tag=f"mg.mk{pi}")              # CAS comparand <- key
+        last = mdrv.write(src=rd1.addr("src"), dst=m_stage + 1,
+                          tag=f"mg.ma{pi}")       # match addr -> response
+
+        mexe.wait(mdrv, last.completion_count, tag=f"mg.ms{pi}")
+        mexe.cas(dst=c_i.ctrl_addr, old=isa.pack_ctrl(isa.NOOP, 0),
+                 new=isa.pack_ctrl(isa.WRITE, 0), tag=f"mg.mx{pi}")
+        mexe.enable(mmod, upto=3, tag=f"mg.men{pi}")
+        rd1s.append(rd1)
+        m_mods.append(mmod)
+        m_drvs.append(mdrv)
+
+    # --- claim phase: sequential CAS-claims, gated on an all-miss match --
+    cdrv = p.add_wq(CDRV, ordering=isa.ORD_DOORBELL, managed=True)
+    cexe = p.add_wq(CEXE, ordering=isa.ORD_DOORBELL, managed=True)
+    cmod = p.add_wq(CMOD, ordering=isa.ORD_DOORBELL, managed=True,
+                    initial_enable=0)
+
+    claims = []
+    for pi in range(h):
+        cl_tmpl, cl_stage = _mig_templates(p, resp, MIG_MOVED,
+                                           vclaim[pi].index, VCLAIM)
+        if pi == 0:
+            cexe.wait(cdrv, CDRV, tag="mg.cgate")
+        else:
+            cexe.wait(cmod, 3 * pi, tag=f"mg.cseq{pi}")
+        refs = constructs.emit_cas_claim(
+            cexe, cmod, cell=0, expect=EMPTY_KEY, new=0, then_src=cl_tmpl,
+            then_dst=cmod.future_wr_addr(1, "ctrl"),
+            then_len=2 * isa.WR_WORDS)
+        cmod.post(isa.NOOP, tag=f"mg.ce{pi}")     # event: response slot
+        cmod.post(isa.NOOP, tag=f"mg.cf{pi}")     # event: ENABLE(copy)
+        cexe.enable(cmod, upto=3 * (pi + 1), tag=f"mg.cen{pi}")
+        claims.append((refs, cl_stage))
+    cexe.initial_enable = cexe.n_posted + 1
+
+    for pi in range(h):
+        cdrv.wait(m_mods[pi], 3, tag=f"mg.nomatch{pi}")
+    for pi, (refs, cl_stage) in enumerate(claims):
+        cdrv.write(src=rd1s[pi].addr("src"), dst=refs.cell_dst_addr,
+                   tag=f"mg.cdst{pi}")            # claim the probed bucket
+        cdrv.write(src=key_w, dst=refs.new_opb_addr,
+                   tag=f"mg.cnew{pi}")            # CAS new <- key
+        cdrv.write(src=rd1s[pi].addr("src"),
+                   dst=cdrv.future_wr_addr(2, "src"), tag=f"mg.cvp{pi}")
+        cdrv.add(dst=cdrv.future_wr_addr(1, "src"), addend=2,
+                 tag=f"mg.cvo{pi}")
+        cdrv.read(src=0, dst=vclaim_wrs[pi].addr("dst"), ln=1,
+                  tag=f"mg.cvr{pi}")              # claimed val_ptr -> copy dst
+        cdrv.write(src=rd1s[pi].addr("src"), dst=cl_stage + 1,
+                   tag=f"mg.caddr{pi}")           # claimed addr -> response
+    cdrv.initial_enable = cdrv.n_posted + 1
+
+    # --- select: the doubled mask's new bit, as a Calc-verb branch -------
+    seldrv.wait(rq, 1, tag="mg.trig")
+    # source value row -> every copy WR's src (the old row READ)
+    seldrv.write(src=old_addr_w, dst=seldrv.future_wr_addr(2, "src"),
+                 tag="mg.vp_p")
+    seldrv.add(dst=seldrv.future_wr_addr(1, "src"), addend=2, tag="mg.vp_o")
+    seldrv.read(src=0, dst=vptr_w, ln=1, tag="mg.vp")
+    for pi in range(h):
+        seldrv.write(src=vptr_w, dst=vclaim_wrs[pi].addr("src"),
+                     tag=f"mg.vsrc{pi}")
+
+    def load_sel(a_addr, b_addr):
+        seldrv.write(src=sel_w, dst=a_addr, tag="mg.s1")
+        seldrv.write(src=sel_w, dst=b_addr, tag="mg.s2")
+
+    constructs.emit_enable_branch(
+        seldrv, selmod, threshold=0,
+        then_wq=golo.index, then_upto=GOLO,
+        else_wq=gohi.index, else_upto=GOHI, load=load_sel, tag="mg.sel")
+    seldrv.initial_enable = seldrv.n_posted + 1
+
+    for pi in range(h):
+        golo.enable(m_drvs[pi], upto=MDRV + 1, tag=f"mg.lo{pi}")
+    gohi.add(dst=base_w, addend=n * BUCKET_WORDS, tag="mg.hi")
+    for pi in range(h):
+        gohi.enable(m_drvs[pi], upto=MDRV + 1, tag=f"mg.hi{pi}")
+
+    # RECV scatter: key, select bit, source bucket, lo probe base
+    tbl = p.scatter_table([key_w, sel_w, old_addr_w, base_w])
+    rq.recv(scatter_table=tbl, tag="mg.recv")
+
+    spec, st0 = p.finalize()
+    return HopscotchShardMigrator(
+        prog=p, spec=spec, state0=st0, n_buckets=n, val_len=val_len,
+        neighborhood=h, old_table_base=table_old,
+        old_values_base=values_old, new_table_base=table_new,
+        new_values_base=values_new, resp_region=resp, recv_wq=rq.index)
 
 
 # ---------------------------------------------------------------------------

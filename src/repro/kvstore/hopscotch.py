@@ -46,6 +46,12 @@ SET_NEEDS_DISPLACEMENT = 3   # neighborhood full: displacer chain required
 SET_DISPLACED = 4            # displacement bubbled a slot home and claimed it
 SET_NEEDS_RESIZE = 5         # bounded search/bubble failed: resize required
 
+# migration outcome codes reported by the table-growth migrator chain
+# (mirrored from repro.core.programs.MIG_*, cross-checked in tests)
+MIG_MOVED = 6                # source bucket re-homed into the new frame
+MIG_DISCARDED = 7            # key already in the new frame: stale copy dropped
+MIG_NEEDS_DISPLACE = 8       # new-frame neighborhood full: displacer needed
+
 # the displacer chain's bounds (mirrored defaults; the chain is unrolled
 # to exactly these, so the oracle must stop exactly where it does)
 DEFAULT_MAX_SEARCH = 16      # linear-probe window for the first EMPTY slot
@@ -178,6 +184,90 @@ class HopscotchTable:
         """
         return self.set_full(key, value, max_search,
                              max_moves) != SET_NEEDS_RESIZE
+
+    # -- host-side online-resize oracle ---------------------------------------
+    def migrate_bucket(self, new: "HopscotchTable", bucket: int) -> int:
+        """Re-home one source bucket into the doubled frame — the exact
+        semantics of one migrator-chain lap
+        (``repro.core.programs.build_hopscotch_migrator``).
+
+        If the key already sits in the new frame (it was re-written there
+        by the double-frame SET while this stale copy still lived here),
+        the source bucket is simply vacated (``MIG_DISCARDED`` — the
+        newer value wins); otherwise the first EMPTY bucket of the new
+        neighborhood is claimed and the value row moves across
+        (``MIG_MOVED``).  A full new neighborhood leaves *both* frames
+        untouched and reports ``MIG_NEEDS_DISPLACE`` (the caller
+        escalates through the new frame's displacer).  An EMPTY source
+        bucket is a no-op (status 0) — the serving path never even
+        dispatches those.
+        """
+        k = int(self.keys[bucket])
+        if k == EMPTY:
+            return 0
+        hn = int(bucket_of(k, new.n_buckets))
+        H, nn = new.neighborhood, new.n_buckets
+        for d in range(H):
+            i = (hn + d) % nn
+            if new.keys[i] == k:
+                self.keys[bucket] = EMPTY
+                self.values[bucket] = 0
+                return MIG_DISCARDED
+        for d in range(H):
+            i = (hn + d) % nn
+            if new.keys[i] == EMPTY:
+                new.keys[i] = k
+                new.values[i] = self.values[bucket]
+                self.keys[bucket] = EMPTY
+                self.values[bucket] = 0
+                return MIG_MOVED
+        return MIG_NEEDS_DISPLACE
+
+    def grow(self, max_search: int = DEFAULT_MAX_SEARCH,
+             max_moves: int = DEFAULT_MAX_MOVES,
+             step: int = 1) -> "HopscotchTable":
+        """Full-table growth oracle: drain this table into a doubled one.
+
+        Replays the incremental migration exactly as ``store.
+        sharded_resize`` drives it — source buckets in quanta of
+        ``step``, each bucket through :meth:`migrate_bucket`, and every
+        ``MIG_NEEDS_DISPLACE`` lap of a quantum escalated *after* that
+        quantum's sweep through the *bounded* :meth:`set_full` on the
+        new frame (the chain path scans first, then re-dispatches the
+        escalations through the displacer — the deferral is observable
+        when an escalation and a later lap contend for the same new
+        neighborhood, so the oracle must replay the same schedule;
+        plan-first: a failed escalation leaves both frames bit-identical
+        and raises, it never commits a partial move).  On return this
+        table is empty and the returned doubled table holds every entry.
+        Requires a power-of-two bucket count — the doubled geometry's
+        home recompute is one more mask bit.
+        """
+        n = self.n_buckets
+        if n < 1 or (n & (n - 1)):
+            raise ValueError(
+                f"resize needs a power-of-two bucket count, got {n}")
+        new = HopscotchTable(np.zeros(2 * n, np.int32),
+                             np.zeros((2 * n,) + self.values.shape[1:],
+                                      np.int32), self.neighborhood)
+        bounded_search = min(max(max_search, self.neighborhood), 2 * n)
+        for q0 in range(0, n, step):
+            pending = []
+            for b in range(q0, min(q0 + step, n)):
+                if self.migrate_bucket(new, b) == MIG_NEEDS_DISPLACE:
+                    pending.append(b)
+            for b in pending:
+                k = int(self.keys[b])
+                st2 = new.set_full(k, self.values[b].tolist(),
+                                   bounded_search, max_moves)
+                if st2 == SET_NEEDS_RESIZE:
+                    raise RuntimeError(
+                        f"growth escalation dead-ended on key {k} "
+                        f"(bucket {b}) — the doubled frame cannot "
+                        "place it within the bounded bubble")
+                self.keys[b] = EMPTY
+                self.values[b] = 0
+        return new
 
     def as_device(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
         return jnp.asarray(self.keys), jnp.asarray(self.values)

@@ -33,6 +33,15 @@ per-request ``ok`` mask says whether the response is authoritative: a
 request dropped at the transport's capacity limit, or deferred by the
 per-client admission stage (``sharded_get_isolated``), has ``ok=False``
 and must never be read as a key miss (or a failed set).
+
+The store also *grows* online (§5.6 "resize while serving"):
+:func:`begin_resize` opens a doubled frame, :func:`sharded_resize`
+drives the migrator chain (:func:`repro.core.programs.
+build_hopscotch_migrator`) in quanta, and the double-frame serving
+paths (:func:`sharded_get_migrating` / :func:`sharded_set_migrating`)
+keep every get and set authoritative mid-growth until
+:func:`finish_resize` cuts over — no request is dropped or misrouted by
+the migration, and none of it involves the host.
 """
 from __future__ import annotations
 
@@ -373,6 +382,34 @@ def sharded_get_isolated(mesh: Mesh, axis: str, keys: jnp.ndarray,
 # of truth; update, insert, and displacement all execute on-chain)
 # ---------------------------------------------------------------------------
 
+def _guarded_step(run_one, budget):
+    """Scan step that skips the chain VM entirely for the window's
+    zero-padded slots (key 0: capacity padding and non-dispatched
+    rows).  Per-slot lax.cond is safe here — the scan body contains
+    no collectives, unlike the dispatch/combine around it, so shards
+    may branch independently; batching the whole escalation stage
+    behind a global `any(live)` would put collectives under a cond.
+    A padded slot's run is a proven no-op (status 0, carry
+    unchanged), so skipping it is bit-identical and keeps
+    steady-state serving from paying a quiesce-run per dead slot.
+
+    Generic over the carry arity: ``run_one(*carry, payload, budget)
+    -> (status, *carry)`` — the writer/displacer thread ``(keys,
+    vals)``, the resize migrator threads both frames.
+    """
+    def live_slot(op):
+        return run_one(*op[:-1], op[-1], budget)
+
+    def dead_slot(op):
+        return (jnp.zeros((), jnp.int32),) + tuple(op[:-1])
+
+    def step(carry, pay):
+        out = jax.lax.cond(pay[0] != hopscotch.EMPTY, live_slot,
+                           dead_slot, tuple(carry) + (pay,))
+        return tuple(out[1:]), out[0][None]
+    return step
+
+
 class SetResult(NamedTuple):
     """Distributed set outcome.  ``status`` is authoritative only where
     ``ok`` is True (a False row was dropped/deferred, status 0); values:
@@ -416,31 +453,6 @@ def _writer_set_local(keys, vals, qk, qv, live, *, n_shards, capacity, axis,
                                              neighborhood)
     payload = writer.device_payloads(q, hopscotch.bucket_of(q, n_buckets),
                                      qv.reshape(-1, val_words))
-
-    def _guarded_step(run_one, budget):
-        """Scan step that skips the chain VM entirely for the window's
-        zero-padded slots (key 0: capacity padding and non-dispatched
-        rows).  Per-slot lax.cond is safe here — the scan body contains
-        no collectives, unlike the dispatch/combine around it, so shards
-        may branch independently; batching the whole escalation stage
-        behind a global `any(live)` would put collectives under a cond.
-        A padded slot's run is a proven no-op (status 0, carry
-        unchanged), so skipping it is bit-identical and keeps
-        steady-state serving from paying a quiesce-run per dead slot."""
-        def live_slot(op):
-            tk, tv, p = op
-            return run_one(tk, tv, p, budget)
-
-        def dead_slot(op):
-            tk, tv, p = op
-            return jnp.zeros((), jnp.int32), tk, tv
-
-        def step(carry, pay):
-            st, tk, tv = jax.lax.cond(
-                pay[0] != hopscotch.EMPTY, live_slot, dead_slot,
-                (carry[0], carry[1], pay))
-            return (tk, tv), st[None]
-        return step
 
     resp, ok, (nk, nv) = transport.triggered_chain_stateful(
         _guarded_step(writer.run_one, max_steps), (keys[0], vals[0]),
@@ -563,6 +575,464 @@ def _mapped_set(mesh: Mesh, axis: str, n_shards: int, capacity: int,
     spec = P(axis)
     fn = jax.jit(shard_map(
         body, mesh=mesh, in_specs=(spec,) * 5, out_specs=(spec,) * 6,
+        check_vma=False))
+    _MAPPED_CACHE[key] = fn
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# online resize (§5.6 extension): chain-assisted growth with double-frame
+# serving and a watermark cutover — gets and sets keep serving throughout
+# ---------------------------------------------------------------------------
+
+class ResizeState(NamedTuple):
+    """A store mid-growth: two frames serve at once.
+
+    ``keys``/``vals`` are the old ``(S, n)`` frame, ``new_keys``/
+    ``new_vals`` the doubled ``(S, 2n)`` frame, and ``watermark`` (S,)
+    counts migrated source buckets per shard: buckets ``[0, w)`` have
+    been drained into the new frame (their residents re-homed by the
+    migrator chain), buckets ``[w, n)`` still serve from the old frame.
+    Invariants the serving paths rely on:
+
+    * a key is *writable* in exactly one frame — SETs route by watermark
+      (:func:`sharded_set_migrating`), and the only transient double
+      residency (a key re-written into the new frame while its stale
+      copy awaits migration) is resolved by the migrator's match-discard
+      with the *new* frame winning;
+    * a key whose entire old neighborhood is behind the watermark cannot
+      be in the old frame, which is what gates the second get probe;
+    * old-frame claims never land behind the watermark (wrap-around
+      homes route to the new frame), so the watermark never has to
+      re-visit a bucket.
+    """
+    keys: jnp.ndarray        # (S, n)  old frame
+    vals: jnp.ndarray        # (S, n, V)
+    new_keys: jnp.ndarray    # (S, 2n) doubled frame
+    new_vals: jnp.ndarray    # (S, 2n, V)
+    watermark: jnp.ndarray   # (S,) int32 — buckets [0, w) migrated
+
+    @property
+    def n_buckets(self) -> int:
+        return int(self.keys.shape[1])
+
+
+class MigrateReport(NamedTuple):
+    """Per-shard outcome counts of one :func:`sharded_resize` quantum."""
+    moved: jnp.ndarray       # (S,) re-homed by the migrator chain
+    discarded: jnp.ndarray   # (S,) stale copies dropped (new frame won)
+    escalated: jnp.ndarray   # (S,) placed via the new-frame displacer
+    stuck: jnp.ndarray       # (S,) unplaceable even displaced (watermark
+    #                              parks on the first such bucket)
+
+
+def begin_resize(keys: jnp.ndarray, vals: jnp.ndarray) -> ResizeState:
+    """Open the doubled frame next to the live one (watermark 0).
+
+    The bucket count must be a power of two — growth exposes exactly one
+    more hash-mask bit, which is what the migrator chain's select branch
+    recomputes in verbs.
+    """
+    n = int(keys.shape[1])
+    if n < 1 or (n & (n - 1)):
+        raise ValueError(
+            f"resize needs a power-of-two bucket count, got {n}")
+    s = keys.shape[0]
+    return ResizeState(
+        keys=keys, vals=vals,
+        new_keys=jnp.zeros((s, 2 * n), keys.dtype),
+        new_vals=jnp.zeros((s, 2 * n, vals.shape[-1]), vals.dtype),
+        watermark=jnp.zeros((s,), jnp.int32))
+
+
+def resize_done(rs: ResizeState) -> bool:
+    """True once every shard's watermark has swept its whole old frame."""
+    return bool(np.asarray(rs.watermark).min() >= rs.n_buckets)
+
+
+def finish_resize(rs: ResizeState) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The cutover: adopt the doubled frame as *the* store.
+
+    Only legal once :func:`resize_done`; the old frame must be fully
+    drained (every bucket vacated by the migrator) — a resident left
+    behind would silently vanish from serving, so that is checked, not
+    assumed.
+    """
+    if not resize_done(rs):
+        raise ValueError(
+            f"resize incomplete: watermarks "
+            f"{np.asarray(rs.watermark).tolist()} < {rs.n_buckets}")
+    leftover = np.asarray(rs.keys)
+    if (leftover != hopscotch.EMPTY).any():
+        raise RuntimeError(
+            "old frame still holds residents after a full sweep — "
+            "migration lost track of a bucket")
+    return rs.new_keys, rs.new_vals
+
+
+def _resize_local(ok, ov, nk, nv, wm, *, step, neighborhood, val_words,
+                  max_search, max_moves):
+    """One owner-shard migration quantum (no collectives: the requests
+    originate at the shard that owns the buckets — a loopback QP, see
+    ``transport.local_chain_stateful``).
+
+    Scans ``step`` source buckets from the watermark through the
+    migrator chain; ``MIG_NEEDS_DISPLACE`` laps escalate through the
+    *new* frame's displacer chain (the same bounded bubble SET uses) and
+    their source buckets are vacated on success.  The watermark advances
+    past everything that resolved and parks on the first stuck bucket —
+    so the serving invariant "behind the watermark means not in the old
+    frame" survives even the (pathological) double-growth dead end.
+    """
+    n = ok.shape[1]
+    mig = programs.build_hopscotch_migrator(n, val_words, neighborhood)
+    w = wm[0]
+    buckets = w + jnp.arange(step, dtype=jnp.int32)
+    valid = buckets < n
+    b_safe = jnp.clip(buckets, 0, n - 1)
+    pay = mig.device_payloads(b_safe, ok[0])
+    pay = pay * valid[:, None].astype(pay.dtype)
+
+    resp, (tk, tv, gk, gv) = transport.local_chain_stateful(
+        _guarded_step(mig.run_one, mig.fuel),
+        (ok[0], ov[0], nk[0], nv[0]), pay)
+    st = resp[:, 0]
+
+    # --- escalation: the bounded bubble, on the doubled frame ------------
+    esc = valid & (st == programs.MIG_NEEDS_DISPLACE)
+    ms = min(max(max_search, neighborhood), 2 * n)
+    if neighborhood >= 2 and ms >= neighborhood:
+        disp = programs.build_hopscotch_displacer(
+            2 * n, val_words, neighborhood, ms, max_moves)
+        k_esc = tk[b_safe]
+        pay2 = disp.device_payloads(
+            k_esc, hopscotch.bucket_of(k_esc, 2 * n), tv[b_safe])
+        pay2 = pay2 * esc[:, None].astype(pay2.dtype)
+        resp2, (gk, gv) = transport.local_chain_stateful(
+            _guarded_step(disp.run_one, disp.fuel), (gk, gv), pay2)
+        st2 = resp2[:, 0]
+        placed = esc & ((st2 == programs.SET_INSERTED)
+                        | (st2 == programs.SET_DISPLACED)
+                        | (st2 == programs.SET_UPDATED))
+    else:
+        # degenerate geometry: no displacer can be built — every
+        # escalation is stuck (H=1 growth still serves; it just cannot
+        # bubble, same as the bounded oracle)
+        placed = jnp.zeros_like(esc)
+
+    # vacate the source buckets the displacer placed
+    tk = tk.at[b_safe].set(
+        jnp.where(placed, jnp.int32(hopscotch.EMPTY), tk[b_safe]))
+    tv = tv.at[b_safe].set(
+        jnp.where(placed[:, None], jnp.zeros_like(tv[b_safe]),
+                  tv[b_safe]))
+
+    stuck = esc & ~placed
+    first_stuck = jnp.min(jnp.where(stuck, buckets, n))
+    new_w = jnp.minimum(jnp.minimum(w + step, n), first_stuck)
+
+    def count(m):
+        return jnp.sum(m, dtype=jnp.int32).reshape(1)
+
+    return (tk[None], tv[None], gk[None], gv[None],
+            new_w.astype(jnp.int32).reshape(1),
+            count(st == programs.MIG_MOVED),
+            count(st == programs.MIG_DISCARDED), count(placed),
+            count(stuck))
+
+
+def sharded_resize(mesh: Mesh, axis: str, rs: ResizeState, step: int = 16,
+                   neighborhood: int = 8,
+                   max_search: int = hopscotch.DEFAULT_MAX_SEARCH,
+                   max_moves: int = hopscotch.DEFAULT_MAX_MOVES
+                   ) -> Tuple[ResizeState, MigrateReport]:
+    """Advance the migration by up to ``step`` source buckets per shard.
+
+    Every lap is a chain execution against device state (the migrator
+    program, plus the new frame's displacer for neighborhood-full
+    escalations) — the host contributes no lookup, so growth keeps
+    making progress with the driver dead, and gets/sets interleave
+    freely between quanta via :func:`sharded_get_migrating` /
+    :func:`sharded_set_migrating`.  Returns the advanced state and a
+    :class:`MigrateReport`.
+    """
+    mapped = _mapped_resize(mesh, axis, step, neighborhood,
+                            rs.vals.shape[-1], max_search, max_moves)
+    (tk, tv, gk, gv, wm, moved, disc, escd, stuck) = mapped(
+        rs.keys, rs.vals, rs.new_keys, rs.new_vals, rs.watermark)
+    return (ResizeState(tk, tv, gk, gv, wm),
+            MigrateReport(moved, disc, escd, stuck))
+
+
+def _mapped_resize(mesh: Mesh, axis: str, step: int, neighborhood: int,
+                   val_words: int, max_search: int, max_moves: int):
+    key = ("resize", _mesh_fingerprint(mesh), axis, step, neighborhood,
+           val_words, max_search, max_moves)
+    cached = _MAPPED_CACHE.get(key)
+    if cached is not None:
+        return cached
+    body = functools.partial(
+        _resize_local, step=step, neighborhood=neighborhood,
+        val_words=val_words, max_search=max_search, max_moves=max_moves)
+    spec = P(axis)
+    fn = jax.jit(shard_map(
+        body, mesh=mesh, in_specs=(spec,) * 5, out_specs=(spec,) * 9,
+        check_vma=False))
+    _MAPPED_CACHE[key] = fn
+    return fn
+
+
+def _mig_get_local(ok, ov, nk, nv, wm, queries, live, *, n_shards,
+                   capacity, axis, neighborhood, val_words):
+    """Double-frame get: probe the new frame, then — only where needed —
+    the old one.
+
+    Stage 1 is the ordinary redn chain server against the doubled frame.
+    Stage 2 re-dispatches the *misses* against the old frame, gated on
+    the owner's migration watermark (``lax.all_gather`` of the per-shard
+    watermarks — the client caches the servers' progress): a key whose
+    whole old neighborhood is already behind the watermark cannot be in
+    the old frame, so fully-migrated keys pay a single probe even
+    mid-resize.  Stage-2 lives are a subset of stage-1 admits, so the
+    second hop can never introduce drops.
+    """
+    q = queries.reshape(-1)
+    dest = shard_of(q, n_shards)
+    lv = live.reshape(-1)
+    n = ok.shape[1]
+
+    srv_new = programs.build_hopscotch_server(2 * n, val_words,
+                                              neighborhood)
+    st_new = srv_new.device_state(nk[0], nv[0])
+    pay_new = srv_new.device_payloads(q, hopscotch.bucket_of(q, 2 * n))
+    resp1, ok1 = transport.triggered_chain_engine(
+        srv_new.engine, st_new, srv_new.recv_wq, srv_new.resp_region,
+        srv_new.resp_words, pay_new, dest, n_shards, capacity, axis, lv)
+    found1 = resp1[:, 0] > 0
+
+    wms = jax.lax.all_gather(wm, axis).reshape(-1)      # (S,) watermarks
+    h_old = hopscotch.bucket_of(q, n)
+    owner_w = wms[dest]
+    mig_done = ((h_old + neighborhood <= owner_w)
+                & (h_old + neighborhood <= n))
+    live2 = lv & ok1 & ~found1 & ~mig_done
+
+    srv_old = programs.build_hopscotch_server(n, val_words, neighborhood)
+    st_old = srv_old.device_state(ok[0], ov[0])
+    pay_old = srv_old.device_payloads(q, h_old)
+    resp2, _ = transport.triggered_chain_engine(
+        srv_old.engine, st_old, srv_old.recv_wq, srv_old.resp_region,
+        srv_old.resp_words, pay_old, dest, n_shards, capacity, axis, live2)
+    found2 = resp2[:, 0] > 0
+
+    found = found1 | found2
+    vals = jnp.where(found1[:, None], resp1[:, 1:], resp2[:, 1:])
+    return found[None], vals[None], ok1[None]
+
+
+def sharded_get_migrating(mesh: Mesh, axis: str, rs: ResizeState,
+                          queries: jnp.ndarray, neighborhood: int = 8,
+                          capacity: Optional[int] = None,
+                          live: Optional[jnp.ndarray] = None) -> GetResult:
+    """Batched distributed get against a store mid-growth.
+
+    Same contract as :func:`sharded_get` (redn path), but served from
+    the double frame: new-then-old probes, the second gated per request
+    on the owner shard's migration watermark.  Bit-exact with "lookup
+    the new frame, else the old frame" on the oracle tables.
+    """
+    _check_key_batch(queries, what="query", allow_zero=True, live=live)
+    n_shards = mesh.shape[axis]
+    b_local = queries.shape[1]
+    capacity = b_local if capacity is None else capacity
+    if live is None:
+        live = jnp.ones(queries.shape, jnp.bool_)
+    if capacity == 0:
+        return GetResult(
+            found=jnp.zeros(queries.shape, jnp.bool_),
+            values=jnp.zeros(queries.shape + (rs.vals.shape[-1],),
+                             rs.vals.dtype),
+            ok=jnp.zeros(queries.shape, jnp.bool_),
+            dropped=jnp.sum(live, axis=1, dtype=jnp.int32),
+            deferred=jnp.sum(~live, axis=1, dtype=jnp.int32))
+    mapped = _mapped_mig_get(mesh, axis, n_shards, capacity, neighborhood,
+                             rs.vals.shape[-1])
+    return GetResult(*mapped(rs.keys, rs.vals, rs.new_keys, rs.new_vals,
+                             rs.watermark, queries, live))
+
+
+def _mapped_mig_get(mesh: Mesh, axis: str, n_shards: int, capacity: int,
+                    neighborhood: int, val_words: int):
+    key = ("mig_get", _mesh_fingerprint(mesh), axis, n_shards, capacity,
+           neighborhood, val_words)
+    cached = _MAPPED_CACHE.get(key)
+    if cached is not None:
+        return cached
+    path = functools.partial(
+        _mig_get_local, n_shards=n_shards, capacity=capacity, axis=axis,
+        neighborhood=neighborhood, val_words=val_words)
+
+    def body(ok, ov, nk, nv, wm, queries, live):
+        found, v, okk = path(ok, ov, nk, nv, wm, queries, live)
+        deferred = jnp.sum(~live, dtype=jnp.int32).reshape(1)
+        dropped = (jnp.sum(live, dtype=jnp.int32)
+                   - jnp.sum(okk, dtype=jnp.int32)).reshape(1)
+        return found, v, okk, dropped, deferred
+
+    spec = P(axis)
+    fn = jax.jit(shard_map(
+        body, mesh=mesh, in_specs=(spec,) * 7, out_specs=(spec,) * 5,
+        check_vma=False))
+    _MAPPED_CACHE[key] = fn
+    return fn
+
+
+def _mig_set_local(ok_, ov, nk, nv, wm, qk, qv, live, *, n_shards,
+                   capacity, axis, neighborhood, val_words, max_steps,
+                   max_search, max_moves):
+    """Watermark-routed double-frame SET (up to three chain stages).
+
+    Routing: a key whose old home bucket is behind the owner's watermark
+    — or whose old neighborhood would wrap past the frame end — writes
+    the **new** frame; everything else writes the **old** frame, where
+    claims provably land at or ahead of the watermark (no wrap, home >=
+    w), so a bucket is writable in exactly one frame at any instant.
+    Old-frame rows the writer answers ``SET_NEEDS_DISPLACEMENT``
+    escalate to the new-frame writer (the old frame never bubbles during
+    growth — the free space is all in the doubled frame), and new-frame
+    neighborhood-full rows escalate to the new frame's displacer,
+    exactly like the steady-state path.
+    """
+    q = qk.reshape(-1)
+    dest = shard_of(q, n_shards)
+    lv = live.reshape(-1)
+    n = ok_.shape[1]
+    h = neighborhood
+
+    wms = jax.lax.all_gather(wm, axis).reshape(-1)
+    owner_w = wms[dest]
+    h_old = hopscotch.bucket_of(q, n)
+    route_new = (h_old < owner_w) | (h_old + h > n)
+
+    # --- stage 1: old-frame writer (match/update or claim >= watermark) --
+    writer_old = programs.build_hopscotch_writer(n, val_words, h)
+    pay1 = writer_old.device_payloads(q, h_old,
+                                      qv.reshape(-1, val_words))
+    live1 = lv & ~route_new
+    resp1, ok1, (tk, tv) = transport.triggered_chain_stateful(
+        _guarded_step(writer_old.run_one, max_steps), (ok_[0], ov[0]),
+        pay1, dest, n_shards, capacity, axis, 1, live1)
+    st1 = resp1[:, 0]
+    esc1 = ok1 & (st1 == programs.SET_NEEDS_DISPLACEMENT)
+
+    # --- stage 2: new-frame writer (routed + escalated rows) -------------
+    writer_new = programs.build_hopscotch_writer(2 * n, val_words, h)
+    pay2 = writer_new.device_payloads(q, hopscotch.bucket_of(q, 2 * n),
+                                      qv.reshape(-1, val_words))
+    live2 = lv & (route_new | esc1)
+    resp2, ok2, (gk, gv) = transport.triggered_chain_stateful(
+        _guarded_step(writer_new.run_one, max_steps), (nk[0], nv[0]),
+        pay2, dest, n_shards, capacity, axis, 1, live2)
+    st2 = resp2[:, 0]
+    status = jnp.where(live2 & ok2, st2, st1)
+    live3 = live2 & ok2 & (st2 == programs.SET_NEEDS_DISPLACEMENT)
+
+    ms = min(max(max_search, h), 2 * n)
+    if h < 2 or ms < h:
+        status = jnp.where(live3, jnp.int32(programs.SET_NEEDS_RESIZE),
+                           status)
+    else:
+        # --- stage 3: the displacement bubble, on the doubled frame ------
+        disp = programs.build_hopscotch_displacer(2 * n, val_words, h,
+                                                  ms, max_moves)
+        pay3 = disp.device_payloads(q, hopscotch.bucket_of(q, 2 * n),
+                                    qv.reshape(-1, val_words))
+        disp_steps = max(max_steps, disp.fuel)
+        resp3, ok3, (gk, gv) = transport.triggered_chain_stateful(
+            _guarded_step(disp.run_one, disp_steps), (gk, gv), pay3,
+            dest, n_shards, capacity, axis, 1, live3)
+        status = jnp.where(live3 & ok3, resp3[:, 0], status)
+
+    # a row is authoritative when every stage it needed admitted it
+    okf = jnp.where(route_new, ok2, jnp.where(esc1, ok1 & ok2, ok1))
+    okf = okf & lv
+    status = status * okf.astype(status.dtype)
+    return (status[None], okf[None], tk[None], tv[None], gk[None],
+            gv[None])
+
+
+def sharded_set_migrating(mesh: Mesh, axis: str, rs: ResizeState,
+                          set_keys: jnp.ndarray, set_vals: jnp.ndarray,
+                          neighborhood: int = 8,
+                          capacity: Optional[int] = None,
+                          live: Optional[jnp.ndarray] = None,
+                          max_steps: int = 512,
+                          max_search: int = hopscotch.DEFAULT_MAX_SEARCH,
+                          max_moves: int = hopscotch.DEFAULT_MAX_MOVES
+                          ) -> Tuple[SetResult, ResizeState]:
+    """Batched chain-offloaded SET against a store mid-growth.
+
+    Same contract as :func:`sharded_set`, but routed by the migration
+    watermark over the double frame (see :func:`_mig_set_local`).  A
+    key re-written into the new frame while its stale copy awaits
+    migration is the *intended* transient: gets probe new-first, and the
+    migrator discards the stale copy when its bucket's turn comes.
+    Returns ``(SetResult, new ResizeState)`` — the watermark is
+    untouched (only :func:`sharded_resize` advances it).
+    """
+    _check_key_batch(set_keys, what="set", allow_zero=True, live=live)
+    n_shards = mesh.shape[axis]
+    b_local = set_keys.shape[1]
+    capacity = b_local if capacity is None else capacity
+    if live is None:
+        live = jnp.ones(set_keys.shape, jnp.bool_)
+    real = set_keys != hopscotch.EMPTY
+    if capacity == 0:
+        zi = jnp.zeros(set_keys.shape, jnp.int32)
+        return (SetResult(
+            status=zi, applied=zi.astype(bool), ok=zi.astype(bool),
+            dropped=jnp.sum(live & real, axis=1, dtype=jnp.int32),
+            deferred=jnp.sum(~live & real, axis=1, dtype=jnp.int32)),
+            rs)
+    mapped = _mapped_mig_set(mesh, axis, n_shards, capacity, neighborhood,
+                             rs.vals.shape[-1], max_steps, max_search,
+                             max_moves)
+    status, okf, dropped, deferred, tk, tv, gk, gv = mapped(
+        rs.keys, rs.vals, rs.new_keys, rs.new_vals, rs.watermark,
+        set_keys, set_vals, live)
+    applied = okf & ((status == programs.SET_UPDATED)
+                     | (status == programs.SET_INSERTED)
+                     | (status == programs.SET_DISPLACED))
+    return (SetResult(status, applied, okf, dropped, deferred),
+            ResizeState(tk, tv, gk, gv, rs.watermark))
+
+
+def _mapped_mig_set(mesh: Mesh, axis: str, n_shards: int, capacity: int,
+                    neighborhood: int, val_words: int, max_steps: int,
+                    max_search: int, max_moves: int):
+    key = ("mig_set", _mesh_fingerprint(mesh), axis, n_shards, capacity,
+           neighborhood, val_words, max_steps, max_search, max_moves)
+    cached = _MAPPED_CACHE.get(key)
+    if cached is not None:
+        return cached
+    path = functools.partial(
+        _mig_set_local, n_shards=n_shards, capacity=capacity, axis=axis,
+        neighborhood=neighborhood, val_words=val_words,
+        max_steps=max_steps, max_search=max_search, max_moves=max_moves)
+
+    def body(ok_, ov, nk, nv, wm, qk, qv, live):
+        real = qk != hopscotch.EMPTY
+        live = live & real
+        status, okf, tk, tv, gk, gv = path(ok_, ov, nk, nv, wm, qk, qv,
+                                           live)
+        deferred = jnp.sum(~live & real, dtype=jnp.int32).reshape(1)
+        dropped = (jnp.sum(live, dtype=jnp.int32)
+                   - jnp.sum(okf, dtype=jnp.int32)).reshape(1)
+        return status, okf, dropped, deferred, tk, tv, gk, gv
+
+    spec = P(axis)
+    fn = jax.jit(shard_map(
+        body, mesh=mesh, in_specs=(spec,) * 8, out_specs=(spec,) * 8,
         check_vma=False))
     _MAPPED_CACHE[key] = fn
     return fn

@@ -114,6 +114,11 @@ class ShardedKVService(_HostDriverLifecycle):
     driver: Optional[HostDriver]
     bootstrap_s: float = 1.0
     rebuild_s: float = 1.25
+    # -- online growth (§5.6 extension: resize *while* serving) --------------
+    resize: Optional["kv_store.ResizeState"] = None
+    auto_resize: bool = True       # SET_NEEDS_RESIZE escalates to growth
+    resize_quantum: int = 16       # buckets migrated per serving call
+    resizes_completed: int = 0
 
     @classmethod
     def start(cls, items: Sequence[Tuple[int, Sequence[int]]],
@@ -140,12 +145,21 @@ class ShardedKVService(_HostDriverLifecycle):
     # -- the serving path (pure device state) --------------------------------
     def get_many(self, queries, **kwargs) -> "kv_store.GetResult":
         """Sharded redn gets: chain programs execute at the owner shards.
-        Works with the driver dead — no host state is touched."""
+        Works with the driver dead — no host state is touched.  While a
+        resize is in flight the store serves from the double frame
+        (new-then-old probes, watermark-gated) and each call also
+        advances the migration by one quantum — "resize *while*
+        serving", with the serving traffic itself driving the growth."""
         import jax.numpy as jnp
 
         q = jnp.asarray(queries, jnp.int32)
         if q.ndim == 1:
             q = q[None, :]
+        if self.resize is not None:
+            res = kv_store.sharded_get_migrating(
+                self.mesh, self.axis, self.resize, q, **kwargs)
+            self._advance_resize()
+            return res
         return kv_store.sharded_get(self.mesh, self.axis, self.keys,
                                     self.vals, q, method="redn", **kwargs)
 
@@ -153,26 +167,93 @@ class ShardedKVService(_HostDriverLifecycle):
         """Batched chain-offloaded sets: the writer chain programs execute
         at the owner shards against the authoritative device arrays, and
         neighborhood-full rows escalate to the displacer chain in the
-        same call.  Works with the driver dead.  Only ``SET_NEEDS_RESIZE``
-        rows (bounded search/bubble exhausted — the table must grow) are
-        left uncommitted."""
+        same call.  Works with the driver dead.
+
+        A ``SET_NEEDS_RESIZE`` answer (bounded search/bubble exhausted)
+        no longer just reports: with ``auto_resize`` the service opens
+        the doubled frame (:func:`repro.kvstore.store.begin_resize`),
+        re-issues exactly the unplaced rows through the double-frame
+        path — where the old frame's neighborhood-full insert escalates
+        into the half-empty new frame — and continues the migration
+        incrementally on every subsequent serving call.  All of it is
+        chain execution against device state, so the escalation path
+        works with the driver dead too.
+        """
         import jax.numpy as jnp
 
         qk = jnp.asarray(set_keys, jnp.int32)
         qv = jnp.asarray(set_vals, jnp.int32)
         if qk.ndim == 1:
             qk, qv = qk[None, :], qv[None, :, :]
+        if self.resize is not None:
+            res, self.resize = kv_store.sharded_set_migrating(
+                self.mesh, self.axis, self.resize, qk, qv, **kwargs)
+            self._advance_resize()
+            return res
         res, self.keys, self.vals = kv_store.sharded_set(
             self.mesh, self.axis, self.keys, self.vals, qk, qv, **kwargs)
-        return res
+        if not self.auto_resize:
+            return res
+        # (materializing status here is a host sync — only pay it when
+        # the answer can actually change the control flow)
+        needs = np.asarray(res.status) == programs.SET_NEEDS_RESIZE
+        if not needs.any():
+            return res
+        # --- auto-escalation: grow, then land the unplaced rows ----------
+        self.resize = kv_store.begin_resize(self.keys, self.vals)
+        retry = jnp.asarray(needs)
+        # needs-resize rows were necessarily live/admitted, so the retry
+        # mask subsumes any caller admission mask
+        rekw = {k: v for k, v in kwargs.items() if k != "live"}
+        res2, self.resize = kv_store.sharded_set_migrating(
+            self.mesh, self.axis, self.resize, qk, qv, live=retry,
+            **rekw)
+        self._advance_resize()
+        status = jnp.where(retry, res2.status, res.status)
+        ok = jnp.where(retry, res2.ok, res.ok)
+        applied = res.applied | res2.applied
+        return kv_store.SetResult(status, applied, ok,
+                                  res.dropped + res2.dropped,
+                                  res.deferred)
+
+    # -- incremental growth driver (device chains only; driver-dead safe) ----
+    def _advance_resize(self, step: Optional[int] = None):
+        if self.resize is None:
+            return
+        before = int(np.asarray(self.resize.watermark).min())
+        self.resize, report = kv_store.sharded_resize(
+            self.mesh, self.axis, self.resize,
+            step=step or self.resize_quantum)
+        after = int(np.asarray(self.resize.watermark).min())
+        if after == before and int(np.asarray(report.stuck).sum()):
+            raise RuntimeError(
+                "resize stalled: a bucket is unplaceable even through "
+                "the doubled frame's displacer (double growth needed)")
+        if kv_store.resize_done(self.resize):
+            self.keys, self.vals = kv_store.finish_resize(self.resize)
+            self.resize = None
+            self.resizes_completed += 1
+
+    def drive_resize(self):
+        """Run the in-flight migration to completion (cutover included).
+        Pure chain/device work — callable, and tested, with the host
+        driver dead."""
+        while self.resize is not None:
+            self._advance_resize()
+
+    def resizing(self) -> bool:
+        return self.resize is not None
 
     # -- the set path: fully chain-served, displacement included -------------
     def set(self, key: int, value: Sequence[int]) -> bool:
         """One SET through the full chain pipeline — update,
         in-neighborhood insert, or displacement, all device state only,
-        all serving with the driver dead.  False means the *bounded*
-        displacement could not place the key (``SET_NEEDS_RESIZE``):
-        the store is intact and needs a resize, not a restart."""
+        all serving with the driver dead.  A ``SET_NEEDS_RESIZE``
+        answer auto-escalates into online growth (the doubled frame
+        opens and the key lands through the double-frame path), so with
+        ``auto_resize`` on, False only means the escalation itself was
+        dropped/stuck; with it off, False is the classic bounded
+        needs-resize report — intact store, growth required."""
         kv_store.ShardedKV.check_key(key)
         n_shards = self.kv.n_shards
         # one real request from shard 0; other source shards contribute a

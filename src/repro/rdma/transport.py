@@ -184,6 +184,27 @@ def triggered_chain_stateful(step_fn: Callable, carry, payload: jnp.ndarray,
     return combine(resp, dest, pos, ok, axis_name), ok, carry
 
 
+def local_chain_stateful(step_fn: Callable, carry, payload: jnp.ndarray):
+    """Loopback chains: the owner triggers its *own* pre-posted chain.
+
+    Maintenance offloads — table growth, compaction — originate at the
+    shard that owns the data, so there is no dispatch/combine pair at
+    all: the NIC is both requester and responder (a loopback QP), and
+    the request stream is simply scanned through the chain with the
+    owner's authoritative state as the carry, exactly like the receive
+    window of :func:`triggered_chain_stateful` but with zero network
+    RTTs.  This is what lets ``store.sharded_resize`` keep migrating
+    with the host driver dead: every lap is a chain execution against
+    device state, never a host computation.
+
+    ``step_fn(carry, request_row) -> (carry, resp_row)``; zero-padded
+    rows must be self-guarding (the chain programs' null guard WQ).
+    Returns ``(responses (B, resp_words), final_carry)``.
+    """
+    carry, resp = lax.scan(step_fn, carry, payload)
+    return resp, carry
+
+
 def triggered_chain_engine(engine, state, recv_wq: int, resp_region: int,
                            resp_words: int, payload: jnp.ndarray,
                            dest: jnp.ndarray, n_shards: int, capacity: int,

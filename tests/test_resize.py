@@ -1,0 +1,523 @@
+"""Online resize while serving (§5.6 extension): the migrator chain vs
+the ``HopscotchTable.grow`` oracle, the double-frame get/set paths, the
+watermark routing invariants, and the completed §5.6 growth story (an
+insert that forces table growth lands, and the resize runs to cutover,
+with the host driver dead).  Includes the escalation-boundary
+satellites: duplicate keys in one batch where one forces growth, and
+mid-migration gets for keys whose buckets sit exactly at the watermark.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import programs
+from repro.kvstore import hopscotch, store
+from repro.rdma import failure
+
+NB, H, V = 32, 4, 2
+
+
+@pytest.fixture(scope="module")
+def mesh1():
+    return Mesh(np.array(jax.devices()[:1]), ("kv",))
+
+
+@pytest.fixture(scope="module")
+def migrator():
+    return programs.build_hopscotch_migrator(NB, V, H)
+
+
+def _keys_with_home(bucket, count, n_buckets=NB, start=1):
+    return store.keys_homed_at(bucket, count, n_buckets, start=start,
+                               n_shards=1)
+
+
+def _filled_table(n_keys, seed=0, nb=NB, h=H):
+    t = hopscotch.make_table(nb, V, neighborhood=h)
+    rng = np.random.RandomState(seed)
+    ks, k = [], 1
+    while len(ks) < n_keys:
+        if t.insert(k, [k % 7 + 1, k % 11 + 1]):
+            ks.append(k)
+        k += 1 + int(rng.randint(4))
+    return t, ks
+
+
+def _mig_parity(mig, t, new, b):
+    """One migrator lap vs one ``migrate_bucket`` oracle step; asserts
+    bit-exactness of status and all four arrays."""
+    ok, ov = t.as_device()
+    nk, nv = new.as_device()
+    ref_old = hopscotch.HopscotchTable(t.keys.copy(), t.values.copy(), H)
+    ref_new = hopscotch.HopscotchTable(new.keys.copy(), new.values.copy(),
+                                       H)
+    pay = mig.device_payloads(jnp.asarray([b], jnp.int32), ok)
+    st, ok, ov, nk, nv = mig.run_one(ok, ov, nk, nv, pay[0], mig.fuel)
+    ref_st = ref_old.migrate_bucket(ref_new, b)
+    assert int(st) == ref_st
+    np.testing.assert_array_equal(np.asarray(ok), ref_old.keys)
+    np.testing.assert_array_equal(np.asarray(ov), ref_old.values)
+    np.testing.assert_array_equal(np.asarray(nk), ref_new.keys)
+    np.testing.assert_array_equal(np.asarray(nv), ref_new.values)
+    return int(st), nk, nv
+
+
+# --- the migrator program vs the per-bucket oracle ---------------------------
+
+def test_mig_status_codes_match_across_layers():
+    assert hopscotch.MIG_MOVED == programs.MIG_MOVED
+    assert hopscotch.MIG_DISCARDED == programs.MIG_DISCARDED
+    assert hopscotch.MIG_NEEDS_DISPLACE == programs.MIG_NEEDS_DISPLACE
+
+
+def test_migrator_full_sweep_bit_exact(migrator):
+    """Every source bucket of a populated table through the chain, each
+    lap bit-exact with ``migrate_bucket``; afterwards the old frame is
+    empty and every key serves from the new frame."""
+    t, ks = _filled_table(12, seed=0)
+    new = hopscotch.make_table(2 * NB, V, neighborhood=H)
+    ok, ov = t.as_device()
+    nk, nv = new.as_device()
+    ref_old = hopscotch.HopscotchTable(t.keys.copy(), t.values.copy(), H)
+    ref_new = hopscotch.HopscotchTable(new.keys.copy(), new.values.copy(),
+                                       H)
+    for b in range(NB):
+        pay = migrator.device_payloads(jnp.asarray([b], jnp.int32), ok)
+        ref_st = ref_old.migrate_bucket(ref_new, b)
+        if int(pay[0][0]) == 0:
+            assert ref_st == 0          # EMPTY source: never dispatched
+            continue
+        st, ok, ov, nk, nv = migrator.run_one(ok, ov, nk, nv, pay[0],
+                                              migrator.fuel)
+        assert int(st) == ref_st == hopscotch.MIG_MOVED
+        np.testing.assert_array_equal(np.asarray(nk), ref_new.keys)
+        np.testing.assert_array_equal(np.asarray(nv), ref_new.values)
+    assert (np.asarray(ok) == hopscotch.EMPTY).all()
+    f, v = hopscotch.lookup(nk, nv, jnp.asarray(ks, jnp.int32), H)
+    assert bool(jnp.all(f))
+    for i, k in enumerate(ks):
+        assert v[i].tolist() == [k % 7 + 1, k % 11 + 1]
+
+
+def test_migrator_discard_keeps_newer_value(migrator):
+    """The double-residency transient: the key was re-written into the
+    new frame while the stale copy awaited migration — the migrator must
+    drop the old copy, never clobber the newer value."""
+    t = hopscotch.make_table(NB, V, neighborhood=H)
+    k = 5
+    assert t.insert(k, [1, 1])
+    b = int(np.where(t.keys == k)[0][0])
+    new = hopscotch.make_table(2 * NB, V, neighborhood=H)
+    assert new.insert(k, [9, 9])        # the fresher copy
+    st, nk, nv = _mig_parity(migrator, t, new, b)
+    assert st == hopscotch.MIG_DISCARDED
+    f, v = hopscotch.lookup(nk, nv, jnp.asarray([k], jnp.int32), H)
+    assert bool(f[0]) and v[0].tolist() == [9, 9]
+
+
+def test_migrator_needs_displace_leaves_frames_untouched(migrator):
+    t = hopscotch.make_table(NB, V, neighborhood=H)
+    kk = _keys_with_home(3, 1)[0]
+    assert t.insert(kk, [2, 3])
+    b = int(np.where(t.keys == kk)[0][0])
+    hn = int(hopscotch.bucket_of(kk, 2 * NB))
+    new = hopscotch.make_table(2 * NB, V, neighborhood=H)
+    start = 1
+    for d in range(H):
+        want = (hn + d) % (2 * NB)
+        c = _keys_with_home(want, 1, 2 * NB, start=start)[0]
+        if c == kk:
+            c = _keys_with_home(want, 1, 2 * NB, start=c + 1)[0]
+        start = c + 1
+        new.keys[want] = c
+        new.values[want] = [c % 5 + 1, c % 3 + 1]
+    kb, nb_ = t.keys.copy(), new.keys.copy()
+    st, nk, nv = _mig_parity(migrator, t, new, b)
+    assert st == hopscotch.MIG_NEEDS_DISPLACE
+    np.testing.assert_array_equal(t.keys, kb)       # oracle untouched too
+    np.testing.assert_array_equal(np.asarray(nk), nb_)
+
+
+def test_migrator_select_covers_both_halves(migrator):
+    """The Calc-verb select branch: keys whose next hash bit is 0 land in
+    the lower half-neighborhood, bit-1 keys in the upper — both arms
+    exercised and bit-exact."""
+    shift = NB.bit_length() - 1
+    done = {0: False, 1: False}
+    k = 1
+    while not all(done.values()):
+        ku = (k * 2654435761) & 0xFFFFFFFF
+        sel = (ku >> shift) & 1
+        t = hopscotch.make_table(NB, V, neighborhood=H)
+        assert t.insert(k, [4, 4])
+        b = int(np.where(t.keys == k)[0][0])
+        new = hopscotch.make_table(2 * NB, V, neighborhood=H)
+        st, nk, nv = _mig_parity(migrator, t, new, b)
+        assert st == hopscotch.MIG_MOVED
+        row = int(np.where(np.asarray(nk) == k)[0][0])
+        hn = int(hopscotch.bucket_of(k, 2 * NB))
+        assert (row - hn) % (2 * NB) < H
+        assert hn == int(hopscotch.bucket_of(k, NB)) + sel * NB
+        done[sel] = True
+        k += 1
+
+
+def test_migrator_zero_padded_request_is_inert(migrator):
+    t, _ = _filled_table(8, seed=3)
+    new = hopscotch.make_table(2 * NB, V, neighborhood=H)
+    ok, ov = t.as_device()
+    nk, nv = new.as_device()
+    st, ok2, ov2, nk2, nv2 = migrator.run_one(
+        ok, ov, nk, nv, jnp.zeros(4, jnp.int32), migrator.fuel)
+    assert int(st) == 0
+    np.testing.assert_array_equal(np.asarray(ok2), t.keys)
+    np.testing.assert_array_equal(np.asarray(ov2), t.values)
+    np.testing.assert_array_equal(np.asarray(nk2), new.keys)
+    np.testing.assert_array_equal(np.asarray(nv2), new.values)
+
+
+def test_migrator_build_bounds():
+    with pytest.raises(ValueError, match="power-of-two"):
+        programs.build_hopscotch_migrator(33, V, H)
+    with pytest.raises(ValueError, match="row copy"):
+        programs.build_hopscotch_migrator(NB, 17, H)
+    with pytest.raises(ValueError, match="power-of-two"):
+        hopscotch.make_table(33, V, neighborhood=H).grow()
+    with pytest.raises(ValueError, match="power-of-two"):
+        store.begin_resize(jnp.zeros((1, 33), jnp.int32),
+                           jnp.zeros((1, 33, V), jnp.int32))
+
+
+# --- the sharded resize driver ------------------------------------------------
+
+def test_sharded_resize_matches_grow_oracle(mesh1):
+    """Quantum-driven migration to cutover: the final doubled frame is
+    bit-identical to ``grow(step=quantum)``, the old frame is drained,
+    and every mid-flight quantum's frames match the replayed oracle."""
+    t, ks = _filled_table(14, seed=1)
+    ref = hopscotch.HopscotchTable(t.keys.copy(), t.values.copy(), H)
+    dk, dv = t.as_device()
+    rs = store.begin_resize(dk[None], dv[None])
+    grown = ref.grow(step=8)
+    while not store.resize_done(rs):
+        rs, rep = store.sharded_resize(mesh1, "kv", rs, step=8,
+                                       neighborhood=H)
+        assert int(np.asarray(rep.stuck).sum()) == 0
+    nk, nv = store.finish_resize(rs)
+    assert nk.shape == (1, 2 * NB)
+    np.testing.assert_array_equal(np.asarray(nk[0]), grown.keys)
+    np.testing.assert_array_equal(np.asarray(nv[0]), grown.values)
+    np.testing.assert_array_equal(np.asarray(rs.keys[0]), ref.keys)
+    assert (ref.keys == hopscotch.EMPTY).all()
+
+
+def test_sharded_resize_escalates_through_displacer(mesh1):
+    """A source key whose doubled-frame neighborhood is already full must
+    escalate through the new frame's displacer chain — placed, source
+    vacated, reported, and bit-exact with the quantum-scheduled oracle."""
+    t = hopscotch.make_table(NB, V, neighborhood=H)
+    kk = _keys_with_home(2, 1)[0]
+    assert t.insert(kk, [3, 4])
+    hn = int(hopscotch.bucket_of(kk, 2 * NB))
+    new = hopscotch.make_table(2 * NB, V, neighborhood=H)
+    start = 1
+    for d in range(H):
+        want = (hn + d) % (2 * NB)
+        c = _keys_with_home(want, 1, 2 * NB, start=start)[0]
+        if c == kk:
+            c = _keys_with_home(want, 1, 2 * NB, start=c + 1)[0]
+        start = c + 1
+        assert new.insert(c, [c % 5 + 1, c % 3 + 1])
+    ref_old = hopscotch.HopscotchTable(t.keys.copy(), t.values.copy(), H)
+    ref_new = hopscotch.HopscotchTable(new.keys.copy(), new.values.copy(),
+                                       H)
+    rs = store.ResizeState(
+        keys=jnp.asarray(t.keys)[None], vals=jnp.asarray(t.values)[None],
+        new_keys=jnp.asarray(new.keys)[None],
+        new_vals=jnp.asarray(new.values)[None],
+        watermark=jnp.zeros((1,), jnp.int32))
+    rs, rep = store.sharded_resize(mesh1, "kv", rs, step=8, neighborhood=H)
+    assert int(np.asarray(rep.escalated)[0]) == 1
+    assert int(np.asarray(rep.stuck)[0]) == 0
+    # oracle replay of the same quantum schedule
+    pending = []
+    for b in range(8):
+        if ref_old.migrate_bucket(ref_new, b) == hopscotch.MIG_NEEDS_DISPLACE:
+            pending.append(b)
+    assert pending
+    for b in pending:
+        k = int(ref_old.keys[b])
+        st2 = ref_new.set_full(k, ref_old.values[b].tolist())
+        assert st2 == hopscotch.SET_DISPLACED
+        ref_old.keys[b] = hopscotch.EMPTY
+        ref_old.values[b] = 0
+    np.testing.assert_array_equal(np.asarray(rs.keys[0]), ref_old.keys)
+    np.testing.assert_array_equal(np.asarray(rs.new_keys[0]), ref_new.keys)
+    np.testing.assert_array_equal(np.asarray(rs.new_vals[0]),
+                                  ref_new.values)
+
+
+def test_finish_resize_guards():
+    rs = store.begin_resize(jnp.zeros((1, NB), jnp.int32),
+                            jnp.zeros((1, NB, V), jnp.int32))
+    with pytest.raises(ValueError, match="incomplete"):
+        store.finish_resize(rs)
+    # a resident left in the old frame after a "full" sweep must raise
+    bad = rs._replace(watermark=jnp.full((1,), NB, jnp.int32),
+                      keys=rs.keys.at[0, 3].set(7))
+    with pytest.raises(RuntimeError, match="resident"):
+        store.finish_resize(bad)
+
+
+# --- double-frame serving -----------------------------------------------------
+
+def _mid_migration_state(mesh1, n_keys=12, seed=2, step=8):
+    t, ks = _filled_table(n_keys, seed=seed)
+    ref = hopscotch.HopscotchTable(t.keys.copy(), t.values.copy(), H)
+    dk, dv = t.as_device()
+    rs = store.begin_resize(dk[None], dv[None])
+    rs, _ = store.sharded_resize(mesh1, "kv", rs, step=step,
+                                 neighborhood=H)
+    return rs, ks, ref
+
+
+def _oracle_double_get(rs, q):
+    fn, vn = hopscotch.lookup(rs.new_keys[0], rs.new_vals[0],
+                              jnp.asarray(q, jnp.int32), H)
+    fo, vo = hopscotch.lookup(rs.keys[0], rs.vals[0],
+                              jnp.asarray(q, jnp.int32), H)
+    f = np.asarray(fn) | np.asarray(fo)
+    v = np.where(np.asarray(fn)[:, None], np.asarray(vn), np.asarray(vo))
+    return f, v
+
+
+def test_get_migrating_bit_exact_all_watermarks(mesh1):
+    """Hits, misses, and the query-0 ghost guard stay bit-exact with the
+    two-frame oracle at every watermark of a full migration."""
+    t, ks = _filled_table(12, seed=2)
+    dk, dv = t.as_device()
+    rs = store.begin_resize(dk[None], dv[None])
+    q = np.asarray(ks + [999983, 0], np.int32)
+    while not store.resize_done(rs):
+        rs, _ = store.sharded_resize(mesh1, "kv", rs, step=8,
+                                     neighborhood=H)
+        g = store.sharded_get_migrating(mesh1, "kv", rs,
+                                        jnp.asarray(q[None]),
+                                        neighborhood=H)
+        f_ref, v_ref = _oracle_double_get(rs, q)
+        np.testing.assert_array_equal(np.asarray(g.found[0]), f_ref)
+        np.testing.assert_array_equal(np.asarray(g.values[0]), v_ref)
+        assert bool(np.asarray(g.ok[0]).all())
+        assert not bool(np.asarray(g.found[0])[-1])   # query 0: still a miss
+
+
+def test_get_migrating_bucket_exactly_at_watermark(mesh1):
+    """The boundary satellite: one key resident exactly *at* the
+    watermark bucket (not yet migrated — must come from the old frame)
+    and one just behind it (migrated — must come from the new frame)."""
+    t = hopscotch.make_table(NB, V, neighborhood=H)
+    at_w = _keys_with_home(8, 1)[0]       # will sit at bucket 8 == w
+    behind = _keys_with_home(7, 1)[0]     # at bucket 7 == w - 1
+    assert t.insert(at_w, [11, 12]) and t.insert(behind, [13, 14])
+    dk, dv = t.as_device()
+    rs = store.begin_resize(dk[None], dv[None])
+    rs, _ = store.sharded_resize(mesh1, "kv", rs, step=8, neighborhood=H)
+    assert int(np.asarray(rs.watermark)[0]) == 8
+    # the frame split really is at the watermark
+    assert int(np.asarray(rs.keys[0])[8]) == at_w          # old frame
+    assert int(np.asarray(rs.keys[0])[7]) == hopscotch.EMPTY
+    assert behind in np.asarray(rs.new_keys[0]).tolist()   # new frame
+    q = np.asarray([at_w, behind], np.int32)
+    g = store.sharded_get_migrating(mesh1, "kv", rs, jnp.asarray(q[None]),
+                                    neighborhood=H)
+    assert bool(np.asarray(g.found[0]).all())
+    np.testing.assert_array_equal(np.asarray(g.values[0]),
+                                  [[11, 12], [13, 14]])
+
+
+def test_set_migrating_routes_and_survives_cutover(mesh1):
+    """Watermark routing: a write for a key whose home is behind the
+    watermark — but whose displaced *residence* is still ahead of it —
+    goes to the new frame, leaving the stale old copy as the intended
+    transient the migrator later discards; an unmigrated-home update
+    goes to the old frame in place; a fresh ahead-of-watermark insert
+    claims an old bucket; all values survive to cutover."""
+    t = hopscotch.make_table(NB, V, neighborhood=H)
+    k6a = _keys_with_home(6, 1)[0]
+    k7 = _keys_with_home(7, 1)[0]
+    k6b = _keys_with_home(6, 2, start=k6a + 1)[1]   # displaced to bucket 8
+    k20 = _keys_with_home(20, 1)[0]
+    for k in (k6a, k7, k6b, k20):
+        assert t.insert(k, [k % 9 + 1, k % 5 + 1])
+    assert int(t.keys[8]) == k6b                    # straddles the cut
+    dk, dv = t.as_device()
+    rs = store.begin_resize(dk[None], dv[None])
+    rs, _ = store.sharded_resize(mesh1, "kv", rs, step=8, neighborhood=H)
+    assert int(np.asarray(rs.watermark)[0]) == 8
+
+    fresh = 77001                                   # home 25: routes old
+    assert 8 <= int(hopscotch.bucket_of(fresh, NB)) <= NB - H
+    sk = np.asarray([k6b, k20, fresh], np.int32)
+    sv = np.stack([sk % 61 + 1, sk % 53 + 1], axis=1).astype(np.int32)
+    res, rs = store.sharded_set_migrating(
+        mesh1, "kv", rs, jnp.asarray(sk[None]), jnp.asarray(sv[None]),
+        neighborhood=H)
+    assert bool(np.asarray(res.ok[0]).all())
+    assert bool(np.asarray(res.applied[0]).all())
+    st = np.asarray(res.status[0])
+    assert st[0] == programs.SET_INSERTED         # new frame, fresh claim
+    assert st[1] == programs.SET_UPDATED          # old frame, in place
+    assert st[2] == programs.SET_INSERTED         # old frame, ahead of w
+    # k6b now lives in BOTH frames: new copy fresh, old copy stale
+    assert k6b in np.asarray(rs.new_keys[0]).tolist()
+    assert int(np.asarray(rs.keys[0])[8]) == k6b
+    # double-frame gets see the fresh values immediately (new frame wins)
+    g = store.sharded_get_migrating(mesh1, "kv", rs, jnp.asarray(sk[None]),
+                                    neighborhood=H)
+    assert bool(np.asarray(g.found[0]).all())
+    np.testing.assert_array_equal(np.asarray(g.values[0]), sv)
+    # ... and after the migrator discards the stale copy, they survive
+    discarded = 0
+    while not store.resize_done(rs):
+        rs, rep = store.sharded_resize(mesh1, "kv", rs, step=8,
+                                       neighborhood=H)
+        discarded += int(np.asarray(rep.discarded).sum())
+    assert discarded == 1                          # exactly the stale k6b
+    nk, nv = store.finish_resize(rs)
+    g2 = store.sharded_get(mesh1, "kv", nk, nv, jnp.asarray(sk[None]),
+                           neighborhood=H)
+    assert bool(np.asarray(g2.found[0]).all())
+    np.testing.assert_array_equal(np.asarray(g2.values[0]), sv)
+
+
+def test_set_migrating_wrap_home_routes_new(mesh1):
+    """A key whose old neighborhood wraps past the frame end must write
+    the new frame even at watermark ~0 — an old-frame claim could land
+    behind the watermark and be lost at cutover."""
+    t = hopscotch.make_table(NB, V, neighborhood=H)
+    dk, dv = t.as_device()
+    rs = store.begin_resize(dk[None], dv[None])
+    wrap = _keys_with_home(NB - 1, 1)[0]       # home + H wraps
+    sk = np.asarray([wrap], np.int32)
+    sv = np.asarray([[5, 6]], np.int32)
+    res, rs = store.sharded_set_migrating(
+        mesh1, "kv", rs, jnp.asarray(sk[None]), jnp.asarray(sv[None]),
+        neighborhood=H)
+    assert int(np.asarray(res.status[0])[0]) == programs.SET_INSERTED
+    assert wrap in np.asarray(rs.new_keys[0]).tolist()
+    assert wrap not in np.asarray(rs.keys[0]).tolist()
+    while not store.resize_done(rs):
+        rs, _ = store.sharded_resize(mesh1, "kv", rs, step=8,
+                                     neighborhood=H)
+    nk, nv = store.finish_resize(rs)
+    g = store.sharded_get(mesh1, "kv", nk, nv, jnp.asarray(sk[None]),
+                          neighborhood=H)
+    assert bool(g.found[0][0])
+    np.testing.assert_array_equal(np.asarray(g.values[0][0]), [5, 6])
+
+
+def test_set_migrating_never_reports_internal_status(mesh1):
+    """Capacity pressure across the two write stages must never surface
+    SET_NEEDS_DISPLACEMENT (internal-only): a row the second stage had
+    to drop comes back ok=False with status 0."""
+    rs, ks, _ = _mid_migration_state(mesh1, n_keys=10, seed=5)
+    w = int(np.asarray(rs.watermark)[0])
+    migrated = [k for k in ks if int(hopscotch.bucket_of(k, NB)) < w]
+    assert len(migrated) >= 2
+    sk = np.asarray(migrated[:2], np.int32)    # both route to the new frame
+    sv = np.stack([sk % 61 + 1, sk % 53 + 1], axis=1).astype(np.int32)
+    res, rs = store.sharded_set_migrating(
+        mesh1, "kv", rs, jnp.asarray(sk[None]), jnp.asarray(sv[None]),
+        neighborhood=H, capacity=1)
+    st = np.asarray(res.status[0])
+    ok = np.asarray(res.ok[0])
+    assert programs.SET_NEEDS_DISPLACEMENT not in st.tolist()
+    assert ok.sum() == 1 and int(res.dropped[0]) == 1
+    assert st[~ok].tolist() == [0]
+
+
+# --- the §5.6 growth story (service auto-escalation, driver dead) ------------
+
+def _stuck_neighborhood_items(nb=NB, h=8):
+    """Items that fill one neighborhood with same-home keys and pad the
+    following buckets with immovable residents: the next same-home
+    insert dead-ends the bounded bubble -> SET_NEEDS_RESIZE."""
+    cl = store.keys_homed_at(7, 9, nb, start=1, n_shards=1)
+    items = [(k, [k % 9 + 1, k % 5 + 1]) for k in cl[:8]]
+    for d in range(h, h + 16):
+        kk = store.keys_homed_at((7 + d) % nb, 1, nb,
+                                 start=3000 + 7 * d, n_shards=1)[0]
+        items.append((kk, [kk % 9 + 1, kk % 5 + 1]))
+    return items, cl[8]
+
+
+def test_service_insert_forcing_growth_serves_with_driver_dead():
+    """The §5.6 acceptance scenario: driver killed first, then an insert
+    that forces table growth — the service auto-escalates into an
+    incremental resize, the insert lands, gets/sets keep serving
+    mid-resize, and the migration completes to cutover, all without a
+    host driver."""
+    items, z = _stuck_neighborhood_items()
+    svc = failure.ShardedKVService.start(items, buckets_per_shard=NB)
+    svc.resize_quantum = 8
+    svc.crash_host()
+    assert not svc.host_alive()
+
+    assert svc.set(z, [42, 43])                # forced growth, still lands
+    assert svc.resizing()
+
+    expect = {k: v for k, v in items}
+    expect[z] = [42, 43]
+    keys = list(expect)
+    g = svc.get_many(np.asarray(keys, np.int32))   # serves mid-resize
+    assert bool(np.asarray(g.found[0]).all())
+    for i, k in enumerate(keys):
+        assert np.asarray(g.values[0][i]).tolist() == expect[k]
+    assert svc.resizing()                      # still migrating
+
+    assert svc.set(123457, [7, 7])             # sets mid-resize too
+    expect[123457] = [7, 7]
+    keys.append(123457)
+
+    svc.drive_resize()                         # chain work only: no host
+    assert not svc.resizing() and svc.resizes_completed == 1
+    assert svc.keys.shape == (1, 2 * NB)       # doubled and cut over
+    g = svc.get_many(np.asarray(keys, np.int32))
+    assert bool(np.asarray(g.found[0]).all())
+    for i, k in enumerate(keys):
+        assert np.asarray(g.values[0][i]).tolist() == expect[k]
+    assert not svc.host_alive()                # dead the whole time
+
+
+def test_service_duplicate_keys_one_forces_growth():
+    """The escalation-boundary satellite: duplicates of one key in the
+    same batch where the first forces growth — the first must land as an
+    insert through the auto-resize, the second must observe it and
+    resolve to an update (batch order preserved across the re-issue)."""
+    items, z = _stuck_neighborhood_items()
+    svc = failure.ShardedKVService.start(items, buckets_per_shard=NB)
+    svc.resize_quantum = 8
+    svc.crash_host()
+    sk = np.asarray([z, z], np.int32)
+    sv = np.asarray([[1, 1], [2, 2]], np.int32)
+    res = svc.set_many(sk, sv)
+    st = np.asarray(res.status[0])
+    assert svc.resizing()
+    assert st[0] in (programs.SET_INSERTED, programs.SET_DISPLACED)
+    assert st[1] == programs.SET_UPDATED
+    g = svc.get_many(np.asarray([z], np.int32))
+    assert bool(g.found[0][0])
+    np.testing.assert_array_equal(np.asarray(g.values[0][0]), [2, 2])
+    svc.drive_resize()
+    g = svc.get_many(np.asarray([z], np.int32))
+    np.testing.assert_array_equal(np.asarray(g.values[0][0]), [2, 2])
+
+
+def test_service_auto_resize_can_be_disabled():
+    items, z = _stuck_neighborhood_items()
+    svc = failure.ShardedKVService.start(items, buckets_per_shard=NB)
+    svc.auto_resize = False
+    assert not svc.set(z, [1, 2])              # plain needs-resize report
+    assert not svc.resizing()
