@@ -48,24 +48,27 @@ _PALLAS_BACKENDS = ("pallas", "pallas-interpret")
 
 
 @functools.partial(jax.jit, static_argnums=(0, 2, 4))
-def _run_many(spec, state, wq, payloads, max_steps):
+def _run_many(spec, state, wq, payloads, max_steps, faults=None):
     batch = machine.deliver_many(state, wq, payloads)
     # each context gets max_steps of *fresh* fuel, like serve() does — a
     # reused persistent state must not carry its cumulative step count in
     batch = batch._replace(steps=jnp.zeros_like(batch.steps))
-    return machine.run_batch(spec, batch, max_steps)
+    return machine.run_batch(spec, batch, max_steps, faults)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 2, 4, 5, 6))
-def _serve_stream(spec, state, wq, payloads, resp, resp_len, max_steps):
-    def step_fn(st, pay):
+def _serve_stream(spec, state, wq, payloads, resp, resp_len, max_steps,
+                  faults=None):
+    def step_fn(st, xs):
+        pay, f = xs if faults is not None else (xs, None)
         st = machine.deliver(st, wq, pay)
         st = st._replace(steps=jnp.zeros((), jnp.int32))
-        out = machine.run(spec, st, max_steps)
+        out = machine.run(spec, st, max_steps, f)
         val = lax.dynamic_slice(out.mem, (resp,), (resp_len,))
         return out, val
 
-    return lax.scan(step_fn, state, payloads)
+    xs = payloads if faults is None else (payloads, faults)
+    return lax.scan(step_fn, state, xs)
 
 
 def _pad_payloads(payloads) -> jnp.ndarray:
@@ -137,17 +140,48 @@ class ChainEngine:
             eng = cls._cache[key] = cls(spec, backend)
         return eng
 
-    # -- single-machine paths (compile-cached via the jitted machine.run) ----
-    def run(self, state: machine.VMState,
-            max_steps: int = 4096) -> machine.VMState:
-        return machine.run(self.spec, state, max_steps)
+    def _check_pallas_faults(self, faults):
+        """The pallas kernel models exactly one fault: fuel truncation
+        (``kill_step``), which it already implements as per-row fuel.
+        Any other armed fault needs the interpreter's per-step hooks."""
+        if faults is None:
+            return
+        if isinstance(faults.kill_step, jax.core.Tracer):
+            raise ValueError(
+                "faulted pallas runs need a concrete FaultPlan (the "
+                "supported-subset check is host-side); use the interp "
+                "backend for traced plans")
+        if not faults.pallas_supported():
+            raise ValueError(
+                "pallas backend supports only kill_step (fuel "
+                "truncation) faults; suppress/CAS/ENABLE faults need "
+                "the interp backend")
 
-    def run_batch(self, states: machine.VMState,
-                  max_steps: int = 4096) -> machine.VMState:
-        """Run a batched (leading-dim) ``VMState`` on the selected backend."""
+    @staticmethod
+    def _pallas_fuel(faults, max_steps: int):
+        """Per-row fuel implementing ``kill_step`` bit-exactly: the
+        interpreter stops before executing step k, so a killed row gets
+        exactly ``k`` steps of fuel."""
+        kill = jnp.asarray(faults.kill_step, jnp.int32)
+        return jnp.where(kill >= 0, jnp.minimum(kill, max_steps),
+                         max_steps)
+
+    # -- single-machine paths (compile-cached via the jitted machine.run) ----
+    def run(self, state: machine.VMState, max_steps: int = 4096,
+            faults=None) -> machine.VMState:
+        return machine.run(self.spec, state, max_steps, faults)
+
+    def run_batch(self, states: machine.VMState, max_steps: int = 4096,
+                  faults=None) -> machine.VMState:
+        """Run a batched (leading-dim) ``VMState`` on the selected backend.
+
+        ``faults`` is a :class:`repro.core.faults.FaultPlan` with one row
+        per context (interpreter-authoritative; pallas supports the
+        kill/fuel fault only and keeps bit-exact parity on it)."""
         if self.backend in _INTERP_BACKENDS:
-            return machine.run_batch(self.spec, states, max_steps)
-        return self._run_batch_pallas(states, max_steps)
+            return machine.run_batch(self.spec, states, max_steps, faults)
+        self._check_pallas_faults(faults)
+        return self._run_batch_pallas(states, max_steps, faults)
 
     # -- batched request paths ----------------------------------------------
     def deliver_many(self, state: machine.VMState, wq: int,
@@ -155,23 +189,26 @@ class ChainEngine:
         return machine.deliver_many(state, wq, _pad_payloads(payloads))
 
     def run_many(self, state: machine.VMState, wq: int, payloads,
-                 max_steps: int = 4096) -> machine.VMState:
+                 max_steps: int = 4096, faults=None) -> machine.VMState:
         """Deliver N payloads to `wq` and run all N contexts, batched.
 
         Every context gets ``max_steps`` of fresh fuel (the cumulative
         ``steps`` counter of a reused persistent state is reset, exactly
-        as the single-request ``serve()`` path does).
+        as the single-request ``serve()`` path does).  ``faults`` rows
+        (leading dim N) inject per-context faults — see
+        :mod:`repro.core.faults`.
         """
         pays = _pad_payloads(payloads)
         if self.backend in _INTERP_BACKENDS:
-            return _run_many(self.spec, state, wq, pays, max_steps)
+            return _run_many(self.spec, state, wq, pays, max_steps, faults)
+        self._check_pallas_faults(faults)
         batch = machine.deliver_many(state, wq, pays)
         batch = batch._replace(steps=jnp.zeros_like(batch.steps))
-        return self._run_batch_pallas(batch, max_steps)
+        return self._run_batch_pallas(batch, max_steps, faults)
 
     def serve_stream(self, state: machine.VMState, wq: int, payloads,
                      resp_region: int, resp_len: int,
-                     max_steps: int = 64):
+                     max_steps: int = 64, faults=None):
         """Stream N requests through *persistent* state (recycled server).
 
         Returns ``(final_state, values)`` with ``values`` of shape
@@ -182,14 +219,17 @@ class ChainEngine:
         Always runs on the interpreter regardless of ``backend``: the
         scan chains one persistent machine across requests, which the
         grid-of-independent-contexts pallas kernel does not model.
+        ``faults`` rows (leading dim N) fault individual requests of the
+        stream; a killed request's effects stay in the persistent state,
+        exactly like a real recycled server interrupted mid-chain.
         """
         pays = _pad_payloads(payloads)
         return _serve_stream(self.spec, state, wq, pays, resp_region,
-                             resp_len, max_steps)
+                             resp_len, max_steps, faults)
 
     # -- pallas backend -------------------------------------------------------
     def _run_batch_pallas(self, states: machine.VMState,
-                          max_steps: int) -> machine.VMState:
+                          max_steps: int, faults=None) -> machine.VMState:
         from ..kernels.chain_vm import ops as chain_ops
 
         spec = self.spec
@@ -232,6 +272,10 @@ class ChainEngine:
         # fuel: the interpreter's run() treats the cumulative steps
         # counter as consumed fuel (cond: steps < max_steps) — mirror it
         fuel = jnp.clip(max_steps - states.steps, 0, max_steps)
+        if faults is not None:
+            # kill_step as fuel: bit-exact with the interpreter's
+            # killed-loop condition (exactly k WRs execute)
+            fuel = jnp.minimum(fuel, self._pallas_fuel(faults, max_steps))
         inits = jnp.stack(
             [states.head[:, 0], states.tail[:, 0],
              states.enable_limit[:, 0], states.completions[:, 0],

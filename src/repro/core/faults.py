@@ -1,0 +1,160 @@
+"""Deterministic fault injection for chain executions (robustness layer).
+
+RedN's §5.6 resiliency story — and every test PRs 1–5 wrote for it — kills
+the *host driver* between requests.  That never exercises the harder
+claim: a posted completion is not an applied state, so a chain can die
+*mid-flight* (fuel exhausted mid-displacement, a WQE dropped by the NIC,
+a QP reset zeroing a doorbell) and leave a **torn** intermediate state in
+device memory.  This module is the seeded, reproducible description of
+such faults; the interpreter (``machine.run(..., faults=...)``) is the
+authority on their semantics, and the pallas backend keeps bit-exact
+parity on the single-WQ fault it supports (fuel truncation).
+
+A :class:`FaultPlan` is a pytree of int32 leaves (so it can ride through
+``jit``/``vmap``/``lax.scan`` as a traced argument — fault parameters
+must never be static, or every cut-point would recompile the chain).
+Each leaf is a *step/ordinal index*, with ``NONE`` (-1) meaning "fault
+disarmed":
+
+``kill_step``
+    Truncate fuel before executing step ``k``: exactly ``k`` WRs run and
+    the machine stops, leaving whatever the executed WRs wrote — the
+    model of a shard/process dying mid-chain (host crash, QP teardown).
+``suppress_step``
+    The WR scheduled at step ``k`` is dropped: head advances, no effects,
+    **no completion** — the model of a NIC WQE drop/corrupt-and-skip.
+    Downstream WAITs on that completion starve, so suppression usually
+    truncates the chain's tail too.
+``fail_cas``
+    The ``n``-th executed CAS spuriously fails (compare forced to
+    mismatch; the return-old path still reports the true old value) —
+    the model of a raced/NAKed atomic.
+``zero_enable``
+    The ``n``-th executed ENABLE is nulled (the doorbell write is lost)
+    — the model of a doorbell dropped by a resetting QP.
+
+Shard-kill at migration lap ``j`` composes from these: a per-lap plan
+where lap ``j`` carries a ``kill_step`` and every later lap carries
+``kill_step = 0`` (nothing executes) — see :meth:`FaultPlan.kill_lap`.
+
+Plans stack into per-request **rows** (:meth:`as_rows` /
+:meth:`from_row`) so the transport can dispatch a request's fault along
+with its payload, and :func:`storm` draws a seeded batch of plans for
+the availability benchmark (seed rotated via the ``FAULT_SEED`` env
+var — see :func:`storm_seed`).
+"""
+from __future__ import annotations
+
+import os
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+NONE = -1          # disarmed fault slot
+FIELDS = 4         # words per fault row: [kill, suppress, cas, enable]
+
+
+class FaultPlan(NamedTuple):
+    """Injectable faults for one chain execution (all leaves int32).
+
+    Scalar leaves describe one run; leaves with a leading batch dim
+    describe one run per row (``run_batch``/``serve_stream``/the
+    transport scans consume them that way).  ``NONE`` disarms a slot.
+    """
+    kill_step: jnp.ndarray       # truncate fuel before step k
+    suppress_step: jnp.ndarray   # drop the WR scheduled at step k
+    fail_cas: jnp.ndarray        # force the n-th executed CAS to miss
+    zero_enable: jnp.ndarray     # null the n-th executed ENABLE doorbell
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def none(cls, shape=()) -> "FaultPlan":
+        full = jnp.full(shape, NONE, jnp.int32)
+        return cls(full, full, full, full)
+
+    @classmethod
+    def kill_at(cls, k, shape=()) -> "FaultPlan":
+        return cls.none(shape)._replace(
+            kill_step=jnp.full(shape, k, jnp.int32))
+
+    @classmethod
+    def suppress_at(cls, k, shape=()) -> "FaultPlan":
+        return cls.none(shape)._replace(
+            suppress_step=jnp.full(shape, k, jnp.int32))
+
+    @classmethod
+    def cas_fail_at(cls, n, shape=()) -> "FaultPlan":
+        return cls.none(shape)._replace(
+            fail_cas=jnp.full(shape, n, jnp.int32))
+
+    @classmethod
+    def enable_zero_at(cls, n, shape=()) -> "FaultPlan":
+        return cls.none(shape)._replace(
+            zero_enable=jnp.full(shape, n, jnp.int32))
+
+    @classmethod
+    def kill_lap(cls, n_laps: int, lap: int, step: int) -> "FaultPlan":
+        """Shard dies at migration lap ``lap``, ``step`` WRs in: laps
+        before run clean, lap ``lap`` truncates at ``step``, later laps
+        never execute (``kill_step = 0``).  Leaves are (n_laps,)."""
+        kill = np.full(n_laps, NONE, np.int32)
+        kill[lap] = step
+        kill[lap + 1:] = 0
+        none = np.full(n_laps, NONE, np.int32)
+        return cls(jnp.asarray(kill), jnp.asarray(none),
+                   jnp.asarray(none), jnp.asarray(none))
+
+    # -- row packing (for dispatch alongside payloads) ----------------------
+    def as_rows(self) -> jnp.ndarray:
+        """Stack the leaves into ``(..., FIELDS)`` int32 rows."""
+        return jnp.stack([jnp.asarray(leaf, jnp.int32) for leaf in self],
+                         axis=-1)
+
+    @classmethod
+    def from_row(cls, row) -> "FaultPlan":
+        """Rebuild a plan from one packed row (the scan-step inverse)."""
+        row = jnp.asarray(row, jnp.int32)
+        return cls(row[..., 0], row[..., 1], row[..., 2], row[..., 3])
+
+    # -- predicates ---------------------------------------------------------
+    def active(self):
+        """Per-row bool: any fault slot armed."""
+        return ((self.kill_step >= 0) | (self.suppress_step >= 0)
+                | (self.fail_cas >= 0) | (self.zero_enable >= 0))
+
+    def pallas_supported(self) -> bool:
+        """True iff this plan uses only faults the pallas single-WQ
+        kernel models bit-exactly (fuel truncation).  Host-side check —
+        leaves must be concrete."""
+        return not (bool(np.any(np.asarray(self.suppress_step) >= 0))
+                    or bool(np.any(np.asarray(self.fail_cas) >= 0))
+                    or bool(np.any(np.asarray(self.zero_enable) >= 0)))
+
+
+def storm_seed(default: int = 20260807) -> int:
+    """The storm seed, rotated by CI via the ``FAULT_SEED`` env var."""
+    return int(os.environ.get("FAULT_SEED", default))
+
+
+def storm(n: int, p_fault: float = 0.25, max_step: int = 64,
+          seed: Optional[int] = None,
+          kinds=("kill", "suppress", "cas", "enable")) -> FaultPlan:
+    """Draw a seeded batch of per-request fault plans (leaves ``(n,)``).
+
+    Each request independently faults with probability ``p_fault``; a
+    faulted request gets one uniformly-drawn fault kind with a uniform
+    parameter in ``[0, max_step)``.  Deterministic per seed — the same
+    storm replays bit-exactly, which is what makes the availability
+    benchmark a regression check rather than a flake.
+    """
+    rng = np.random.default_rng(storm_seed() if seed is None else seed)
+    rows = np.full((n, FIELDS), NONE, np.int32)
+    hit = rng.random(n) < p_fault
+    kind = rng.integers(0, len(kinds), n)
+    param = rng.integers(0, max_step, n).astype(np.int32)
+    col = {"kill": 0, "suppress": 1, "cas": 2, "enable": 3}
+    for i in range(n):
+        if hit[i]:
+            rows[i, col[kinds[kind[i]]]] = param[i]
+    return FaultPlan.from_row(jnp.asarray(rows))

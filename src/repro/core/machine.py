@@ -233,7 +233,18 @@ def _fused_step(spec: MachineSpec):
         eligible = has_work & wait_ok & recv_ok & ~s.halted
         return eligible, addr, opcode
 
-    def execute(s: VMState, eligible, addrs, guard: bool = True) -> VMState:
+    def execute(s: VMState, eligible, addrs, guard: bool = True,
+                faults=None, fault_counts=None):
+        """One scheduling step.  With ``faults`` (a scalar-leaf
+        ``repro.core.faults.FaultPlan``) the step also applies the armed
+        fault semantics — WR suppression at a step index, spurious CAS
+        failure, nulled ENABLE — threaded as *traced* values so fault
+        parameters never specialize the (lru-cached) step.
+        ``fault_counts = (cas_seen, enable_seen)`` are the executed-verb
+        ordinals the CAS/ENABLE faults index; the faulted form returns
+        ``(new_state, new_counts)`` instead of just the state.
+        (``kill_step`` is a loop-condition fault — see :func:`run` — not
+        a per-step one.)"""
         w = jnp.argmin(jnp.where(eligible, s.clock, jnp.inf)).astype(
             jnp.int32)
 
@@ -241,6 +252,20 @@ def _fused_step(spec: MachineSpec):
         ctrl = s.mem[addr + isa.F_CTRL]
         opcode = jnp.clip((ctrl >> isa.ID_BITS) & 0x7F, 0,
                           isa.NUM_OPCODES - 1)
+        if faults is not None:
+            cas_seen, enable_seen = fault_counts
+            # WQE drop: the scheduled WR executes as nothing — head
+            # still advances (the NIC skipped the entry), no effects,
+            # and *no completion*, so dependent WAITs starve exactly
+            # like a real lost WQE.
+            suppress = ((faults.suppress_step >= 0)
+                        & (s.steps == faults.suppress_step))
+            opcode = jnp.where(suppress, jnp.int32(isa.NOOP), opcode)
+            spur_cas = ((faults.fail_cas >= 0) & (opcode == isa.CAS)
+                        & (cas_seen == faults.fail_cas))
+            zero_enable = ((faults.zero_enable >= 0)
+                           & (opcode == isa.ENABLE)
+                           & (enable_seen == faults.zero_enable))
         flags = s.mem[addr + isa.F_FLAGS]
         src = s.mem[addr + isa.F_SRC]
         dst = s.mem[addr + isa.F_DST]
@@ -270,8 +295,13 @@ def _fused_step(spec: MachineSpec):
         old = mem[d]
         sval = old
         sval = jnp.where(opcode == isa.WRITE_IMM, opa, sval)
+        cas_hit = old == opa
+        if faults is not None:
+            # spurious atomic failure: compare forced to mismatch; the
+            # return-old path below still reports the true old value
+            cas_hit = cas_hit & ~spur_cas
         sval = jnp.where(opcode == isa.CAS,
-                         jnp.where(old == opa, opb, old), sval)
+                         jnp.where(cas_hit, opb, old), sval)
         sval = jnp.where(opcode == isa.ADD, old + opa, sval)
         sval = jnp.where(opcode == isa.MAX, jnp.maximum(old, opa), sval)
         sval = jnp.where(opcode == isa.MIN, jnp.minimum(old, opa), sval)
@@ -311,8 +341,13 @@ def _fused_step(spec: MachineSpec):
             (opcode == isa.SEND) & (opb < 0), 1, 0)
 
         # ENABLE raises the target's monotonic watermark; HALT stops us
+        en_raises = opcode == isa.ENABLE
+        if faults is not None:
+            # lost doorbell: the ENABLE executes (head, clock, ordinal
+            # all advance) but the watermark write never lands
+            en_raises = en_raises & ~zero_enable
         enable_limit = s.enable_limit.at[tgt].set(jnp.where(
-            opcode == isa.ENABLE,
+            en_raises,
             jnp.maximum(s.enable_limit[tgt], opa), s.enable_limit[tgt]))
         halted = s.halted | (opcode == isa.HALT)
 
@@ -337,6 +372,8 @@ def _fused_step(spec: MachineSpec):
                       jnp.maximum(t, new.last_comp_time[tgt]), t)
 
         signaled = (flags & isa.FLAG_SUPPRESS_COMPLETION) == 0
+        if faults is not None:
+            signaled = signaled & ~suppress
         completions = new.completions.at[w].add(jnp.where(signaled, 1, 0))
         last_ct = new.last_comp_time.at[w].set(
             jnp.where(signaled, t, new.last_comp_time[w]))
@@ -354,6 +391,15 @@ def _fused_step(spec: MachineSpec):
         # written.  The fused `run` skips the guard entirely: its cond
         # guarantees eligibility, and under vmap the while_loop batching
         # rule masks finished machines itself.
+        if faults is not None:
+            # ordinal counters index *executed* verbs (a suppressed CAS
+            # never reached an execution unit, so it consumes no slot)
+            counts_out = (
+                cas_seen + (opcode == isa.CAS).astype(jnp.int32),
+                enable_seen + (opcode == isa.ENABLE).astype(jnp.int32))
+            if not guard:
+                return new, counts_out
+            return _select_touched(jnp.any(eligible), new, s), counts_out
         if not guard:
             return new
         return _select_touched(jnp.any(eligible), new, s)
@@ -398,34 +444,68 @@ def quiescent(spec: MachineSpec, s: VMState) -> jnp.ndarray:
 
 
 @functools.partial(jax.jit, static_argnums=(0, 2))
-def run(spec: MachineSpec, state: VMState, max_steps: int = 4096) -> VMState:
+def run(spec: MachineSpec, state: VMState, max_steps: int = 4096,
+        faults=None) -> VMState:
     """Run until quiescence / HALT / fuel exhaustion.
 
     Fused loop: the eligibility of the *current* state rides in the carry,
     so quiescence is read off the carry instead of re-deriving it in
     ``cond`` — one eligibility evaluation per executed WR.
+
+    ``faults`` (a scalar-leaf :class:`repro.core.faults.FaultPlan`)
+    injects the plan's armed faults into this run: ``kill_step`` stops
+    the loop before executing step ``k`` (exactly ``k`` WRs run — the
+    shard/process died mid-chain), the per-step faults apply inside
+    :func:`_fused_step`'s ``execute``.  Fault parameters are *traced*,
+    so every cut-point of a sweep shares one compilation.  A fully
+    disarmed plan is bit-identical to the plain run (tested).
     """
     eligibility, execute = _fused_step(spec)
 
+    if faults is None:
+        def cond(carry):
+            s, eligible, _ = carry
+            return jnp.any(eligible) & (~s.halted) & (s.steps < max_steps)
+
+        def body(carry):
+            s, eligible, addrs = carry
+            new = execute(s, eligible, addrs, guard=False)
+            e2, a2, _ = eligibility(new)
+            return new, e2, a2
+
+        elig0, addrs0, _ = eligibility(state)
+        out, _, _ = lax.while_loop(cond, body, (state, elig0, addrs0))
+        return out
+
     def cond(carry):
-        s, eligible, _ = carry
-        return jnp.any(eligible) & (~s.halted) & (s.steps < max_steps)
+        s, eligible, _, _ = carry
+        killed = (faults.kill_step >= 0) & (s.steps >= faults.kill_step)
+        return (jnp.any(eligible) & (~s.halted) & (s.steps < max_steps)
+                & ~killed)
 
     def body(carry):
-        s, eligible, addrs = carry
-        new = execute(s, eligible, addrs, guard=False)
+        s, eligible, addrs, counts = carry
+        new, counts = execute(s, eligible, addrs, guard=False,
+                              faults=faults, fault_counts=counts)
         e2, a2, _ = eligibility(new)
-        return new, e2, a2
+        return new, e2, a2, counts
 
     elig0, addrs0, _ = eligibility(state)
-    out, _, _ = lax.while_loop(cond, body, (state, elig0, addrs0))
+    zero = jnp.zeros((), jnp.int32)
+    out, _, _, _ = lax.while_loop(
+        cond, body, (state, elig0, addrs0, (zero, zero)))
     return out
 
 
 def run_batch(spec: MachineSpec, states: VMState,
-              max_steps: int = 4096) -> VMState:
-    """vmapped run — a fleet of independent QP contexts (batched clients)."""
-    return jax.vmap(lambda s: run(spec, s, max_steps))(states)
+              max_steps: int = 4096, faults=None) -> VMState:
+    """vmapped run — a fleet of independent QP contexts (batched clients).
+
+    ``faults`` leaves, when given, carry a leading batch dim matching the
+    states — one independent plan per context."""
+    if faults is None:
+        return jax.vmap(lambda s: run(spec, s, max_steps))(states)
+    return jax.vmap(lambda s, f: run(spec, s, max_steps, f))(states, faults)
 
 
 def total_time_us(state: VMState) -> jnp.ndarray:

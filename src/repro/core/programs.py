@@ -634,6 +634,33 @@ class HopscotchShardWriter:
         vals = vals.at[row].set(jnp.where(applied, value, vals[row]))
         return jnp.where(payload[0] == EMPTY_KEY, 0, status), keys, vals
 
+    def commit_torn(self, out_mem: jnp.ndarray, payload: jnp.ndarray,
+                    keys: jnp.ndarray, vals: jnp.ndarray):
+        """Fault-mode commit: fold back *whatever the chain wrote*,
+        terminal status or not.
+
+        The normal :meth:`commit` gates on a terminal status — the
+        modeling convenience that keeps a dead-ended run bit-identical
+        to the plan-first oracle.  Physically, though, every WR that
+        executed already landed its write in device memory before the
+        fault hit; a faulted run's truth is the torn image itself.  This
+        commit reads the table and value regions straight back (any
+        untouched word equals the input arrays by construction), so
+        ``fsck`` and the recovery re-issue observe exactly the state a
+        real interrupted chain leaves behind — key claimed but value row
+        not crossed, a half-done bubble move, a response written but
+        never completed.  Returns ``(status, keys, vals)`` where
+        ``status`` may be the pre-set non-terminal default (a completion
+        is not an applied state — and vice versa)."""
+        rows = jnp.arange(self.n_buckets, dtype=jnp.int32)
+        keys_out = out_mem[self.table_base + rows * BUCKET_WORDS]
+        cols = jnp.arange(self.val_len, dtype=jnp.int32)[None, :]
+        vals_out = out_mem[self.values_base
+                           + rows[:, None] * self.val_len + cols]
+        status = out_mem[self.resp_region]
+        return (jnp.where(payload[0] == EMPTY_KEY, 0, status),
+                keys_out.astype(keys.dtype), vals_out.astype(vals.dtype))
+
     def run_one(self, keys: jnp.ndarray, vals: jnp.ndarray,
                 payload: jnp.ndarray, max_steps: int = 512):
         """Serve one assembled request against the shard arrays: build the
@@ -646,6 +673,25 @@ class HopscotchShardWriter:
                              payload)
         out = self.engine.run(st, max_steps)
         return self.commit(out.mem, payload, keys, vals)
+
+    def run_one_faulted(self, keys: jnp.ndarray, vals: jnp.ndarray,
+                        payload: jnp.ndarray, max_steps: int,
+                        faults):
+        """:meth:`run_one` under a :class:`repro.core.faults.FaultPlan`
+        (scalar leaves): the chain runs with the plan's faults armed and
+        an **armed** row commits the torn image (:meth:`commit_torn`) —
+        the device state a real interrupted chain leaves behind, for
+        fsck/recovery to repair and re-issue against.  A *disarmed* row
+        commits through the ordinary status-gated fold, so a
+        ``FaultPlan.none()`` row is bit-exact with :meth:`run_one`
+        (the storm benchmark's un-hit requests must not drift)."""
+        st = machine.deliver(self.device_state(keys, vals), self.recv_wq,
+                             payload)
+        out = self.engine.run(st, max_steps, faults)
+        torn = self.commit_torn(out.mem, payload, keys, vals)
+        clean = self.commit(out.mem, payload, keys, vals)
+        act = faults.active()
+        return tuple(jnp.where(act, t, c) for t, c in zip(torn, clean))
 
     def set_many(self, keys: jnp.ndarray, vals: jnp.ndarray,
                  queries: jnp.ndarray, home: jnp.ndarray,
@@ -909,6 +955,39 @@ class HopscotchShardDisplacer(HopscotchShardWriter):
         vals_out = jnp.where(applied, new_v, base_v).astype(vals.dtype)
         return (jnp.where(payload[0] == EMPTY_KEY, 0, status),
                 keys_out, vals_out)
+
+    def commit_torn(self, out_mem: jnp.ndarray, payload: jnp.ndarray,
+                    keys: jnp.ndarray, vals: jnp.ndarray):
+        """Fault-mode commit: the diff + mirror-merge fold of
+        :meth:`commit` with the status gate removed.  An interrupted
+        bubble's executed moves have physically landed (a half-done move
+        leaves a duplicate key across two buckets); folding them back
+        ungated is what lets ``fsck`` see — and recovery repair — the
+        torn displacement."""
+        n, s, v = self.n_buckets, self.max_search, self.val_len
+        status = out_mem[self.resp_region]
+        dead = payload[0] == EMPTY_KEY
+        rows = jnp.arange(n, dtype=jnp.int32)
+        mir = jnp.arange(s, dtype=jnp.int32)
+
+        base_k = keys.astype(jnp.int32)
+        img_k = out_mem[self.table_base + rows * BUCKET_WORDS]
+        mir_k = out_mem[self.table_base + (n + mir) * BUCKET_WORDS]
+        merged_k = base_k.at[:s].set(
+            jnp.where(mir_k != base_k[:s], mir_k, base_k[:s]))
+        new_k = jnp.where(img_k != base_k, img_k, merged_k)
+
+        base_v = vals.astype(jnp.int32)
+        cols = jnp.arange(v, dtype=jnp.int32)[None, :]
+        img_v = out_mem[self.values_base + rows[:, None] * v + cols]
+        mir_v = out_mem[self.values_base + (n + mir)[:, None] * v + cols]
+        merged_v = base_v.at[:s].set(
+            jnp.where(mir_v != base_v[:s], mir_v, base_v[:s]))
+        new_v = jnp.where(img_v != base_v, img_v, merged_v)
+
+        keys_out = jnp.where(dead, base_k, new_k).astype(keys.dtype)
+        vals_out = jnp.where(dead, base_v, new_v).astype(vals.dtype)
+        return jnp.where(dead, 0, status), keys_out, vals_out
 
 
 @functools.lru_cache(maxsize=None)
@@ -1309,6 +1388,51 @@ class HopscotchShardMigrator:
                 new_keys_out.astype(new_keys.dtype),
                 new_vals_out.astype(new_vals.dtype))
 
+    def commit_torn(self, out_mem: jnp.ndarray, payload: jnp.ndarray,
+                    old_keys: jnp.ndarray, old_vals: jnp.ndarray,
+                    new_keys: jnp.ndarray, new_vals: jnp.ndarray):
+        """Fault-mode commit: :meth:`commit`'s fold with the status gate
+        removed.  A lap interrupted between the new-frame claim and the
+        old-frame vacate has physically written both/either — folding
+        the torn image back ungated exposes the cross-frame duplicate
+        (or the claimed-but-uncopied row) to ``fsck``."""
+        n, h, v = self.n_buckets, self.neighborhood, self.val_len
+        status = out_mem[self.resp_region]
+        dead = payload[0] == EMPTY_KEY
+
+        rows_o = jnp.arange(n, dtype=jnp.int32)
+        img_ko = out_mem[self.old_table_base + rows_o * BUCKET_WORDS]
+        cols = jnp.arange(v, dtype=jnp.int32)[None, :]
+        img_vo = out_mem[self.old_values_base + rows_o[:, None] * v + cols]
+
+        rows_n = jnp.arange(2 * n, dtype=jnp.int32)
+        mir = jnp.arange(h - 1, dtype=jnp.int32)
+        base_kn = new_keys.astype(jnp.int32)
+        img_kn = out_mem[self.new_table_base + rows_n * BUCKET_WORDS]
+        mir_kn = out_mem[self.new_table_base + (2 * n + mir) * BUCKET_WORDS]
+        merged_kn = base_kn.at[:h - 1].set(
+            jnp.where(mir_kn != base_kn[:h - 1], mir_kn, base_kn[:h - 1]))
+        new_kn = jnp.where(img_kn != base_kn, img_kn, merged_kn)
+
+        base_vn = new_vals.astype(jnp.int32)
+        img_vn = out_mem[self.new_values_base + rows_n[:, None] * v + cols]
+        mir_vn = out_mem[self.new_values_base + (2 * n + mir)[:, None] * v
+                         + cols]
+        merged_vn = base_vn.at[:h - 1].set(
+            jnp.where(mir_vn != base_vn[:h - 1], mir_vn,
+                      base_vn[:h - 1]))
+        new_vn = jnp.where(img_vn != base_vn, img_vn, merged_vn)
+
+        old_keys_out = jnp.where(dead, old_keys.astype(jnp.int32), img_ko)
+        old_vals_out = jnp.where(dead, old_vals.astype(jnp.int32), img_vo)
+        new_keys_out = jnp.where(dead, base_kn, new_kn)
+        new_vals_out = jnp.where(dead, base_vn, new_vn)
+        return (jnp.where(dead, 0, status),
+                old_keys_out.astype(old_keys.dtype),
+                old_vals_out.astype(old_vals.dtype),
+                new_keys_out.astype(new_keys.dtype),
+                new_vals_out.astype(new_vals.dtype))
+
     def run_one(self, old_keys: jnp.ndarray, old_vals: jnp.ndarray,
                 new_keys: jnp.ndarray, new_vals: jnp.ndarray,
                 payload: jnp.ndarray, max_steps: int = 2048):
@@ -1321,6 +1445,24 @@ class HopscotchShardMigrator:
         out = self.engine.run(st, max_steps)
         return self.commit(out.mem, payload, old_keys, old_vals,
                            new_keys, new_vals)
+
+    def run_one_faulted(self, old_keys: jnp.ndarray, old_vals: jnp.ndarray,
+                        new_keys: jnp.ndarray, new_vals: jnp.ndarray,
+                        payload: jnp.ndarray, max_steps: int, faults):
+        """:meth:`run_one` under a scalar
+        :class:`repro.core.faults.FaultPlan`: an armed row commits the
+        torn image (:meth:`commit_torn`); a disarmed row commits through
+        the status-gated fold, bit-exact with :meth:`run_one`."""
+        st = machine.deliver(
+            self.device_state(old_keys, old_vals, new_keys, new_vals),
+            self.recv_wq, payload)
+        out = self.engine.run(st, max_steps, faults)
+        torn = self.commit_torn(out.mem, payload, old_keys, old_vals,
+                                new_keys, new_vals)
+        clean = self.commit(out.mem, payload, old_keys, old_vals,
+                            new_keys, new_vals)
+        act = faults.active()
+        return tuple(jnp.where(act, t, c) for t, c in zip(torn, clean))
 
 
 @functools.lru_cache(maxsize=None)

@@ -1,3 +1,3 @@
 """Memcached-analogue storage substrate: hopscotch/cuckoo tables and the
 sharded KV store with one-sided / two-sided / RedN-offload get paths."""
-from . import cuckoo, hopscotch, store  # noqa: F401
+from . import cuckoo, hopscotch, store, fsck  # noqa: F401

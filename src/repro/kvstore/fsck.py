@@ -1,0 +1,294 @@
+"""Crash-consistency checker + repair policy for the hopscotch frames.
+
+A chain that dies mid-flight (``repro.core.faults``) leaves device
+memory **torn**: every WR that executed landed, everything after the cut
+did not, and no response gates any of it.  This module is the offline
+authority on what states that can produce and how to mend them — the
+moral equivalent of a filesystem fsck, run between serving quanta with
+the frames quiesced.
+
+Invariants checked (:func:`check_invariants`):
+
+* **no duplicate live key** within a frame, nor across the two frames of
+  a mid-resize :class:`repro.kvstore.store.ResizeState`;
+* **neighborhood membership** — every live key sits within ``H`` buckets
+  (mod n) of its home, the hopscotch contract every probe relies on;
+* **EMPTY buckets have all-zero value rows** — a vacate is a key-CAS
+  *then* a row zeroing, so a cut between them leaves a ghost row that a
+  later claim of that bucket would serve as the wrong value;
+* **live value rows are non-zero** — the dual tear: a claim is a key-CAS
+  then a row write, so a cut between them leaves a key that would serve
+  zeros.  (All-zero *legitimate* values are therefore indistinguishable
+  from this tear; the store's convention — followed by every test and
+  benchmark — is that real payloads are non-zero.)
+* **drained watermark prefix** — old-frame buckets behind the migration
+  watermark must be EMPTY (the serving paths skip them), and the
+  watermark itself must be in ``[0, n]``.
+
+Each violation is classified as one of the torn intermediate states the
+fault model can produce, and :func:`repair` / :func:`repair_resize`
+apply the *minimal rollback* policy:
+
+``torn-claim``      key claimed, value row never crossed → vacate the
+                    claim (the request will be re-issued whole);
+``dup-key``         a displacement move half-done (copy landed, source
+                    not yet vacated) → keep the copy **closest to its
+                    home** (the original — undoing the half-move restores
+                    the exact pre-request state, so a re-issued request
+                    replays the oracle's deterministic plan bit-exactly);
+``cross-frame-dup`` a migration lap cut between the new-frame claim and
+                    the old-frame vacate → if the new copy is complete
+                    the *new frame wins* (finish the vacate), matching
+                    the migrator's own match-discard rule; if the new
+                    row is still zero the claim itself is torn — vacate
+                    it and let the re-driven lap re-migrate;
+``stale-row``       vacate half-done (key EMPTY, row not yet zeroed) →
+                    zero the row;
+``neighborhood``    a live key outside its home neighborhood — no fault
+                    in the model produces this (moves stay inside the
+                    mover's neighborhood), so it is *unrepairable* here
+                    and left for the caller (it indicates a chain bug,
+                    not a crash);
+``watermark``       a resident behind the drained prefix — likewise a
+                    logic bug, reported not repaired.
+
+Rollback-vs-rollforward: for single-bucket tears the two coincide (the
+re-issue *is* the roll-forward); for the half-done move we deliberately
+roll **back** — rolling forward would commit a placement the bounded
+oracle might never have chosen, and bit-exact convergence with
+``hopscotch.HopscotchTable`` is the property the cut-point sweep proves.
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+from . import hopscotch, store
+
+KINDS = ("torn-claim", "dup-key", "cross-frame-dup", "stale-row",
+         "neighborhood", "watermark")
+
+#: kinds :func:`repair`/:func:`repair_resize` know how to mend; the rest
+#: indicate chain bugs, not crashes, and are surfaced unrepaired
+REPAIRABLE = ("torn-claim", "dup-key", "cross-frame-dup", "stale-row")
+
+
+class Violation(NamedTuple):
+    """One invariant breach, localized to a bucket."""
+    kind: str        # one of KINDS
+    shard: int
+    frame: str       # "single" | "old" | "new"
+    bucket: int      # bucket index in that frame
+    key: int         # offending key (0 for stale-row/watermark)
+    detail: str      # human-readable specifics
+
+    def __repr__(self):
+        return (f"Violation({self.kind}: shard {self.shard} "
+                f"{self.frame}[{self.bucket}] key={self.key:#x} — "
+                f"{self.detail})")
+
+
+class FsckReport(NamedTuple):
+    """The checker's verdict: every violation found, pre-classified."""
+    violations: List[Violation]
+
+    @property
+    def clean(self) -> bool:
+        return not self.violations
+
+    def of_kind(self, kind: str) -> List[Violation]:
+        return [v for v in self.violations if v.kind == kind]
+
+    @property
+    def repairable(self) -> bool:
+        """True iff every violation has a known repair."""
+        return all(v.kind in REPAIRABLE for v in self.violations)
+
+    def __repr__(self):
+        if self.clean:
+            return "FsckReport(clean)"
+        counts = {}
+        for v in self.violations:
+            counts[v.kind] = counts.get(v.kind, 0) + 1
+        body = ", ".join(f"{k}={n}" for k, n in sorted(counts.items()))
+        return f"FsckReport({len(self.violations)} violations: {body})"
+
+
+def _home_distance(key: int, bucket: int, n: int) -> int:
+    home = int(hopscotch.bucket_of(key, n))
+    return (bucket - home) % n
+
+
+def _check_frame(out: List[Violation], shard: int, frame: str,
+                 keys: np.ndarray, vals: np.ndarray, neighborhood: int):
+    """Per-frame single-shard checks: dups, membership, row tears."""
+    n = keys.shape[0]
+    seen: dict = {}
+    for b in range(n):
+        k = int(keys[b])
+        row = vals[b]
+        if k == hopscotch.EMPTY:
+            if row.any():
+                out.append(Violation(
+                    "stale-row", shard, frame, b, 0,
+                    f"EMPTY bucket holds value row {row.tolist()}"))
+            continue
+        if not row.any():
+            out.append(Violation(
+                "torn-claim", shard, frame, b, k,
+                "live key with an all-zero value row"))
+        d = _home_distance(k, b, n)
+        if d >= neighborhood:
+            out.append(Violation(
+                "neighborhood", shard, frame, b, k,
+                f"{d} buckets from home (H={neighborhood})"))
+        if k in seen:
+            out.append(Violation(
+                "dup-key", shard, frame, b, k,
+                f"also live at bucket {seen[k]}"))
+        else:
+            seen[k] = b
+    return seen
+
+
+def check_invariants(keys=None, vals=None, *,
+                     resize: Optional["store.ResizeState"] = None,
+                     neighborhood: int = 8) -> FsckReport:
+    """Audit a store's frames for crash-consistency invariants.
+
+    Steady state: pass the sharded ``keys (S, n)`` / ``vals (S, n, V)``
+    arrays.  Mid-resize: pass ``resize=`` a
+    :class:`repro.kvstore.store.ResizeState` instead — both frames and
+    the watermark prefix are audited, plus cross-frame duplicates.
+    Host-side and eager by design (recovery runs between quanta, not
+    inside a jit); returns an :class:`FsckReport`.
+    """
+    out: List[Violation] = []
+    if resize is not None:
+        ok = np.asarray(resize.keys)
+        ov = np.asarray(resize.vals)
+        gk = np.asarray(resize.new_keys)
+        gv = np.asarray(resize.new_vals)
+        wm = np.asarray(resize.watermark)
+        n = ok.shape[1]
+        for s in range(ok.shape[0]):
+            w = int(wm[s])
+            if not 0 <= w <= n:
+                out.append(Violation(
+                    "watermark", s, "old", min(max(w, 0), n - 1), 0,
+                    f"watermark {w} outside [0, {n}]"))
+                w = min(max(w, 0), n)
+            old_seen = _check_frame(out, s, "old", ok[s], ov[s],
+                                    neighborhood)
+            new_seen = _check_frame(out, s, "new", gk[s], gv[s],
+                                    neighborhood)
+            for b in range(w):
+                if int(ok[s, b]) != hopscotch.EMPTY:
+                    out.append(Violation(
+                        "watermark", s, "old", b, int(ok[s, b]),
+                        f"resident behind drained watermark {w}"))
+            for k, b_old in old_seen.items():
+                if k in new_seen:
+                    out.append(Violation(
+                        "cross-frame-dup", s, "new", new_seen[k], k,
+                        f"also live in old frame bucket {b_old}"))
+    else:
+        kk = np.asarray(keys)
+        vv = np.asarray(vals)
+        for s in range(kk.shape[0]):
+            _check_frame(out, s, "single", kk[s], vv[s], neighborhood)
+    return FsckReport(out)
+
+
+class RepairAction(NamedTuple):
+    """One applied repair (the recovery log line)."""
+    violation: Violation
+    action: str      # "vacate" | "zero-row" | "vacate-old" | "vacate-new"
+
+
+def _mend_frame(keys, vals, shard: int, report: FsckReport, frame: str,
+                actions: List[RepairAction], kk: np.ndarray):
+    """Apply the single-frame policy for one shard; returns arrays."""
+    n = kk.shape[1]
+    for v in report.violations:
+        if v.shard != shard or v.frame != frame:
+            continue
+        if v.kind == "torn-claim":
+            keys, vals = store.repair_bucket(keys, vals, shard, v.bucket)
+            actions.append(RepairAction(v, "vacate"))
+        elif v.kind == "stale-row":
+            keys, vals = store.repair_bucket(
+                keys, vals, shard, v.bucket,
+                key=int(kk[shard, v.bucket]))
+            actions.append(RepairAction(v, "zero-row"))
+        elif v.kind == "dup-key":
+            # the checker reports the *second* sighting; find both and
+            # vacate whichever copy sits farther from home (the
+            # half-move's destination — rolling the move back)
+            rowk = kk[shard]
+            sites = [b for b in range(n) if int(rowk[b]) == v.key]
+            far = max(sites, key=lambda b: _home_distance(v.key, b, n))
+            keys, vals = store.repair_bucket(keys, vals, shard, far)
+            actions.append(RepairAction(v, "vacate"))
+            kk[shard, far] = hopscotch.EMPTY
+    return keys, vals
+
+
+def repair(keys, vals, report: FsckReport, neighborhood: int = 8):
+    """Mend a steady-state store per the rollback policy.
+
+    Returns ``(keys, vals, actions)``; violations without a repair
+    (``neighborhood``, ``watermark`` — chain bugs, not crashes) are left
+    in place and simply absent from ``actions``.  Idempotent: repairing
+    a repaired store is a no-op, and a follow-up
+    :func:`check_invariants` must come back clean — the property the
+    recovery tests pin.
+    """
+    kk = np.asarray(keys).copy()
+    actions: List[RepairAction] = []
+    for s in range(kk.shape[0]):
+        keys, vals = _mend_frame(keys, vals, s, report, "single",
+                                 actions, kk)
+    return keys, vals, actions
+
+
+def repair_resize(rs: "store.ResizeState", report: FsckReport,
+                  neighborhood: int = 8):
+    """Mend a mid-resize store (both frames + cross-frame dups).
+
+    Cross-frame policy mirrors the migrator's own match-discard rule:
+    a *complete* new-frame copy wins and the old resident is vacated
+    (recovery finishes the lap's lost vacate); a new-frame copy whose
+    row is still zero is itself the tear — it is vacated so the
+    re-driven lap re-migrates from the intact old resident.  Returns
+    ``(ResizeState, actions)``.
+    """
+    ok, ov = rs.keys, rs.vals
+    gk, gv = rs.new_keys, rs.new_vals
+    kk_old = np.asarray(ok).copy()
+    kk_new = np.asarray(gk).copy()
+    vv_new = np.asarray(gv)
+    actions: List[RepairAction] = []
+
+    # cross-frame first: its verdict decides which frame loses a copy,
+    # and the per-frame passes must not see (and "fix") the loser twice
+    for v in report.of_kind("cross-frame-dup"):
+        s, k = v.shard, v.key
+        b_new = v.bucket
+        sites_old = [b for b in range(kk_old.shape[1])
+                     if int(kk_old[s, b]) == k]
+        if vv_new[s, b_new].any():
+            for b in sites_old:
+                ok, ov = store.repair_bucket(ok, ov, s, b)
+                kk_old[s, b] = hopscotch.EMPTY
+            actions.append(RepairAction(v, "vacate-old"))
+        else:
+            gk, gv = store.repair_bucket(gk, gv, s, b_new)
+            kk_new[s, b_new] = hopscotch.EMPTY
+            actions.append(RepairAction(v, "vacate-new"))
+
+    for s in range(kk_old.shape[0]):
+        ok, ov = _mend_frame(ok, ov, s, report, "old", actions, kk_old)
+        gk, gv = _mend_frame(gk, gv, s, report, "new", actions, kk_new)
+    return (store.ResizeState(ok, ov, gk, gv, rs.watermark), actions)

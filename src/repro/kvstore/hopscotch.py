@@ -57,6 +57,27 @@ MIG_NEEDS_DISPLACE = 8       # new-frame neighborhood full: displacer needed
 DEFAULT_MAX_SEARCH = 16      # linear-probe window for the first EMPTY slot
 DEFAULT_MAX_MOVES = 8        # bubble laps before reporting needs-resize
 
+#: status code -> human-readable name, for logs, reprs, and error
+#: messages (0 is the padded/never-dispatched slot, not a real outcome)
+STATUS_NAMES = {
+    0: "UNSERVED",
+    SET_UPDATED: "SET_UPDATED",
+    SET_INSERTED: "SET_INSERTED",
+    SET_NEEDS_DISPLACEMENT: "SET_NEEDS_DISPLACEMENT",
+    SET_DISPLACED: "SET_DISPLACED",
+    SET_NEEDS_RESIZE: "SET_NEEDS_RESIZE",
+    MIG_MOVED: "MIG_MOVED",
+    MIG_DISCARDED: "MIG_DISCARDED",
+    MIG_NEEDS_DISPLACE: "MIG_NEEDS_DISPLACE",
+}
+
+
+def status_name(code) -> str:
+    """Readable name for a SET/MIG status code (unknown codes pass
+    through as ``status<n>`` rather than raising — a torn response word
+    can hold anything)."""
+    return STATUS_NAMES.get(int(code), f"status<{int(code)}>")
+
 
 def bucket_of(key, n_buckets: int):
     """Multiplicative hash (works on python ints and jnp arrays)."""

@@ -55,6 +55,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from ..compat import shard_map
+from ..core import faults as faults_mod
 from ..core import programs
 from ..rdma import isolation, transport
 from . import hopscotch
@@ -147,6 +148,19 @@ class GetResult(NamedTuple):
     ok: jnp.ndarray         # (S, B) bool — response authoritative
     dropped: jnp.ndarray    # (S,) int32 — capacity drops at the source
     deferred: jnp.ndarray   # (S,) int32 — admission-deferred at the source
+
+    def __repr__(self):
+        # summarized, not the raw-array tuple dump — results show up in
+        # assertion diffs and logs where "37/64 found" is the question.
+        # Traced instances (inside a caller's jit) can't be summarized.
+        if isinstance(self.found, jax.core.Tracer):
+            return (f"GetResult(traced: found={self.found}, "
+                    f"ok={self.ok})")
+        found, ok = np.asarray(self.found), np.asarray(self.ok)
+        return (f"GetResult(found {int(found.sum())}/{found.size}, "
+                f"ok {int(ok.sum())}/{ok.size}, "
+                f"dropped={int(np.asarray(self.dropped).sum())}, "
+                f"deferred={int(np.asarray(self.deferred).sum())})")
 
 
 @dataclasses.dataclass
@@ -382,7 +396,7 @@ def sharded_get_isolated(mesh: Mesh, axis: str, keys: jnp.ndarray,
 # of truth; update, insert, and displacement all execute on-chain)
 # ---------------------------------------------------------------------------
 
-def _guarded_step(run_one, budget):
+def _guarded_step(run_one, budget, run_one_faulted=None):
     """Scan step that skips the chain VM entirely for the window's
     zero-padded slots (key 0: capacity padding and non-dispatched
     rows).  Per-slot lax.cond is safe here — the scan body contains
@@ -396,6 +410,15 @@ def _guarded_step(run_one, budget):
     Generic over the carry arity: ``run_one(*carry, payload, budget)
     -> (status, *carry)`` — the writer/displacer thread ``(keys,
     vals)``, the resize migrator threads both frames.
+
+    With ``run_one_faulted`` the returned step consumes ``(payload,
+    fault_row)`` tuples (the transport's ``faults=`` wire format) and
+    arms each live slot's chain with its unpacked
+    :class:`repro.core.faults.FaultPlan`.  Dead (key-0) slots skip the
+    chain — and therefore the fault — entirely: a zero-padded window
+    slot's fault columns are zeroed by the dispatch scatter, and a
+    fault with nothing to execute against is a non-event, exactly like
+    a WQE corruption on a QP nobody posted to.
     """
     def live_slot(op):
         return run_one(*op[:-1], op[-1], budget)
@@ -403,11 +426,26 @@ def _guarded_step(run_one, budget):
     def dead_slot(op):
         return (jnp.zeros((), jnp.int32),) + tuple(op[:-1])
 
-    def step(carry, pay):
-        out = jax.lax.cond(pay[0] != hopscotch.EMPTY, live_slot,
-                           dead_slot, tuple(carry) + (pay,))
+    if run_one_faulted is None:
+        def step(carry, pay):
+            out = jax.lax.cond(pay[0] != hopscotch.EMPTY, live_slot,
+                               dead_slot, tuple(carry) + (pay,))
+            return tuple(out[1:]), out[0][None]
+        return step
+
+    def live_slot_f(op):
+        plan = faults_mod.FaultPlan.from_row(op[-1])
+        return run_one_faulted(*op[:-2], op[-2], budget, plan)
+
+    def dead_slot_f(op):
+        return (jnp.zeros((), jnp.int32),) + tuple(op[:-2])
+
+    def step_f(carry, xs):
+        pay, frow = xs
+        out = jax.lax.cond(pay[0] != hopscotch.EMPTY, live_slot_f,
+                           dead_slot_f, tuple(carry) + (pay, frow))
         return tuple(out[1:]), out[0][None]
-    return step
+    return step_f
 
 
 class SetResult(NamedTuple):
@@ -427,6 +465,23 @@ class SetResult(NamedTuple):
     ok: jnp.ndarray         # (S, B) bool — response authoritative
     dropped: jnp.ndarray    # (S,) int32
     deferred: jnp.ndarray   # (S,) int32
+
+    def __repr__(self):
+        # a status histogram by *name* (hopscotch.STATUS_NAMES), not a
+        # raw int32 array — "SET_INSERTED=30, SET_NEEDS_RESIZE=2" is
+        # what a failing test or a log line actually needs to say
+        if isinstance(self.status, jax.core.Tracer):
+            return (f"SetResult(traced: status={self.status}, "
+                    f"ok={self.ok})")
+        st, ok = np.asarray(self.status), np.asarray(self.ok)
+        codes, counts = np.unique(st[ok.astype(bool)], return_counts=True)
+        hist = ", ".join(f"{hopscotch.status_name(c)}={n}"
+                         for c, n in zip(codes.tolist(), counts.tolist()))
+        return (f"SetResult({hist or 'no served rows'}, "
+                f"ok {int(ok.sum())}/{ok.size}, "
+                f"applied={int(np.asarray(self.applied).sum())}, "
+                f"dropped={int(np.asarray(self.dropped).sum())}, "
+                f"deferred={int(np.asarray(self.deferred).sum())})")
 
 
 def _writer_set_local(keys, vals, qk, qv, live, *, n_shards, capacity, axis,
@@ -491,13 +546,69 @@ def _writer_set_local(keys, vals, qk, qv, live, *, n_shards, capacity, axis,
     return status[None], ok[None], nk[None], nv[None]
 
 
+def _writer_set_local_faulted(keys, vals, qk, qv, live, frows, *, n_shards,
+                              capacity, axis, neighborhood, val_words,
+                              max_steps, max_search, max_moves):
+    """Owner-side SET serving under injected faults — the recovery
+    drill's first act.  Same wire pattern as :func:`_writer_set_local`,
+    with two deliberate differences:
+
+    * each request's packed fault row rides its payload through
+      dispatch (``transport.triggered_chain_stateful(faults=...)``) and
+      arms the writer chain for exactly that request
+      (``run_one_faulted`` — torn commit), so the fault lands wherever
+      the request lands, like a WQE corruption traveling with the WQE;
+    * an *armed* row never escalates to the displacer: a killed
+      writer's response region still holds the pre-set
+      ``SET_NEEDS_DISPLACEMENT`` default, and escalating on it would
+      run a clean displacement that silently papers over the fault.
+      Armed rows return their (possibly non-terminal) status as-is —
+      turning that into fsck + repair + re-issue is the service's job
+      (:meth:`repro.rdma.failure.ShardedKVService.set_reliable`).
+    """
+    q = qk.reshape(-1)
+    dest = shard_of(q, n_shards)
+    n_buckets = keys.shape[1]
+    lv = live.reshape(-1)
+    fr = frows.reshape(-1, faults_mod.FIELDS)
+    writer = programs.build_hopscotch_writer(n_buckets, val_words,
+                                             neighborhood)
+    payload = writer.device_payloads(q, hopscotch.bucket_of(q, n_buckets),
+                                     qv.reshape(-1, val_words))
+
+    resp, ok, (nk, nv) = transport.triggered_chain_stateful(
+        _guarded_step(writer.run_one, max_steps, writer.run_one_faulted),
+        (keys[0], vals[0]), payload, dest, n_shards, capacity, axis, 1,
+        lv, faults=fr)
+    status = resp[:, 0]
+    armed = faults_mod.FaultPlan.from_row(fr).active()
+    live2 = ok & (status == programs.SET_NEEDS_DISPLACEMENT) & ~armed
+
+    if neighborhood < 2 or max_search < neighborhood:
+        status = jnp.where(live2, jnp.int32(programs.SET_NEEDS_RESIZE),
+                           status)
+        return status[None], ok[None], nk[None], nv[None]
+
+    disp = programs.build_hopscotch_displacer(
+        n_buckets, val_words, neighborhood, max_search, max_moves)
+    payload2 = disp.device_payloads(q, hopscotch.bucket_of(q, n_buckets),
+                                    qv.reshape(-1, val_words))
+    disp_steps = max(max_steps, disp.fuel)
+    resp2, ok2, (nk, nv) = transport.triggered_chain_stateful(
+        _guarded_step(disp.run_one, disp_steps), (nk, nv), payload2,
+        dest, n_shards, capacity, axis, 1, live2)
+    status = jnp.where(live2 & ok2, resp2[:, 0], status)
+    return status[None], ok[None], nk[None], nv[None]
+
+
 def sharded_set(mesh: Mesh, axis: str, keys: jnp.ndarray, vals: jnp.ndarray,
                 set_keys: jnp.ndarray, set_vals: jnp.ndarray,
                 neighborhood: int = 8, capacity: Optional[int] = None,
                 live: Optional[jnp.ndarray] = None,
                 max_steps: int = 512,
                 max_search: int = hopscotch.DEFAULT_MAX_SEARCH,
-                max_moves: int = hopscotch.DEFAULT_MAX_MOVES
+                max_moves: int = hopscotch.DEFAULT_MAX_MOVES,
+                faults: Optional[faults_mod.FaultPlan] = None
                 ) -> Tuple[SetResult, jnp.ndarray, jnp.ndarray]:
     """Batched chain-offloaded distributed SET — displacement included.
 
@@ -518,6 +629,13 @@ def sharded_set(mesh: Mesh, axis: str, keys: jnp.ndarray, vals: jnp.ndarray,
     a request uncommitted.  Returns ``(SetResult, new_keys, new_vals)``;
     the caller must adopt the returned arrays (functional update, like
     any jnp state).
+
+    ``faults`` (optional): a :class:`repro.core.faults.FaultPlan` with
+    ``(S, B_local)`` leaves — per-request fault injection into the
+    writer stage (armed rows commit torn state and never escalate; see
+    :func:`_writer_set_local_faulted`).  The interpreter is the
+    authority on fault semantics; recovery is
+    :meth:`repro.rdma.failure.ShardedKVService.set_reliable`.
     """
     _check_key_batch(set_keys, what="set", allow_zero=True, live=live)
     n_shards = mesh.shape[axis]
@@ -537,9 +655,14 @@ def sharded_set(mesh: Mesh, axis: str, keys: jnp.ndarray, vals: jnp.ndarray,
             keys, vals)
 
     mapped = _mapped_set(mesh, axis, n_shards, capacity, neighborhood,
-                         vals.shape[-1], max_steps, max_search, max_moves)
-    status, ok, dropped, deferred, nk, nv = mapped(keys, vals, set_keys,
-                                                   set_vals, live)
+                         vals.shape[-1], max_steps, max_search, max_moves,
+                         faulted=faults is not None)
+    if faults is not None:
+        status, ok, dropped, deferred, nk, nv = mapped(
+            keys, vals, set_keys, set_vals, live, faults.as_rows())
+    else:
+        status, ok, dropped, deferred, nk, nv = mapped(keys, vals, set_keys,
+                                                       set_vals, live)
     applied = ok & ((status == programs.SET_UPDATED)
                     | (status == programs.SET_INSERTED)
                     | (status == programs.SET_DISPLACED))
@@ -548,33 +671,50 @@ def sharded_set(mesh: Mesh, axis: str, keys: jnp.ndarray, vals: jnp.ndarray,
 
 def _mapped_set(mesh: Mesh, axis: str, n_shards: int, capacity: int,
                 neighborhood: int, val_words: int, max_steps: int,
-                max_search: int, max_moves: int):
+                max_search: int, max_moves: int, faulted: bool = False):
     """Compile-cache the sharded set per (mesh geometry, path geometry),
     like :func:`_mapped_get` — one trace of the writer + displacer scan
-    serves every subsequent batch of the same shape."""
-    key = ("set", _mesh_fingerprint(mesh), axis, n_shards, capacity,
-           neighborhood, val_words, max_steps, max_search, max_moves)
+    serves every subsequent batch of the same shape.  The faulted
+    variant caches separately ("set-faulted") and takes the packed
+    fault rows as one more sharded input — fault *parameters* stay
+    traced, so a whole cut-point sweep reuses a single compile."""
+    key = ("set-faulted" if faulted else "set", _mesh_fingerprint(mesh),
+           axis, n_shards, capacity, neighborhood, val_words, max_steps,
+           max_search, max_moves)
     cached = _MAPPED_CACHE.get(key)
     if cached is not None:
         return cached
     path = functools.partial(
-        _writer_set_local, n_shards=n_shards, capacity=capacity, axis=axis,
+        _writer_set_local_faulted if faulted else _writer_set_local,
+        n_shards=n_shards, capacity=capacity, axis=axis,
         neighborhood=neighborhood, val_words=val_words,
         max_steps=max_steps, max_search=max_search, max_moves=max_moves)
 
-    def body(keys, vals, qk, qv, live):
-        # unused (key-0) slots are inert: no dispatch slot, no counter
-        real = qk != hopscotch.EMPTY
-        live = live & real
-        status, ok, nk, nv = path(keys, vals, qk, qv, live)
-        deferred = jnp.sum(~live & real, dtype=jnp.int32).reshape(1)
-        dropped = (jnp.sum(live, dtype=jnp.int32)
-                   - jnp.sum(ok, dtype=jnp.int32)).reshape(1)
-        return status, ok, dropped, deferred, nk, nv
+    if faulted:
+        def body(keys, vals, qk, qv, live, frows):
+            real = qk != hopscotch.EMPTY
+            live = live & real
+            status, ok, nk, nv = path(keys, vals, qk, qv, live, frows)
+            deferred = jnp.sum(~live & real, dtype=jnp.int32).reshape(1)
+            dropped = (jnp.sum(live, dtype=jnp.int32)
+                       - jnp.sum(ok, dtype=jnp.int32)).reshape(1)
+            return status, ok, dropped, deferred, nk, nv
+        n_in = 6
+    else:
+        def body(keys, vals, qk, qv, live):
+            # unused (key-0) slots are inert: no dispatch slot, no counter
+            real = qk != hopscotch.EMPTY
+            live = live & real
+            status, ok, nk, nv = path(keys, vals, qk, qv, live)
+            deferred = jnp.sum(~live & real, dtype=jnp.int32).reshape(1)
+            dropped = (jnp.sum(live, dtype=jnp.int32)
+                       - jnp.sum(ok, dtype=jnp.int32)).reshape(1)
+            return status, ok, dropped, deferred, nk, nv
+        n_in = 5
 
     spec = P(axis)
     fn = jax.jit(shard_map(
-        body, mesh=mesh, in_specs=(spec,) * 5, out_specs=(spec,) * 6,
+        body, mesh=mesh, in_specs=(spec,) * n_in, out_specs=(spec,) * 6,
         check_vma=False))
     _MAPPED_CACHE[key] = fn
     return fn
@@ -626,6 +766,39 @@ class MigrateReport(NamedTuple):
     #                              parks on the first such bucket)
 
 
+class ResizeStuck(RuntimeError):
+    """A resize quantum made no progress: a shard's watermark is parked
+    on a bucket whose resident cannot be placed in the doubled frame
+    even by the bounded displacer (its whole new-frame neighborhood is
+    full of immovable keys).
+
+    The silent alternative — leaving the watermark parked and reporting
+    nothing — deadlocks the escalation loop (each quantum re-runs the
+    same stuck lap forever); the old generic ``RuntimeError`` named the
+    symptom but not the bucket.  This error carries the parked
+    (shard, bucket) pairs so the operator — or a double-growth
+    escalation — knows exactly where the dead end is.
+    """
+
+    def __init__(self, shards, buckets, message: Optional[str] = None):
+        self.shards = [int(s) for s in shards]
+        self.buckets = [int(b) for b in buckets]
+        if message is None:
+            where = ", ".join(
+                f"shard {s} bucket {b}"
+                for s, b in zip(self.shards, self.buckets))
+            message = (
+                f"resize stuck: resident unplaceable in the doubled "
+                f"frame even displaced ({where}); the table needs "
+                f"another growth step or a larger displacement budget")
+        super().__init__(message)
+
+    @property
+    def stuck(self):
+        """``[(shard, bucket), ...]`` — every parked migration."""
+        return list(zip(self.shards, self.buckets))
+
+
 def begin_resize(keys: jnp.ndarray, vals: jnp.ndarray) -> ResizeState:
     """Open the doubled frame next to the live one (watermark 0).
 
@@ -670,8 +843,8 @@ def finish_resize(rs: ResizeState) -> Tuple[jnp.ndarray, jnp.ndarray]:
     return rs.new_keys, rs.new_vals
 
 
-def _resize_local(ok, ov, nk, nv, wm, *, step, neighborhood, val_words,
-                  max_search, max_moves):
+def _resize_local(ok, ov, nk, nv, wm, frows=None, *, step, neighborhood,
+                  val_words, max_search, max_moves):
     """One owner-shard migration quantum (no collectives: the requests
     originate at the shard that owns the buckets — a loopback QP, see
     ``transport.local_chain_stateful``).
@@ -683,6 +856,17 @@ def _resize_local(ok, ov, nk, nv, wm, *, step, neighborhood, val_words,
     past everything that resolved and parks on the first stuck bucket —
     so the serving invariant "behind the watermark means not in the old
     frame" survives even the (pathological) double-growth dead end.
+
+    ``frows`` (optional): (step, FIELDS) packed per-lap fault rows —
+    lap ``i`` of the quantum runs under its
+    :class:`repro.core.faults.FaultPlan` (this is how "shard dies at
+    migration lap j" is modeled: the loopback chain for that bucket is
+    interrupted mid-flight).  An armed lap commits its torn image,
+    never escalates, and **parks the watermark**: the quantum's
+    watermark stops at the first lap whose fault actually fired, so
+    the next quantum — after fsck + repair — re-drives exactly the
+    interrupted bucket (an already-drained later bucket re-runs as a
+    no-op lap).
     """
     n = ok.shape[1]
     mig = programs.build_hopscotch_migrator(n, val_words, neighborhood)
@@ -693,13 +877,25 @@ def _resize_local(ok, ov, nk, nv, wm, *, step, neighborhood, val_words,
     pay = mig.device_payloads(b_safe, ok[0])
     pay = pay * valid[:, None].astype(pay.dtype)
 
-    resp, (tk, tv, gk, gv) = transport.local_chain_stateful(
-        _guarded_step(mig.run_one, mig.fuel),
-        (ok[0], ov[0], nk[0], nv[0]), pay)
+    if frows is None:
+        resp, (tk, tv, gk, gv) = transport.local_chain_stateful(
+            _guarded_step(mig.run_one, mig.fuel),
+            (ok[0], ov[0], nk[0], nv[0]), pay)
+        fired = jnp.zeros((step,), jnp.bool_)
+    else:
+        resp, (tk, tv, gk, gv) = transport.local_chain_stateful(
+            _guarded_step(mig.run_one, mig.fuel, mig.run_one_faulted),
+            (ok[0], ov[0], nk[0], nv[0]), pay, faults=frows)
+        # a fault only *fires* on a lap that ran a chain: an EMPTY
+        # source bucket's lap is guarded out before the fault could act
+        fired = (faults_mod.FaultPlan.from_row(frows).active()
+                 & (pay[:, 0] != hopscotch.EMPTY))
     st = resp[:, 0]
 
     # --- escalation: the bounded bubble, on the doubled frame ------------
-    esc = valid & (st == programs.MIG_NEEDS_DISPLACE)
+    # an armed lap's status may be the pre-set NEEDS_DISPLACE default —
+    # escalating on it would paper over the fault with a clean bubble
+    esc = valid & (st == programs.MIG_NEEDS_DISPLACE) & ~fired
     ms = min(max(max_search, neighborhood), 2 * n)
     if neighborhood >= 2 and ms >= neighborhood:
         disp = programs.build_hopscotch_displacer(
@@ -729,7 +925,9 @@ def _resize_local(ok, ov, nk, nv, wm, *, step, neighborhood, val_words,
 
     stuck = esc & ~placed
     first_stuck = jnp.min(jnp.where(stuck, buckets, n))
-    new_w = jnp.minimum(jnp.minimum(w + step, n), first_stuck)
+    first_fault = jnp.min(jnp.where(fired & valid, buckets, n))
+    new_w = jnp.minimum(jnp.minimum(w + step, n),
+                        jnp.minimum(first_stuck, first_fault))
 
     def count(m):
         return jnp.sum(m, dtype=jnp.int32).reshape(1)
@@ -744,7 +942,8 @@ def _resize_local(ok, ov, nk, nv, wm, *, step, neighborhood, val_words,
 def sharded_resize(mesh: Mesh, axis: str, rs: ResizeState, step: int = 16,
                    neighborhood: int = 8,
                    max_search: int = hopscotch.DEFAULT_MAX_SEARCH,
-                   max_moves: int = hopscotch.DEFAULT_MAX_MOVES
+                   max_moves: int = hopscotch.DEFAULT_MAX_MOVES,
+                   faults: Optional[faults_mod.FaultPlan] = None
                    ) -> Tuple[ResizeState, MigrateReport]:
     """Advance the migration by up to ``step`` source buckets per shard.
 
@@ -755,28 +954,47 @@ def sharded_resize(mesh: Mesh, axis: str, rs: ResizeState, step: int = 16,
     freely between quanta via :func:`sharded_get_migrating` /
     :func:`sharded_set_migrating`.  Returns the advanced state and a
     :class:`MigrateReport`.
+
+    ``faults`` (optional): a :class:`repro.core.faults.FaultPlan` with
+    ``(S, step)`` leaves — per-lap fault injection (a shard dying at
+    lap j of the quantum).  A fired lap commits torn state and parks
+    the watermark on its bucket; see :func:`_resize_local`.
     """
     mapped = _mapped_resize(mesh, axis, step, neighborhood,
-                            rs.vals.shape[-1], max_search, max_moves)
-    (tk, tv, gk, gv, wm, moved, disc, escd, stuck) = mapped(
-        rs.keys, rs.vals, rs.new_keys, rs.new_vals, rs.watermark)
+                            rs.vals.shape[-1], max_search, max_moves,
+                            faulted=faults is not None)
+    if faults is not None:
+        (tk, tv, gk, gv, wm, moved, disc, escd, stuck) = mapped(
+            rs.keys, rs.vals, rs.new_keys, rs.new_vals, rs.watermark,
+            faults.as_rows())
+    else:
+        (tk, tv, gk, gv, wm, moved, disc, escd, stuck) = mapped(
+            rs.keys, rs.vals, rs.new_keys, rs.new_vals, rs.watermark)
     return (ResizeState(tk, tv, gk, gv, wm),
             MigrateReport(moved, disc, escd, stuck))
 
 
 def _mapped_resize(mesh: Mesh, axis: str, step: int, neighborhood: int,
-                   val_words: int, max_search: int, max_moves: int):
-    key = ("resize", _mesh_fingerprint(mesh), axis, step, neighborhood,
+                   val_words: int, max_search: int, max_moves: int,
+                   faulted: bool = False):
+    key = ("resize-faulted" if faulted else "resize",
+           _mesh_fingerprint(mesh), axis, step, neighborhood,
            val_words, max_search, max_moves)
     cached = _MAPPED_CACHE.get(key)
     if cached is not None:
         return cached
-    body = functools.partial(
-        _resize_local, step=step, neighborhood=neighborhood,
-        val_words=val_words, max_search=max_search, max_moves=max_moves)
+    kw = dict(step=step, neighborhood=neighborhood, val_words=val_words,
+              max_search=max_search, max_moves=max_moves)
+    if faulted:
+        def body(ok, ov, nk, nv, wm, frows):
+            return _resize_local(ok, ov, nk, nv, wm, frows[0], **kw)
+        n_in = 6
+    else:
+        body = functools.partial(_resize_local, **kw)
+        n_in = 5
     spec = P(axis)
     fn = jax.jit(shard_map(
-        body, mesh=mesh, in_specs=(spec,) * 5, out_specs=(spec,) * 9,
+        body, mesh=mesh, in_specs=(spec,) * n_in, out_specs=(spec,) * 9,
         check_vma=False))
     _MAPPED_CACHE[key] = fn
     return fn
@@ -1036,6 +1254,33 @@ def _mapped_mig_set(mesh: Mesh, axis: str, n_shards: int, capacity: int,
         check_vma=False))
     _MAPPED_CACHE[key] = fn
     return fn
+
+
+# ---------------------------------------------------------------------------
+# crash recovery primitive (fsck's repair driver applies its policy
+# through this — see repro.kvstore.fsck)
+# ---------------------------------------------------------------------------
+
+def repair_bucket(keys: jnp.ndarray, vals: jnp.ndarray, shard: int,
+                  bucket: int, key: int = hopscotch.EMPTY,
+                  val=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Rewrite one bucket (key word + value row) of one shard's frame.
+
+    The host-side equivalent of an ``emit_bucket_vacate`` chain aimed at
+    a known-torn bucket: recovery runs *between* serving quanta with the
+    frame quiesced, so a plain functional update is faithful — there is
+    no concurrent chain whose CAS could interleave.  Defaults vacate the
+    bucket (key EMPTY, zero row), matching the invariant ``fsck``
+    enforces: an EMPTY bucket's value row is all-zero.  Returns the
+    updated ``(keys, vals)`` — works on either frame of a
+    :class:`ResizeState` (pass ``rs.new_keys``/``rs.new_vals`` for the
+    doubled frame).
+    """
+    row = (jnp.zeros((vals.shape[-1],), vals.dtype) if val is None
+           else jnp.asarray(val, vals.dtype))
+    keys = keys.at[shard, bucket].set(jnp.asarray(key, keys.dtype))
+    vals = vals.at[shard, bucket].set(row)
+    return keys, vals
 
 
 # ---------------------------------------------------------------------------

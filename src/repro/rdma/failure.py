@@ -19,11 +19,33 @@ from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..core import faults as faults_mod
 from ..core import programs
 # module alias, not from-import of names: kvstore.store itself imports
 # repro.rdma (transport/isolation), so its class definitions may not have
 # executed yet when this module loads — attributes are resolved at call time
 from ..kvstore import store as kv_store
+
+
+class ChainInterrupted(RuntimeError):
+    """A chain-offloaded request could not be completed within the
+    recovery retry budget: every attempt either faulted or came back
+    with a non-terminal status, and fsck + repair + re-issue did not
+    converge.  Carries what the operator needs: the key, the attempt
+    count, and the last status observed.  Distinct from
+    :class:`repro.kvstore.store.ResizeStuck` (a capacity dead end, not
+    an interrupted chain)."""
+
+    def __init__(self, key: int, attempts: int, last_status: int,
+                 fsck_clean: bool):
+        self.key = int(key)
+        self.attempts = int(attempts)
+        self.last_status = int(last_status)
+        self.fsck_clean = bool(fsck_clean)
+        super().__init__(
+            f"set of key {self.key:#x} interrupted and unrecovered after "
+            f"{self.attempts} attempts (last status {self.last_status}, "
+            f"fsck {'clean' if fsck_clean else 'NOT clean'})")
 
 
 class HostDriver:
@@ -119,6 +141,11 @@ class ShardedKVService(_HostDriverLifecycle):
     auto_resize: bool = True       # SET_NEEDS_RESIZE escalates to growth
     resize_quantum: int = 16       # buckets migrated per serving call
     resizes_completed: int = 0
+    # -- crash-consistent retry (interrupted chains, not dead drivers) -------
+    retry_budget: int = 4          # re-issues before ChainInterrupted
+    backoff_base_s: float = 1e-4   # first retry delay (doubles per attempt)
+    backoff_cap_s: float = 0.05    # exponential backoff ceiling
+    repairs_applied: int = 0       # fsck repairs across the service lifetime
 
     @classmethod
     def start(cls, items: Sequence[Tuple[int, Sequence[int]]],
@@ -226,9 +253,12 @@ class ShardedKVService(_HostDriverLifecycle):
             step=step or self.resize_quantum)
         after = int(np.asarray(self.resize.watermark).min())
         if after == before and int(np.asarray(report.stuck).sum()):
-            raise RuntimeError(
-                "resize stalled: a bucket is unplaceable even through "
-                "the doubled frame's displacer (double growth needed)")
+            stuck = np.asarray(report.stuck)
+            wm = np.asarray(self.resize.watermark)
+            shards = [s for s in range(len(stuck)) if stuck[s] > 0]
+            # the watermark parks exactly on the bucket the quantum
+            # could not place — that *is* the stuck bucket
+            raise kv_store.ResizeStuck(shards, [int(wm[s]) for s in shards])
         if kv_store.resize_done(self.resize):
             self.keys, self.vals = kv_store.finish_resize(self.resize)
             self.resize = None
@@ -266,3 +296,87 @@ class ShardedKVService(_HostDriverLifecycle):
         status = int(np.asarray(res.status)[0, 0])
         return status in (programs.SET_UPDATED, programs.SET_INSERTED,
                           programs.SET_DISPLACED)
+
+    # -- crash-consistent recovery (§ robustness: interrupted chains) --------
+    def fsck_and_repair(self):
+        """Audit the store's frames for torn state and mend what the
+        policy knows how to mend (:mod:`repro.kvstore.fsck`).  Host-side
+        and quiesced by construction — recovery runs *between* serving
+        calls.  Returns the pre-repair :class:`~repro.kvstore.fsck.
+        FsckReport`; the applied-repair count accumulates on
+        ``repairs_applied``."""
+        from ..kvstore import fsck
+
+        h = self.kv.neighborhood
+        if self.resize is not None:
+            report = fsck.check_invariants(resize=self.resize,
+                                           neighborhood=h)
+            if not report.clean:
+                self.resize, actions = fsck.repair_resize(
+                    self.resize, report, neighborhood=h)
+                self.repairs_applied += len(actions)
+        else:
+            report = fsck.check_invariants(self.keys, self.vals,
+                                           neighborhood=h)
+            if not report.clean:
+                self.keys, self.vals, actions = fsck.repair(
+                    self.keys, self.vals, report, neighborhood=h)
+                self.repairs_applied += len(actions)
+        return report
+
+    def set_reliable(self, key: int, value: Sequence[int],
+                     faults: Optional["faults_mod.FaultPlan"] = None
+                     ) -> Tuple[int, int]:
+        """One SET that *survives interrupted chains*: issue, and on any
+        non-terminal outcome run fsck + repair and re-issue with bounded
+        exponential backoff (``backoff_base_s`` doubling up to
+        ``backoff_cap_s``, at most ``retry_budget`` re-issues).
+
+        ``faults`` (a scalar :class:`repro.core.faults.FaultPlan`) arms
+        the *first* attempt's writer chain — the recovery drill: the
+        fault fires once (a chain is not re-killed by the same crash),
+        every retry runs clean against whatever torn state the first
+        attempt left.  Injection needs the steady-state path; if a
+        resize is in flight the plan is not armed (lap faults go through
+        ``sharded_resize(faults=...)`` instead).
+
+        Returns ``(status, attempts)`` on success; raises
+        :class:`ChainInterrupted` when the budget is exhausted — with
+        the store *fsck-clean* (the failed retries never leave torn
+        state behind; that is the half of the §5.6 claim a dead driver
+        cannot test)."""
+        import jax.numpy as jnp
+
+        kv_store.ShardedKV.check_key(key)
+        n_shards = self.kv.n_shards
+        qk = np.zeros((n_shards, 1), np.int32)
+        qk[0, 0] = key
+        qv = np.zeros((n_shards, 1, self.kv.val_words), np.int32)
+        qv[0, 0, :len(value)] = value
+
+        plan = None
+        if faults is not None and self.resize is None:
+            rows = np.full((n_shards, 1, faults_mod.FIELDS), faults_mod.NONE,
+                           np.int32)
+            rows[0, 0] = np.asarray(faults.as_rows(), np.int32)
+            plan = faults_mod.FaultPlan.from_row(jnp.asarray(rows))
+
+        last_status = 0
+        attempts = 0
+        for attempt in range(self.retry_budget + 1):
+            if attempt:
+                time.sleep(min(self.backoff_base_s * (2 ** (attempt - 1)),
+                               self.backoff_cap_s))
+            kwargs = {} if plan is None else {"faults": plan}
+            plan = None          # the injected fault fires exactly once
+            res = self.set_many(qk, qv, **kwargs)
+            attempts = attempt + 1
+            last_status = int(np.asarray(res.status)[0, 0])
+            if last_status in (programs.SET_UPDATED, programs.SET_INSERTED,
+                               programs.SET_DISPLACED):
+                return last_status, attempts
+            # non-terminal (or needs-resize with auto_resize off): the
+            # chain was interrupted — audit, mend, re-issue
+            self.fsck_and_repair()
+        report = self.fsck_and_repair()
+        raise ChainInterrupted(key, attempts, last_status, report.clean)

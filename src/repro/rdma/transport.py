@@ -152,7 +152,8 @@ def triggered_chain(remote_fn: Callable, payload: jnp.ndarray,
 def triggered_chain_stateful(step_fn: Callable, carry, payload: jnp.ndarray,
                              dest: jnp.ndarray, n_shards: int, capacity: int,
                              axis_name: str, resp_words: int,
-                             live: Optional[jnp.ndarray] = None):
+                             live: Optional[jnp.ndarray] = None,
+                             faults: Optional[jnp.ndarray] = None):
     """SEND-triggered chains that *mutate* owner state (the §3.5 read-write
     offload — the SET path's wire pattern).
 
@@ -175,16 +176,36 @@ def triggered_chain_stateful(step_fn: Callable, carry, payload: jnp.ndarray,
     row of a ``live2 <= ok1`` subset gets a rank <= its stage-1 rank, so
     at equal capacity the escalation stage can never introduce new drops
     — the invariant ``test_escalation_subset_never_drops`` pins down.
+
+    ``faults`` (optional): (B, ``faults_mod.FIELDS``) int32 packed
+    :class:`repro.core.faults.FaultPlan` rows, one per request.  A
+    request's fault *rides its payload through dispatch* — the columns
+    are concatenated onto the payload, routed in the same collective,
+    and split back off at the receive window — so the fault lands on
+    whatever shard (and window slot) the request lands on, exactly like
+    a real WQE corruption travels with the WQE.  When present,
+    ``step_fn`` receives ``(payload_row, fault_row)`` tuples.
     """
-    recv, pos, ok = dispatch(payload, dest, n_shards, capacity, axis_name,
-                             live)
-    flat = recv.reshape(-1, recv.shape[-1])
-    carry, resp = lax.scan(step_fn, carry, flat)
+    if faults is not None:
+        wire = jnp.concatenate(
+            [payload, faults.astype(payload.dtype)], axis=1)
+        recv, pos, ok = dispatch(wire, dest, n_shards, capacity,
+                                 axis_name, live)
+        flat = recv.reshape(-1, recv.shape[-1])
+        w = payload.shape[1]
+        carry, resp = lax.scan(step_fn, carry,
+                               (flat[:, :w], flat[:, w:]))
+    else:
+        recv, pos, ok = dispatch(payload, dest, n_shards, capacity,
+                                 axis_name, live)
+        flat = recv.reshape(-1, recv.shape[-1])
+        carry, resp = lax.scan(step_fn, carry, flat)
     resp = resp.reshape(n_shards, capacity, resp_words)
     return combine(resp, dest, pos, ok, axis_name), ok, carry
 
 
-def local_chain_stateful(step_fn: Callable, carry, payload: jnp.ndarray):
+def local_chain_stateful(step_fn: Callable, carry, payload: jnp.ndarray,
+                         faults: Optional[jnp.ndarray] = None):
     """Loopback chains: the owner triggers its *own* pre-posted chain.
 
     Maintenance offloads — table growth, compaction — originate at the
@@ -200,8 +221,19 @@ def local_chain_stateful(step_fn: Callable, carry, payload: jnp.ndarray):
     ``step_fn(carry, request_row) -> (carry, resp_row)``; zero-padded
     rows must be self-guarding (the chain programs' null guard WQ).
     Returns ``(responses (B, resp_words), final_carry)``.
+
+    ``faults`` (optional): (B, FIELDS) packed
+    :class:`repro.core.faults.FaultPlan` rows — no dispatch here, so
+    they are simply scanned alongside the payload; ``step_fn`` then
+    receives ``(payload_row, fault_row)`` tuples.  Modeling note: a
+    loopback lap's fault is the *shard itself* dying mid-lap, which is
+    why the migration cut-point sweep drives this path.
     """
-    carry, resp = lax.scan(step_fn, carry, payload)
+    if faults is not None:
+        carry, resp = lax.scan(step_fn, carry,
+                               (payload, faults.astype(payload.dtype)))
+    else:
+        carry, resp = lax.scan(step_fn, carry, payload)
     return resp, carry
 
 

@@ -431,6 +431,90 @@ def test_displace_move_vacate_cas_guards_raced_mover():
     assert mem[table] == 777
 
 
+# --- bucket-vacate (the migrator's tail) --------------------------------------
+
+def _build_vacate(bucket_keys, bucket_rows, target, *, repeats=1, V=2):
+    """One doorbell-ordered ctl WQ running ``repeats`` back-to-back
+    bucket-vacates of ``table[target]``; returns (spec, st0, probes)."""
+    from repro.core import assembler
+    BW = 3
+    p = assembler.Program(1024)
+    n = len(bucket_keys)
+    flat = [w for row in bucket_rows for w in row]
+    vals = p.alloc(n * V, flat, "vals")
+    tbl_init = []
+    for b, key in enumerate(bucket_keys):
+        tbl_init += [key, b, vals + b * V]
+    table = p.alloc(n * BW, tbl_init, "table")
+    zeros = p.alloc(V, [0] * V)
+    bucket_w = p.word(table + target * BW)
+    ctl = p.add_wq(8 * repeats + 2, managed=True,
+                   ordering=isa.ORD_DOORBELL, initial_enable=99)
+    for _ in range(repeats):
+        constructs.emit_bucket_vacate(ctl, bucket_w=bucket_w, val_len=V,
+                                      zeros=zeros)
+    spec, st0 = p.finalize()
+    return spec, st0, (table, vals, BW, V, n)
+
+
+def _vacate_outcome(spec, st0, backend, max_steps=64):
+    from repro.core.engine import ChainEngine
+    if backend == "interp":
+        return np.asarray(machine.run(spec, st0, max_steps).mem)
+    eng = ChainEngine.for_spec(spec, backend)
+    batch = jax.tree_util.tree_map(lambda a: jnp.stack([a]), st0)
+    return np.asarray(eng.run_batch(batch, max_steps).mem[0])
+
+
+@pytest.mark.parametrize("backend", ["interp", "pallas-interpret"])
+def test_bucket_vacate_already_empty_is_noop(backend):
+    """Vacating an EMPTY bucket must leave keys AND value rows untouched:
+    the CAS trivially retires 0 -> 0 and the row zeroing rewrites an
+    already-zero row (the re-driven-lap idempotency recovery relies on)."""
+    keys = [101, 0, 103]
+    rows = [[11, 12], [0, 0], [31, 32]]
+    spec, st0, (table, vals, BW, V, n) = _build_vacate(keys, rows, target=1)
+    mem = _vacate_outcome(spec, st0, backend)
+    for b in range(n):
+        assert mem[table + b * BW] == keys[b], backend
+        assert mem[vals + b * V: vals + (b + 1) * V].tolist() == rows[b]
+
+
+@pytest.mark.parametrize("backend", ["interp", "pallas-interpret"])
+def test_bucket_vacate_double_execution_idempotent(backend):
+    """Two back-to-back vacates of a live bucket == one: the second pass
+    lands on the EMPTY bucket and is a no-op on keys and value rows."""
+    keys = [101, 102, 103]
+    rows = [[11, 12], [21, 22], [31, 32]]
+    once = _build_vacate(keys, rows, target=1, repeats=1)
+    twice = _build_vacate(keys, rows, target=1, repeats=2)
+    mem1 = _vacate_outcome(*once[:2], backend)
+    mem2 = _vacate_outcome(*twice[:2], backend, max_steps=128)
+    table, vals, BW, V, n = once[2]
+    # the vacate itself: key retired, row zeroed, neighbours untouched
+    assert mem1[table + 1 * BW] == 0
+    assert mem1[vals + V: vals + 2 * V].tolist() == [0] * V
+    assert mem1[table] == 101 and mem1[table + 2 * BW] == 103
+    # second execution changed nothing in the data regions
+    t2, v2, *_ = twice[2]
+    for b in range(n):
+        assert mem2[t2 + b * BW] == mem1[table + b * BW], backend
+        np.testing.assert_array_equal(mem2[v2 + b * V: v2 + (b + 1) * V],
+                                      mem1[vals + b * V: vals + (b + 1) * V])
+
+
+@pytest.mark.parametrize("backend", ["interp", "pallas-interpret"])
+def test_bucket_vacate_interp_pallas_parity(backend):
+    """Both backends agree word-for-word on the whole image (not just the
+    data regions) for the empty-bucket no-op run."""
+    keys = [7, 0]
+    rows = [[70, 71], [0, 0]]
+    spec, st0, _ = _build_vacate(keys, rows, target=1)
+    ref = _vacate_outcome(spec, st0, "interp")
+    got = _vacate_outcome(spec, st0, backend)
+    np.testing.assert_array_equal(got, ref)
+
+
 def test_enable_branch_rejects_id_mask_threshold():
     """threshold+1 must stay inside the 24-bit id space: at ID_MASK the
     packed else-comparand would wrap to 0 and BOTH arms could convert."""

@@ -1,0 +1,768 @@
+"""Fault-injection harness + crash-consistent recovery tests.
+
+The robustness claim under test: a chain that dies *mid-flight* (not a
+dead host driver — PR 3 covered that) leaves a torn device state that
+``fsck`` can classify and repair, and a repaired re-issue converges
+bit-exactly to the host oracle.  The interpreter is the authority on
+fault semantics (``machine.run(..., faults=...)``); the pallas backend
+keeps bit-exact parity on the one fault it supports (fuel truncation).
+
+The heart of the file is the exhaustive cut-point sweeps: every step of
+a displacement bubble and of a migration lap is killed once, and every
+resulting torn state must be classified, repaired, and re-driven to the
+oracle's exact answer.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import assembler, machine, programs
+from repro.core import faults as faults_mod
+from repro.core.engine import ChainEngine
+from repro.kvstore import fsck, hopscotch, store
+from repro.rdma import failure
+
+TERMINAL_SET = (programs.SET_UPDATED, programs.SET_INSERTED,
+                programs.SET_DISPLACED)
+TERMINAL_MIG = (programs.MIG_MOVED, programs.MIG_DISCARDED)
+
+
+def _one_shard_mesh():
+    return Mesh(np.array(jax.devices()[:1]), ("kv",))
+
+
+# --- FaultPlan basics --------------------------------------------------------
+
+def test_fault_plan_row_roundtrip():
+    p = faults_mod.FaultPlan(jnp.int32(3), jnp.int32(-1), jnp.int32(0),
+                             jnp.int32(-1))
+    row = p.as_rows()
+    assert row.shape == (faults_mod.FIELDS,)
+    q = faults_mod.FaultPlan.from_row(row)
+    for a, b in zip(p, q):
+        assert int(a) == int(b)
+    assert bool(p.active())
+    assert not bool(faults_mod.FaultPlan.none().active())
+
+
+def test_kill_lap_plan_shape_and_semantics():
+    p = faults_mod.FaultPlan.kill_lap(6, lap=2, step=9)
+    kill = np.asarray(p.kill_step)
+    assert kill.tolist() == [-1, -1, 9, 0, 0, 0]
+    # laps before the crash are disarmed, the rest are armed
+    assert np.asarray(p.active()).tolist() == [False, False] + [True] * 4
+
+
+def test_storm_is_seed_deterministic(monkeypatch):
+    a = faults_mod.storm(64, seed=7)
+    b = faults_mod.storm(64, seed=7)
+    np.testing.assert_array_equal(np.asarray(a.as_rows()),
+                                  np.asarray(b.as_rows()))
+    c = faults_mod.storm(64, seed=8)
+    assert not np.array_equal(np.asarray(a.as_rows()),
+                              np.asarray(c.as_rows()))
+    # CI rotates the seed through the environment
+    monkeypatch.setenv("FAULT_SEED", "12345")
+    assert faults_mod.storm_seed() == 12345
+    d = faults_mod.storm(64)
+    e = faults_mod.storm(64, seed=12345)
+    np.testing.assert_array_equal(np.asarray(d.as_rows()),
+                                  np.asarray(e.as_rows()))
+
+
+def test_pallas_supported_predicate():
+    assert faults_mod.FaultPlan.kill_at(5).pallas_supported()
+    assert faults_mod.FaultPlan.none().pallas_supported()
+    assert not faults_mod.FaultPlan.suppress_at(5).pallas_supported()
+    assert not faults_mod.FaultPlan.cas_fail_at(0).pallas_supported()
+    assert not faults_mod.FaultPlan.enable_zero_at(0).pallas_supported()
+
+
+# --- machine-level fault semantics -------------------------------------------
+
+def _three_writes():
+    """Plain WQ of three immediate writes, plus a fourth on a second WQ
+    gated on the *last* producer's completion count (the
+    completion-starvation probe: WAIT thresholds are monotonic counters,
+    so only a shortfall in the total count starves it)."""
+    p = assembler.Program(256)
+    a, b, c, d = (p.word(0) for _ in range(4))
+    wq = p.add_wq(4)
+    wq.write_imm(dst=a, value=11)
+    wq.write_imm(dst=b, value=22)
+    r2 = wq.write_imm(dst=c, value=33)
+    gated = p.add_wq(2)
+    gated.wait_for(r2)
+    gated.write_imm(dst=d, value=44)
+    spec, st0 = p.finalize()
+    return spec, st0, (a, b, c, d)
+
+
+def test_kill_truncates_at_exact_step():
+    # single WQ -> scheduling order == posting order, so kill_at(k)
+    # means exactly the first k writes landed
+    p = assembler.Program(256)
+    words = [p.word(0) for _ in range(3)]
+    wq = p.add_wq(4)
+    for i, w in enumerate(words):
+        wq.write_imm(dst=w, value=11 * (i + 1))
+    spec, st0 = p.finalize()
+    for k in range(4):
+        out = machine.run(spec, st0, 16,
+                          faults=faults_mod.FaultPlan.kill_at(k))
+        mem = np.asarray(out.mem)
+        want = [11 * (i + 1) if i < k else 0 for i in range(3)]
+        assert [mem[w] for w in words] == want, k
+        assert int(out.steps) == k
+
+
+def test_suppress_drops_effect_and_completion():
+    """The suppressed WR's write never lands, later WRs in the same WQ
+    still run (head advances), but the WAIT on its completion starves."""
+    spec, st0, (a, b, c, d) = _three_writes()
+    out = machine.run(spec, st0, 16,
+                      faults=faults_mod.FaultPlan.suppress_at(0))
+    mem = np.asarray(out.mem)
+    assert mem[a] == 0          # dropped WR: no effect
+    assert mem[b] == 22 and mem[c] == 33
+    # one completion short of the WAIT's threshold -> the gated WQ starves
+    assert mem[d] == 0
+    # clean run serves the gated write
+    clean = np.asarray(machine.run(spec, st0, 16).mem)
+    assert clean[d] == 44
+
+
+def test_cas_fault_forces_compare_miss():
+    p = assembler.Program(256)
+    x = p.word(5)
+    ret = p.word(0)
+    wq = p.add_wq(2)
+    wq.cas(dst=x, old=5, new=99, ret=ret)
+    spec, st0 = p.finalize()
+    out = machine.run(spec, st0, 8,
+                      faults=faults_mod.FaultPlan.cas_fail_at(0))
+    mem = np.asarray(out.mem)
+    assert mem[x] == 5          # the would-have-won CAS spuriously missed
+    assert mem[ret] == 5        # return-old still reports the true value
+    clean = np.asarray(machine.run(spec, st0, 8).mem)
+    assert clean[x] == 99
+
+
+def test_enable_zero_loses_the_doorbell():
+    p = assembler.Program(256)
+    d = p.word(0)
+    gated = p.add_wq(2, managed=True, ordering=machine.isa.ORD_DOORBELL,
+                     initial_enable=0)
+    gated.write_imm(dst=d, value=7)
+    ctl = p.add_wq(2)
+    ctl.enable(gated, upto=1)
+    spec, st0 = p.finalize()
+    out = machine.run(spec, st0, 8,
+                      faults=faults_mod.FaultPlan.enable_zero_at(0))
+    assert int(np.asarray(out.mem)[d]) == 0       # doorbell lost
+    clean = machine.run(spec, st0, 8)
+    assert int(np.asarray(clean.mem)[d]) == 7
+
+
+def test_disarmed_plan_is_bit_exact_with_clean_run():
+    spec, st0, _ = _three_writes()
+    clean = machine.run(spec, st0, 16)
+    armed_off = machine.run(spec, st0, 16,
+                            faults=faults_mod.FaultPlan.none())
+    for a, b in zip(jax.tree_util.tree_leaves(clean),
+                    jax.tree_util.tree_leaves(armed_off)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --- pallas backend parity ---------------------------------------------------
+
+def _straight_line():
+    p = assembler.Program(256)
+    x = p.word(5)
+    y = p.word(0)
+    wq = p.add_wq(8)
+    wq.read(src=x, dst=y)
+    wq.add(dst=y, addend=10)
+    wq.cas(dst=y, old=15, new=99)
+    wq.max_(dst=y, operand=120)
+    wq.min_(dst=y, operand=60)
+    return p.finalize()
+
+
+@pytest.mark.parametrize("k", [0, 2, 4, 99])
+def test_pallas_kill_parity_bit_exact(k):
+    spec, st0 = _straight_line()
+    rows = faults_mod.FaultPlan.kill_at(k, shape=(3,))
+    batch = jax.tree_util.tree_map(lambda a: jnp.stack([a] * 3), st0)
+    out_i = ChainEngine.for_spec(spec).run_batch(batch, 16, rows)
+    out_p = ChainEngine.for_spec(spec, "pallas-interpret").run_batch(
+        batch, 16, rows)
+    np.testing.assert_array_equal(np.asarray(out_i.mem),
+                                  np.asarray(out_p.mem))
+    np.testing.assert_array_equal(np.asarray(out_i.steps),
+                                  np.asarray(out_p.steps))
+
+
+def test_pallas_rejects_unsupported_fault_kinds():
+    spec, st0 = _straight_line()
+    eng = ChainEngine.for_spec(spec, "pallas-interpret")
+    batch = jax.tree_util.tree_map(lambda a: jnp.stack([a]), st0)
+    with pytest.raises(ValueError, match="suppress|truncation"):
+        eng.run_batch(batch, 16, faults_mod.FaultPlan.suppress_at(
+            1, shape=(1,)))
+
+
+def test_pallas_rejects_traced_fault_params():
+    spec, st0 = _straight_line()
+    eng = ChainEngine.for_spec(spec, "pallas-interpret")
+    batch = jax.tree_util.tree_map(lambda a: jnp.stack([a]), st0)
+
+    with pytest.raises(ValueError):
+        jax.jit(lambda f: eng.run_batch(batch, 16, f))(
+            faults_mod.FaultPlan.kill_at(2, shape=(1,)))
+
+
+# --- fsck: engineered violations --------------------------------------------
+
+def _frame(n, v=2):
+    return (jnp.zeros((1, n), jnp.int32), jnp.zeros((1, n, v), jnp.int32))
+
+
+def test_fsck_clean_on_valid_frame():
+    keys, vals = _frame(8)
+    k = store.keys_homed_at(2, 1, 8)[0]
+    keys = keys.at[0, 2].set(k)
+    vals = vals.at[0, 2].set(jnp.asarray([5, 6]))
+    rep = fsck.check_invariants(keys, vals, neighborhood=4)
+    assert rep.clean and rep.repairable
+    assert repr(rep) == "FsckReport(clean)"
+
+
+def test_fsck_torn_claim_detected_and_repaired():
+    keys, vals = _frame(8)
+    k = store.keys_homed_at(2, 1, 8)[0]
+    keys = keys.at[0, 2].set(k)           # live key, all-zero value row
+    rep = fsck.check_invariants(keys, vals, neighborhood=4)
+    assert [v.kind for v in rep.violations] == ["torn-claim"]
+    assert rep.repairable
+    keys, vals, actions = fsck.repair(keys, vals, rep, neighborhood=4)
+    assert [a.action for a in actions] == ["vacate"]
+    assert int(keys[0, 2]) == hopscotch.EMPTY
+    assert fsck.check_invariants(keys, vals, neighborhood=4).clean
+
+
+def test_fsck_stale_row_detected_and_zeroed():
+    keys, vals = _frame(8)
+    vals = vals.at[0, 5].set(jnp.asarray([9, 9]))   # EMPTY bucket, ghost row
+    rep = fsck.check_invariants(keys, vals, neighborhood=4)
+    assert [v.kind for v in rep.violations] == ["stale-row"]
+    keys, vals, actions = fsck.repair(keys, vals, rep, neighborhood=4)
+    assert [a.action for a in actions] == ["zero-row"]
+    assert not np.asarray(vals[0, 5]).any()
+    assert fsck.check_invariants(keys, vals, neighborhood=4).clean
+
+
+def test_fsck_dup_key_vacates_copy_farthest_from_home():
+    keys, vals = _frame(8)
+    k = store.keys_homed_at(2, 1, 8)[0]
+    # a half-done move: the original at home, the copy one bucket out
+    keys = keys.at[0, 2].set(k).at[0, 3].set(k)
+    vals = vals.at[0, 2].set(jnp.asarray([5, 6]))
+    vals = vals.at[0, 3].set(jnp.asarray([5, 6]))
+    rep = fsck.check_invariants(keys, vals, neighborhood=4)
+    assert [v.kind for v in rep.violations] == ["dup-key"]
+    keys, vals, _ = fsck.repair(keys, vals, rep, neighborhood=4)
+    # rollback keeps the copy closest to home (the pre-move original)
+    assert int(keys[0, 2]) == k and int(keys[0, 3]) == hopscotch.EMPTY
+    assert fsck.check_invariants(keys, vals, neighborhood=4).clean
+
+
+def test_fsck_neighborhood_breach_reported_not_repaired():
+    keys, vals = _frame(8)
+    k = store.keys_homed_at(0, 1, 8)[0]
+    keys = keys.at[0, 5].set(k)           # 5 buckets from home, H=4
+    vals = vals.at[0, 5].set(jnp.asarray([1, 1]))
+    rep = fsck.check_invariants(keys, vals, neighborhood=4)
+    assert [v.kind for v in rep.violations] == ["neighborhood"]
+    assert not rep.repairable             # a chain bug, not a crash
+    keys2, vals2, actions = fsck.repair(keys, vals, rep, neighborhood=4)
+    assert not actions
+    np.testing.assert_array_equal(np.asarray(keys2), np.asarray(keys))
+
+
+def _resize_state(n=8, v=2):
+    ok, ov = _frame(n, v)
+    gk, gv = _frame(2 * n, v)
+    return ok, ov, gk, gv
+
+
+def test_fsck_watermark_resident_reported():
+    ok, ov, gk, gv = _resize_state()
+    k = store.keys_homed_at(1, 1, 8)[0]
+    ok = ok.at[0, 1].set(k)
+    ov = ov.at[0, 1].set(jnp.asarray([3, 3]))
+    rs = store.ResizeState(ok, ov, gk, gv, jnp.asarray([4], jnp.int32))
+    rep = fsck.check_invariants(resize=rs, neighborhood=4)
+    kinds = [v.kind for v in rep.violations]
+    assert "watermark" in kinds and not rep.repairable
+
+
+@pytest.mark.parametrize("new_row_complete", [True, False])
+def test_fsck_cross_frame_dup_policy(new_row_complete):
+    """Complete new copy -> old loses (finish the lost vacate); torn new
+    claim (zero row) -> the claim is vacated and the lap re-migrates."""
+    ok, ov, gk, gv = _resize_state()
+    k = store.keys_homed_at(2, 1, 8)[0]
+    ok = ok.at[0, 2].set(k)
+    ov = ov.at[0, 2].set(jnp.asarray([7, 8]))
+    b_new = int(hopscotch.bucket_of(k, 16))
+    gk = gk.at[0, b_new].set(k)
+    if new_row_complete:
+        gv = gv.at[0, b_new].set(jnp.asarray([7, 8]))
+    rs = store.ResizeState(ok, ov, gk, gv, jnp.zeros((1,), jnp.int32))
+    rep = fsck.check_invariants(resize=rs, neighborhood=4)
+    assert rep.of_kind("cross-frame-dup") and rep.repairable
+    rs2, actions = fsck.repair_resize(rs, rep, neighborhood=4)
+    acts = {a.action for a in actions}
+    if new_row_complete:
+        assert "vacate-old" in acts
+        assert int(rs2.keys[0, 2]) == hopscotch.EMPTY
+        assert int(rs2.new_keys[0, b_new]) == k
+    else:
+        assert "vacate-new" in acts
+        assert int(rs2.keys[0, 2]) == k          # old copy intact
+        assert int(rs2.new_keys[0, b_new]) == hopscotch.EMPTY
+    assert fsck.check_invariants(resize=rs2, neighborhood=4).clean
+
+
+# --- cut-point sweeps: kill every step, repair, converge to the oracle -------
+
+def _writer_scenario():
+    """n=16, H=4: a fresh insert into a half-full neighborhood."""
+    n, v, h = 16, 2, 4
+    w = programs.build_hopscotch_writer(n, v, neighborhood=h)
+    homed = store.keys_homed_at(3, 3, n)
+    keys0 = np.zeros(n, np.int32)
+    vals0 = np.zeros((n, v), np.int32)
+    for b, k in zip((3, 4), homed[:2]):
+        keys0[b] = k
+        vals0[b] = [k & 0xFF, b]
+    q, qval = homed[2], [77, 78]
+    return w, h, keys0, vals0, q, qval
+
+
+def _displacer_scenario():
+    """n=16, H=4: neighborhood [3..6] full, bucket 6's resident is homed
+    at 6 (movable to 7) — the clean outcome is one bubble move and a
+    SET_DISPLACED claim."""
+    n, v, h = 16, 2, 4
+    d = programs.build_hopscotch_displacer(n, v, neighborhood=h,
+                                           max_search=16, max_moves=8)
+    homed3 = store.keys_homed_at(3, 4, n)
+    homed6 = store.keys_homed_at(6, 1, n)
+    keys0 = np.zeros(n, np.int32)
+    vals0 = np.zeros((n, v), np.int32)
+    for b, k in zip((3, 4, 5), homed3[:3]):
+        keys0[b] = k
+        vals0[b] = [k & 0xFF, b]
+    keys0[6] = homed6[0]
+    vals0[6] = [homed6[0] & 0xFF, 6]
+    q, qval = homed3[3], [91, 92]
+    return d, h, keys0, vals0, q, qval
+
+
+def _sweep_writer_like(prog, h, keys0, vals0, q, qval, cuts,
+                       max_search=16, max_moves=8):
+    """Kill a SET chain at each cut, then fsck + repair + (re-issue if
+    non-terminal) and demand bit-exact convergence with the host oracle.
+    Returns the number of cuts that produced a repairable torn state."""
+    oracle = hopscotch.HopscotchTable(keys0.copy(), vals0.copy(), h)
+    ost = hopscotch.insert_many_displaced(
+        oracle, [q], [np.asarray(qval)], max_search=max_search,
+        max_moves=max_moves)
+    assert int(ost[0]) in TERMINAL_SET
+
+    payload = prog.device_payloads(
+        jnp.asarray([q]), jnp.asarray([hopscotch.bucket_of(q, len(keys0))]),
+        jnp.asarray([qval]))[0]
+    fuel = prog.fuel
+    faulted = jax.jit(prog.run_one_faulted, static_argnames=("max_steps",))
+    clean = jax.jit(prog.run_one, static_argnames=("max_steps",))
+    k0, v0 = jnp.asarray(keys0), jnp.asarray(vals0)
+
+    torn_seen = 0
+    for cut in cuts:
+        plan = faults_mod.FaultPlan.kill_at(jnp.int32(cut))
+        st1, tk, tv = faulted(k0, v0, payload, max_steps=fuel, faults=plan)
+        tk, tv = tk[None], tv[None]
+        rep = fsck.check_invariants(tk, tv, neighborhood=h)
+        assert rep.repairable, (cut, rep)
+        if not rep.clean:
+            torn_seen += 1
+            tk, tv, _ = fsck.repair(tk, tv, rep, neighborhood=h)
+            assert fsck.check_invariants(tk, tv, neighborhood=h).clean
+        rk, rv = tk[0], tv[0]
+        # unconditional re-issue: for a chain that already finished the
+        # re-issue is an idempotent same-value update, and for a torn one
+        # it is the roll-forward — statuses alone can't distinguish them
+        # (a response WR may land before the chain's tail effects)
+        st2, rk, rv = clean(rk, rv, payload, max_steps=fuel)
+        del st1
+        assert int(st2) in TERMINAL_SET, (cut, int(st2))
+        np.testing.assert_array_equal(np.asarray(rk), oracle.keys,
+                                      err_msg=f"cut={cut}")
+        np.testing.assert_array_equal(np.asarray(rv), oracle.values,
+                                      err_msg=f"cut={cut}")
+    return torn_seen
+
+
+def test_writer_cutpoint_sweep_smoke():
+    w, h, keys0, vals0, q, qval = _writer_scenario()
+    cuts = sorted(set(list(range(0, w.fuel + 1, 7)) + [w.fuel]))
+    _sweep_writer_like(w, h, keys0, vals0, q, qval, cuts)
+
+
+@pytest.mark.slow
+def test_writer_cutpoint_sweep_full():
+    w, h, keys0, vals0, q, qval = _writer_scenario()
+    _sweep_writer_like(w, h, keys0, vals0, q, qval, range(w.fuel + 1))
+
+
+def test_displacer_cutpoint_sweep_smoke():
+    d, h, keys0, vals0, q, qval = _displacer_scenario()
+    # every 37th step plus the known-delicate region around the bubble
+    cuts = sorted(set(list(range(0, d.fuel + 1, 37))
+                      + list(range(180, 200)) + [d.fuel]))
+    torn = _sweep_writer_like(d, h, keys0, vals0, q, qval, cuts)
+    assert torn > 0        # the sweep must actually cross torn states
+
+
+@pytest.mark.slow
+def test_displacer_cutpoint_sweep_full():
+    d, h, keys0, vals0, q, qval = _displacer_scenario()
+    torn = _sweep_writer_like(d, h, keys0, vals0, q, qval,
+                              range(d.fuel + 1))
+    assert torn > 0
+
+
+def _migrator_scenario():
+    """n=8 -> 2n=16, H=4: residents at old buckets 2 and 5; the swept
+    lap migrates bucket 2."""
+    n, v, h = 8, 2, 4
+    m = programs.build_hopscotch_migrator(n, v, neighborhood=h)
+    k2 = store.keys_homed_at(2, 1, n)[0]
+    k5 = store.keys_homed_at(5, 1, n)[0]
+    ok0 = np.zeros(n, np.int32)
+    ov0 = np.zeros((n, v), np.int32)
+    ok0[2], ov0[2] = k2, [21, 22]
+    ok0[5], ov0[5] = k5, [51, 52]
+    return m, h, ok0, ov0
+
+
+def _sweep_migrator(cuts):
+    m, h, ok0, ov0 = _migrator_scenario()
+    n = len(ok0)
+
+    to = hopscotch.HopscotchTable(ok0.copy(), ov0.copy(), h)
+    tn = hopscotch.make_table(2 * n, ov0.shape[1], h)
+    assert to.migrate_bucket(tn, 2) == programs.MIG_MOVED
+
+    nk0 = jnp.zeros((2 * n,), jnp.int32)
+    nv0 = jnp.zeros((2 * n, ov0.shape[1]), jnp.int32)
+    fuel = m.fuel
+    faulted = jax.jit(m.run_one_faulted, static_argnames=("max_steps",))
+    clean = jax.jit(m.run_one, static_argnames=("max_steps",))
+    ok0j, ov0j = jnp.asarray(ok0), jnp.asarray(ov0)
+    pay0 = m.device_payloads(jnp.asarray([2]), ok0j)[0]
+
+    torn_seen = 0
+    for cut in cuts:
+        plan = faults_mod.FaultPlan.kill_at(jnp.int32(cut))
+        st1, ok, ov, nk, nv = faulted(ok0j, ov0j, nk0, nv0, pay0,
+                                      max_steps=fuel, faults=plan)
+        rs = store.ResizeState(ok[None], ov[None], nk[None], nv[None],
+                               jnp.zeros((1,), jnp.int32))
+        rep = fsck.check_invariants(resize=rs, neighborhood=h)
+        assert rep.repairable, (cut, rep)
+        if not rep.clean:
+            torn_seen += 1
+            rs, _ = fsck.repair_resize(rs, rep, neighborhood=h)
+            assert fsck.check_invariants(resize=rs, neighborhood=h).clean
+        rok, rov = rs.keys[0], rs.vals[0]
+        rnk, rnv = rs.new_keys[0], rs.new_vals[0]
+        # Recovery re-drives while the source bucket is still live — NOT
+        # while the status is non-terminal: the lap's MIG_MOVED response
+        # lands before the copy/vacate tail, so a terminal status can
+        # coexist with an unfinished move (a posted completion is not an
+        # applied state — the exact claim under test).  A source bucket
+        # the repair already drained means the lap is complete.
+        if int(np.asarray(rok)[2]) != hopscotch.EMPTY:
+            pay = m.device_payloads(jnp.asarray([2]), rok)[0]
+            st2, rok, rov, rnk, rnv = clean(rok, rov, rnk, rnv, pay,
+                                            max_steps=fuel)
+            assert int(st2) in TERMINAL_MIG, (cut, int(st2))
+        np.testing.assert_array_equal(np.asarray(rok), to.keys,
+                                      err_msg=f"cut={cut}")
+        np.testing.assert_array_equal(np.asarray(rov), to.values,
+                                      err_msg=f"cut={cut}")
+        np.testing.assert_array_equal(np.asarray(rnk), tn.keys,
+                                      err_msg=f"cut={cut}")
+        np.testing.assert_array_equal(np.asarray(rnv), tn.values,
+                                      err_msg=f"cut={cut}")
+    return torn_seen
+
+
+def test_migration_lap_cutpoint_sweep_smoke():
+    m, *_ = _migrator_scenario()
+    cuts = sorted(set(list(range(0, m.fuel + 1, 5)) + [m.fuel]))
+    _sweep_migrator(cuts)
+
+
+@pytest.mark.slow
+def test_migration_lap_cutpoint_sweep_full():
+    m, *_ = _migrator_scenario()
+    torn = _sweep_migrator(range(m.fuel + 1))
+    assert torn > 0
+
+
+# --- faulted sharded paths ---------------------------------------------------
+
+def test_sharded_set_disarmed_plan_bit_exact():
+    """An all-disarmed FaultPlan must not perturb the sharded SET path:
+    the storm benchmark's un-hit requests ride the faulted variant."""
+    mesh = _one_shard_mesh()
+    keys, vals = _frame(32)
+    sk = jnp.asarray([[0x101, 0x202, 0x303, 0x404]], jnp.int32)
+    sv = jnp.arange(8, dtype=jnp.int32).reshape(1, 4, 2) + 1
+    res_c, kc, vc = store.sharded_set(mesh, "kv", keys, vals, sk, sv,
+                                      neighborhood=4)
+    res_f, kf, vf = store.sharded_set(
+        mesh, "kv", keys, vals, sk, sv, neighborhood=4,
+        faults=faults_mod.FaultPlan.none(sk.shape))
+    np.testing.assert_array_equal(np.asarray(res_c.status),
+                                  np.asarray(res_f.status))
+    np.testing.assert_array_equal(np.asarray(kc), np.asarray(kf))
+    np.testing.assert_array_equal(np.asarray(vc), np.asarray(vf))
+
+
+def test_sharded_set_armed_row_never_escalates():
+    """A faulted request must not paper over its crash by escalating to
+    the displacer: the armed row keeps the writer's non-terminal answer
+    where the clean run displaces."""
+    mesh = _one_shard_mesh()
+    _, h, keys0, vals0, q, qval = _displacer_scenario()
+    keys, vals = jnp.asarray(keys0)[None], jnp.asarray(vals0)[None]
+    sk = jnp.asarray([[q]], jnp.int32)
+    sv = jnp.asarray([[qval]], jnp.int32)
+    res_c, kc, _ = store.sharded_set(mesh, "kv", keys, vals, sk, sv,
+                                     neighborhood=h)
+    assert int(np.asarray(res_c.status)[0, 0]) == programs.SET_DISPLACED
+    # armed but never firing (kill far beyond the chain's fuel): the row
+    # still must not enter the displacer stage
+    plan = faults_mod.FaultPlan.kill_at(30_000, shape=sk.shape)
+    res_f, kf, _ = store.sharded_set(mesh, "kv", keys, vals, sk, sv,
+                                     neighborhood=h, faults=plan)
+    assert (int(np.asarray(res_f.status)[0, 0])
+            == programs.SET_NEEDS_DISPLACEMENT)
+    np.testing.assert_array_equal(np.asarray(kf), np.asarray(keys))
+
+
+def test_sharded_set_storm_recovers_every_request():
+    """Batch path under a seeded storm: faulted rows are audited,
+    repaired and re-issued; afterwards every key serves its value and
+    the store is fsck-clean."""
+    mesh = _one_shard_mesh()
+    h = 4
+    keys, vals = _frame(32)
+    n_req = 12
+    sk = np.arange(1, n_req + 1, dtype=np.int32)[None, :] * 17
+    sv = np.stack([sk[0] % 251 + 1, sk[0] % 97 + 1], axis=1)[None]
+    plan = faults_mod.FaultPlan(*[leaf[None] for leaf in faults_mod.storm(
+        n_req, p_fault=0.5, max_step=60, seed=20260807)])
+    res, keys, vals = store.sharded_set(mesh, "kv", keys, vals,
+                                        jnp.asarray(sk), jnp.asarray(sv),
+                                        neighborhood=h, faults=plan)
+    rep = fsck.check_invariants(keys, vals, neighborhood=h)
+    assert rep.repairable
+    if not rep.clean:
+        keys, vals, _ = fsck.repair(keys, vals, rep, neighborhood=h)
+    retry = ~np.isin(np.asarray(res.status), TERMINAL_SET)
+    assert retry.any()          # the storm must actually interrupt chains
+    res2, keys, vals = store.sharded_set(
+        mesh, "kv", keys, vals, jnp.asarray(sk), jnp.asarray(sv),
+        neighborhood=h, live=jnp.asarray(retry))
+    st2 = np.asarray(res2.status)[retry]
+    assert np.isin(st2, TERMINAL_SET).all()
+    found, got = hopscotch.lookup(keys[0], vals[0], jnp.asarray(sk[0]), h)
+    assert np.asarray(found).all()
+    np.testing.assert_array_equal(np.asarray(got), sv[0])
+    assert fsck.check_invariants(keys, vals, neighborhood=h).clean
+
+
+def test_sharded_resize_fault_parks_watermark_then_recovers():
+    """A shard dying at lap j of a resize quantum parks the watermark on
+    that lap's bucket; fsck + repair + re-driven quanta still converge,
+    and the finished table serves every key."""
+    mesh = _one_shard_mesh()
+    n, h = 8, 4
+    k2 = store.keys_homed_at(2, 1, n)[0]
+    k5 = store.keys_homed_at(5, 1, n)[0]
+    keys = jnp.zeros((1, n), jnp.int32).at[0, 2].set(k2).at[0, 5].set(k5)
+    vals = jnp.zeros((1, n, 2), jnp.int32)
+    vals = vals.at[0, 2].set(jnp.asarray([21, 22]))
+    vals = vals.at[0, 5].set(jnp.asarray([51, 52]))
+    rs = store.begin_resize(keys, vals)
+    plan = faults_mod.FaultPlan(*[leaf[None] for leaf in
+                                  faults_mod.FaultPlan.kill_lap(
+                                      n, lap=2, step=30)])
+    rs, report = store.sharded_resize(mesh, "kv", rs, step=n,
+                                      neighborhood=h, faults=plan)
+    # buckets 0,1 are EMPTY laps (drained for free); the fired lap at
+    # bucket 2 parks the watermark there
+    assert int(np.asarray(rs.watermark)[0]) == 2
+    assert int(np.asarray(report.stuck)[0]) == 0
+    rep = fsck.check_invariants(resize=rs, neighborhood=h)
+    assert rep.repairable
+    if not rep.clean:
+        rs, _ = fsck.repair_resize(rs, rep, neighborhood=h)
+        assert fsck.check_invariants(resize=rs, neighborhood=h).clean
+    while not store.resize_done(rs):
+        rs, _ = store.sharded_resize(mesh, "kv", rs, step=n,
+                                     neighborhood=h)
+    fk, fv = store.finish_resize(rs)
+    found, got = hopscotch.lookup(fk[0], fv[0],
+                                  jnp.asarray([k2, k5]), h)
+    assert np.asarray(found).all()
+    np.testing.assert_array_equal(np.asarray(got), [[21, 22], [51, 52]])
+
+
+# --- service-level recovery --------------------------------------------------
+
+def _service(items=None, **kw):
+    items = items if items is not None else [(k, [k * 2, k * 2 + 1])
+                                             for k in range(1, 7)]
+    return failure.ShardedKVService.start(items, n_shards=1,
+                                          buckets_per_shard=64,
+                                          val_words=2, **kw)
+
+
+@pytest.mark.parametrize("plan,must_retry", [
+    (faults_mod.FaultPlan.kill_at(10), True),
+    (faults_mod.FaultPlan.suppress_at(5), True),
+    (faults_mod.FaultPlan.cas_fail_at(0), False),
+    (faults_mod.FaultPlan.enable_zero_at(0), True),
+])
+def test_set_reliable_recovers_from_each_fault_kind(plan, must_retry):
+    svc = _service()
+    key, value = 0x1234, [7, 8]
+    status, attempts = svc.set_reliable(key, value, faults=plan)
+    assert status in TERMINAL_SET
+    assert attempts <= svc.retry_budget + 1
+    if must_retry:
+        # the fault genuinely interrupted attempt 1
+        assert attempts >= 2
+    res = svc.get_many([key])
+    assert bool(np.asarray(res.found)[0, 0])
+    np.testing.assert_array_equal(np.asarray(res.values)[0, 0], value)
+    assert svc.fsck_and_repair().clean
+
+
+def test_set_reliable_clean_path_is_one_attempt():
+    svc = _service()
+    status, attempts = svc.set_reliable(0x4321, [9, 9])
+    assert status in TERMINAL_SET and attempts == 1
+    assert svc.repairs_applied == 0
+
+
+def test_chain_interrupted_raised_with_clean_store():
+    """Budget exhausted on a genuinely unplaceable key (full immovable
+    neighborhood, growth disabled): the typed error reports the key and
+    attempt count, and the failed retries left the store fsck-clean."""
+    homed = store.keys_homed_at(0, 9, 16)
+    svc = failure.ShardedKVService.start(
+        [(k, [k & 0xFF, 1]) for k in homed[:8]],
+        n_shards=1, buckets_per_shard=16, val_words=2)
+    svc.auto_resize = False
+    svc.retry_budget = 1
+    with pytest.raises(failure.ChainInterrupted) as ei:
+        svc.set_reliable(homed[8], [2, 3])
+    err = ei.value
+    assert err.key == homed[8]
+    assert err.attempts == svc.retry_budget + 1
+    assert err.fsck_clean
+    assert f"{homed[8]:#x}" in str(err)
+    # the store survived the failed attempts untouched
+    found, _ = hopscotch.lookup(svc.keys[0], svc.vals[0],
+                                jnp.asarray(homed[:8]), 8)
+    assert np.asarray(found).all()
+
+
+def test_resize_stuck_is_typed_with_parked_bucket():
+    """A no-progress resize quantum raises ResizeStuck carrying the
+    parked (shard, bucket) — not a generic RuntimeError."""
+    n = 8
+    k0 = store.keys_homed_at(0, 1, n)[0]
+    svc = failure.ShardedKVService.start([(k0, [5, 5])], n_shards=1,
+                                         buckets_per_shard=n, val_words=2)
+    # hand-craft the doubled frame completely full: the migrating
+    # resident has nowhere to go, even displaced
+    nk = np.zeros((1, 2 * n), np.int32)
+    nv = np.zeros((1, 2 * n, 2), np.int32)
+    for b in range(2 * n):
+        # start past the resident's key range so no filler aliases the
+        # migrating key (a match would discard the lap, not park it)
+        nk[0, b] = store.keys_homed_at(b, 1, 2 * n, start=0x1000)[0]
+        nv[0, b] = [b + 1, 1]
+    svc.resize = store.ResizeState(
+        jnp.asarray(svc.keys), jnp.asarray(svc.vals),
+        jnp.asarray(nk), jnp.asarray(nv), jnp.zeros((1,), jnp.int32))
+    with pytest.raises(store.ResizeStuck) as ei:
+        svc._advance_resize()
+    err = ei.value
+    assert isinstance(err, RuntimeError)      # back-compat for callers
+    assert err.stuck == [(0, 0)]
+    assert "shard 0 bucket 0" in str(err)
+
+
+# --- satellite: readable statuses and results --------------------------------
+
+def test_status_names_cover_every_code():
+    for code, name in [(programs.SET_UPDATED, "SET_UPDATED"),
+                       (programs.SET_INSERTED, "SET_INSERTED"),
+                       (programs.SET_NEEDS_DISPLACEMENT,
+                        "SET_NEEDS_DISPLACEMENT"),
+                       (programs.SET_DISPLACED, "SET_DISPLACED"),
+                       (programs.SET_NEEDS_RESIZE, "SET_NEEDS_RESIZE"),
+                       (programs.MIG_MOVED, "MIG_MOVED"),
+                       (programs.MIG_DISCARDED, "MIG_DISCARDED"),
+                       (programs.MIG_NEEDS_DISPLACE, "MIG_NEEDS_DISPLACE"),
+                       (0, "UNSERVED")]:
+        assert hopscotch.STATUS_NAMES[code] == name
+        assert hopscotch.status_name(code) == name
+    assert hopscotch.status_name(99) == "status<99>"
+
+
+def test_set_result_repr_is_a_status_histogram():
+    res = store.SetResult(
+        status=jnp.asarray([[1, 2, 2, 5]], jnp.int32),
+        applied=jnp.asarray([[True, True, True, False]]),
+        ok=jnp.asarray([[True, True, True, True]]),
+        dropped=jnp.zeros((1,), jnp.int32),
+        deferred=jnp.zeros((1,), jnp.int32))
+    r = repr(res)
+    assert "SET_UPDATED=1" in r and "SET_INSERTED=2" in r
+    assert "SET_NEEDS_RESIZE=1" in r and "ok 4/4" in r
+
+
+def test_get_result_repr_summarizes():
+    res = store.GetResult(
+        found=jnp.asarray([[True, False]]),
+        values=jnp.zeros((1, 2, 2), jnp.int32),
+        ok=jnp.asarray([[True, True]]),
+        dropped=jnp.zeros((1,), jnp.int32),
+        deferred=jnp.zeros((1,), jnp.int32))
+    assert "found 1/2" in repr(res) and "ok 2/2" in repr(res)
