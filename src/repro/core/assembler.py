@@ -60,6 +60,19 @@ class WQBuilder:
         if len(self.wrs) >= self.size:
             raise ValueError(
                 f"WQ{self.index} overflow: size {self.size}")
+        # build-time validation: what the static analyzer checks later is
+        # rejected loudly here instead of deferring to runtime clamping.
+        # (Self-modifying programs patch fields *after* posting, so the
+        # analyzer remains the authority on the final image.)
+        if not 0 <= opcode < isa.NUM_OPCODES:
+            raise ValueError(
+                f"WQ{self.index}[{len(self.wrs)}]: opcode {opcode} out of "
+                f"range [0, {isa.NUM_OPCODES})")
+        if opcode in (isa.WRITE, isa.READ, isa.SEND) and ln > isa.MAX_COPY:
+            raise ValueError(
+                f"WQ{self.index}[{len(self.wrs)}]: copy len {ln} exceeds "
+                f"MAX_COPY={isa.MAX_COPY} "
+                f"({isa.OPCODE_NAMES[opcode]}{f' {tag!r}' if tag else ''})")
         flags = 0 if signaled else isa.FLAG_SUPPRESS_COMPLETION
         slot = len(self.wrs)
         self.wrs.append(dict(ctrl=isa.pack_ctrl(opcode, id_), flags=flags,
@@ -175,11 +188,28 @@ class Program:
     def scatter_table(self, dsts: Sequence[int]) -> int:
         """RECV scatter table: [n, dst0, dst1, ...] (n <= MAX_SCATTER)."""
         if len(dsts) > isa.MAX_SCATTER:
-            raise ValueError("too many scatter entries")
+            raise ValueError(
+                f"scatter table with {len(dsts)} entries exceeds "
+                f"MAX_SCATTER={isa.MAX_SCATTER}")
         return self.alloc(1 + len(dsts), [len(dsts)] + list(dsts))
 
     # -- finalize ---------------------------------------------------------------
-    def finalize(self) -> Tuple[machine.MachineSpec, machine.VMState]:
+    def finalize(self, verify: bool = False, waivers: Sequence = (),
+                 name: str = "program") -> Tuple[machine.MachineSpec,
+                                                 machine.VMState]:
+        """Build the memory image + MachineSpec/VMState.
+
+        With ``verify=True`` the static verifier (`core.analysis`) runs
+        over the finalized program first and raises
+        :class:`analysis.VerificationError` on any finding not covered
+        by ``waivers`` — the admission gate for generated programs.
+        """
+        if verify:
+            from . import analysis      # lazy: keeps assembler import-light
+            report = analysis.verify_program(self, waivers=waivers,
+                                             name=name)
+            if not report.ok():
+                raise analysis.VerificationError(report)
         if self._code_top > self._data_ptr:
             raise ValueError(
                 f"code ({self._code_top}) collides with data "

@@ -41,6 +41,16 @@ ordering verbs (WAIT/ENABLE).  HALT is a *simulation-only* pseudo-verb (it
 marks the point where the client observes the final completion; it is not
 required for Turing completeness — quiescence and WQ recycling provide
 termination/nontermination).
+
+Ordering and self-modification
+------------------------------
+The interpreter reads WR fields at *execution* time, but a real NIC under
+``ORD_WQ`` may DMA-fetch any posted WQE early (§3.1) — a self-modifying
+patch that is not ordered before the fetch runs stale on hardware while
+passing every dynamic test here.  :mod:`repro.core.analysis` encodes the
+ordering rules statically (patched-before-fetched per ordering mode,
+WAIT/ENABLE happens-before, race footprints) and is the admission gate
+every shipped program passes; see its docstring for the pass taxonomy.
 """
 from __future__ import annotations
 

@@ -113,7 +113,7 @@ def build_rpc_echo(mem_words: int = 1024, bias: int = 1000):
 
     spec, state = p.finalize()
     return spec, state, dict(resp=resp, acc=acc, bias=bias, recv_wq=rq.index,
-                             chain_wq=wq.index)
+                             chain_wq=wq.index, prog=p)
 
 
 # ---------------------------------------------------------------------------

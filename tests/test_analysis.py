@@ -1,0 +1,332 @@
+"""Tests for the static chain-program verifier (core/analysis.py).
+
+Engineered-bad programs prove each pass actually fires; the registry
+sweep proves every shipped builder is clean-or-waivered; the certificate
+tests tie the static bounds back to `budget()` and `ChainEngine` fuel.
+
+Bad programs are built by mutating the posted WR dicts *after* `post()`
+(the builder itself now rejects these statically — that rejection is
+tested too), which mirrors how a buggy generator or a hand-patched image
+would reach the verifier.
+"""
+import pytest
+
+from repro.core import analysis, assembler, isa
+
+
+def report(prog, waivers=(), name="t"):
+    return analysis.verify_program(prog, waivers=waivers, name=name)
+
+
+def errors_of(rep, pass_name):
+    return [f for f in rep.errors if f.pass_name == pass_name]
+
+
+# ---------------------------------------------------------------------------
+# pass: bounds & encoding
+# ---------------------------------------------------------------------------
+
+def test_bounds_flags_out_of_bounds_copy():
+    p = assembler.Program(256)
+    a = p.alloc(4)
+    wq = p.add_wq(2)
+    wq.write(src=a, dst=a, ln=4)
+    wq.wrs[0]["ln"] = isa.MAX_COPY + 1          # post() would reject this
+    errs = errors_of(report(p), analysis.PASS_BOUNDS)
+    assert len(errs) == 1 and "MAX_COPY" in errs[0].message
+
+
+def test_bounds_flags_range_outside_memory():
+    p = assembler.Program(256)
+    wq = p.add_wq(2)
+    wq.write(src=250, dst=0, ln=8)              # [250, 258) > mem_words
+    errs = errors_of(report(p), analysis.PASS_BOUNDS)
+    assert errs and "src range" in errs[0].message
+
+
+def test_bounds_flags_bad_opcode_and_scatter():
+    p = assembler.Program(256)
+    tbl = p.scatter_table([10, 11])
+    wq = p.add_wq(3)
+    wq.recv(scatter_table=tbl)
+    wq.noop()
+    wq.wrs[1]["ctrl"] = isa.pack_ctrl(isa.NUM_OPCODES + 3, 0)
+    wq.wrs[1]["opcode"] = isa.NUM_OPCODES + 3
+    p._data_init[tbl] = isa.MAX_SCATTER + 1     # corrupt the table length
+    msgs = [f.message for f in errors_of(report(p), analysis.PASS_BOUNDS)]
+    assert any("invalid opcode" in m for m in msgs)
+    assert any("scatter table length" in m for m in msgs)
+
+
+# ---------------------------------------------------------------------------
+# pass: self-modification audit
+# ---------------------------------------------------------------------------
+
+def _selfmod_prog(target_ordering):
+    """WQ1 patches WQ0's second slot; WQ0 runs under `target_ordering`
+    with no WAIT/ENABLE ordering the patch before the fetch."""
+    p = assembler.Program(512)
+    v = p.word(7)
+    wq0 = p.add_wq(4, ordering=target_ordering)
+    wq1 = p.add_wq(4, ordering=isa.ORD_DOORBELL)
+    wq0.noop()
+    t = wq0.write(src=v, dst=v)
+    wq1.write_imm(dst=t.addr("src"), value=v)
+    return p
+
+
+def test_selfmod_stale_prefetch_is_error_under_ord_wq():
+    errs = errors_of(report(_selfmod_prog(isa.ORD_WQ)),
+                     analysis.PASS_SELFMOD)
+    assert len(errs) == 1 and "stale-prefetch" in errs[0].message
+
+
+def test_selfmod_unordered_patch_is_error_even_one_by_one():
+    # doorbell fetch is one-by-one but nothing orders the patch before
+    # the target's predecessor retires -> still an error (different one)
+    errs = errors_of(report(_selfmod_prog(isa.ORD_DOORBELL)),
+                     analysis.PASS_SELFMOD)
+    assert len(errs) == 1 and "unordered patch" in errs[0].message
+
+
+def test_selfmod_wait_ordered_patch_is_clean():
+    p = assembler.Program(512)
+    v = p.word(7)
+    wq0 = p.add_wq(4, ordering=isa.ORD_DOORBELL)
+    wq1 = p.add_wq(4, ordering=isa.ORD_DOORBELL)
+    wq1.write_imm(dst=wq0.future_wr_addr(1, "src"), value=v)
+    wq0.wait(wq1, 1)                    # patch lands before slot 1 fetch
+    wq0.write(src=-1, dst=v)
+    rep = report(p)
+    assert not errors_of(rep, analysis.PASS_SELFMOD)
+    assert any("ordered before target fetch" in f.message
+               for f in rep.findings)
+
+
+def test_selfmod_enable_gated_patch_is_clean_under_ord_wq():
+    p = assembler.Program(512)
+    v = p.word(7)
+    wq0 = p.add_wq(4, ordering=isa.ORD_WQ, managed=True, initial_enable=1)
+    wq1 = p.add_wq(4, ordering=isa.ORD_DOORBELL)
+    wq0.noop()
+    t = wq0.write(src=-1, dst=v)
+    wq1.write_imm(dst=t.addr("src"), value=v)
+    wq1.enable(wq0, upto=2)             # admits the slot after the patch
+    rep = report(p)
+    assert not errors_of(rep, analysis.PASS_SELFMOD)
+    assert any("enable-gated" in f.message for f in rep.findings)
+
+
+# ---------------------------------------------------------------------------
+# pass: WAIT/ENABLE ordering
+# ---------------------------------------------------------------------------
+
+def test_order_flags_unsatisfiable_wait():
+    p = assembler.Program(256)
+    wq0 = p.add_wq(4)
+    wq1 = p.add_wq(4)
+    wq0.noop()
+    wq0.noop(signaled=False)
+    wq1.wait(wq0, 3)                    # at most 1 completion ever
+    errs = errors_of(report(p), analysis.PASS_ORDER)
+    assert len(errs) == 1 and "unsatisfiable WAIT" in errs[0].message
+
+
+def test_order_flags_enable_starvation():
+    p = assembler.Program(256)
+    wq0 = p.add_wq(4, managed=True, initial_enable=1)
+    wq1 = p.add_wq(4)
+    wq0.noop()
+    wq0.noop()                          # slot 1 needs an ENABLE
+    wq1.enable(wq0, upto=1)             # watermark too low to admit it
+    errs = errors_of(report(p), analysis.PASS_ORDER)
+    assert len(errs) == 1 and "enable starvation" in errs[0].message
+    assert "[1]" in errs[0].message
+
+
+def test_order_flags_wait_cycle_deadlock():
+    p = assembler.Program(256)
+    wq0 = p.add_wq(4)
+    wq1 = p.add_wq(4)
+    wq0.wait(wq1, 1)
+    wq0.noop()
+    wq1.wait(wq0, 1)
+    wq1.noop()
+    errs = errors_of(report(p), analysis.PASS_ORDER)
+    assert errs and "cycle" in errs[0].message
+
+
+# ---------------------------------------------------------------------------
+# pass: races + waivers
+# ---------------------------------------------------------------------------
+
+def _racy_prog():
+    p = assembler.Program(256)
+    x = p.word(0, name="x")
+    wq0 = p.add_wq(2)
+    wq1 = p.add_wq(2)
+    wq0.write_imm(dst=x, value=1, tag="left")
+    wq1.write_imm(dst=x, value=2, tag="right")
+    return p
+
+
+def test_race_flags_unordered_overlapping_writes():
+    errs = errors_of(report(_racy_prog()), analysis.PASS_RACE)
+    assert len(errs) == 1 and "race" in errs[0].message
+
+
+def test_race_waiver_downgrades_and_stale_waiver_warns():
+    w = analysis.Waiver(analysis.PASS_RACE, "left",
+                        "last-writer-wins by design")
+    rep = report(_racy_prog(), waivers=(w,))
+    assert rep.ok() and len(rep.waived) == 1
+    assert "last-writer-wins" in rep.waived[0].message
+    stale = analysis.Waiver(analysis.PASS_RACE, "no-such-tag", "stale")
+    rep2 = report(_racy_prog(), waivers=(w, stale))
+    assert not rep2.ok()
+    assert any(f.pass_name == analysis.PASS_WAIVER for f in rep2.warnings)
+
+
+def test_wait_ordering_suppresses_race():
+    p = assembler.Program(256)
+    x = p.word(0)
+    wq0 = p.add_wq(2)
+    wq1 = p.add_wq(2)
+    wq0.write_imm(dst=x, value=1)
+    wq1.wait(wq0, 1)
+    wq1.write_imm(dst=x, value=2)
+    assert report(p).ok()
+
+
+# ---------------------------------------------------------------------------
+# finalize(verify=...) admission gate + build-time validation
+# ---------------------------------------------------------------------------
+
+def test_finalize_verify_raises_on_bad_program():
+    with pytest.raises(analysis.VerificationError) as ei:
+        _racy_prog().finalize(verify=True, name="racy")
+    assert "racy" in str(ei.value) and ei.value.report.errors
+
+
+def test_finalize_verify_accepts_clean_and_waivered():
+    p = assembler.Program(256)
+    x = p.word(0)
+    p.add_wq(2).write_imm(dst=x, value=1)
+    spec, state = p.finalize(verify=True)
+    assert spec.mem_words == 256
+    w = analysis.Waiver(analysis.PASS_RACE, "left", "benign")
+    _racy_prog().finalize(verify=True, waivers=(w,))
+
+
+def test_post_rejects_oversized_copy_and_bad_opcode():
+    p = assembler.Program(256)
+    wq = p.add_wq(4)
+    with pytest.raises(ValueError, match="MAX_COPY"):
+        wq.write(src=0, dst=8, ln=isa.MAX_COPY + 1)
+    with pytest.raises(ValueError, match="opcode"):
+        wq.post(isa.NUM_OPCODES)
+    with pytest.raises(ValueError, match="MAX_SCATTER"):
+        p.scatter_table(list(range(isa.MAX_SCATTER + 1)))
+    assert wq.n_posted == 0             # nothing half-posted
+
+
+# ---------------------------------------------------------------------------
+# assembler edge cases the analyzer leans on
+# ---------------------------------------------------------------------------
+
+def test_future_wr_addr_resolves_fields():
+    p = assembler.Program(256)
+    wq = p.add_wq(4)
+    ahead0 = {f: wq.future_wr_addr(0, f) for f in isa.FIELD_NAMES}
+    ahead1_src = wq.future_wr_addr(1, "src")
+    r0 = wq.noop()
+    r1 = wq.noop()
+    assert ahead0 == {f: r0.addr(f) for f in isa.FIELD_NAMES}
+    assert ahead1_src == r1.addr("src")
+    assert r0.ctrl_addr == r0.addr("ctrl")
+
+
+def test_wait_for_counts_signaled_completions_only():
+    p = assembler.Program(256)
+    wq0 = p.add_wq(4)
+    wq1 = p.add_wq(4)
+    wq0.noop(signaled=False)
+    ref = wq0.noop()                    # first *signaled* completion
+    wq0.noop()
+    w = wq1.wait_for(ref)
+    assert ref.completion_count == 1
+    assert wq1.wrs[w.slot]["opa"] == 1 and wq1.wrs[w.slot]["opb"] == 0
+    assert report(p).ok()
+
+
+# ---------------------------------------------------------------------------
+# registry sweep + certificates
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def all_reports():
+    return analysis.verify_all()
+
+
+def test_registry_sweep_clean_or_waivered(all_reports):
+    bad = {n: [str(f) for f in r.errors + r.warnings]
+           for n, r in all_reports.items() if not r.ok()}
+    assert not bad, f"non-waived findings: {bad}"
+
+
+def test_static_wr_bound_matches_budget(all_reports):
+    for name, rep in all_reports.items():
+        cats = rep.certificates["budget"]
+        n_posted = rep.certificates["n_posted"]
+        assert sum(cats.values()) == n_posted, name
+        bound = rep.certificates["static_wr_bound"]
+        if rep.certificates["recycled_wqs"]:
+            assert bound is None, name
+        else:
+            assert bound == n_posted, name
+
+
+def test_static_bound_under_engine_fuel(all_reports):
+    checked = 0
+    for name, rep in all_reports.items():
+        fuel = rep.certificates.get("fuel")
+        if fuel is None:
+            continue
+        checked += 1
+        bound = rep.certificates["static_wr_bound"]
+        assert bound is not None and bound < fuel, name
+    assert checked, "no builder exposed an engine fuel to check"
+
+
+def test_latency_certificates_are_positive(all_reports):
+    for name, rep in all_reports.items():
+        c = rep.certificates
+        assert c["serial_latency_us"] > 0, name
+        total = sum(c["wq_latency_us"].values())
+        assert c["serial_latency_us"] == pytest.approx(total, abs=0.01), name
+
+
+# ---------------------------------------------------------------------------
+# disassembler / CLI
+# ---------------------------------------------------------------------------
+
+def test_disassemble_renders_opcodes_and_patches():
+    p = _selfmod_prog(isa.ORD_WQ)
+    text = analysis.disassemble(p, name="demo")
+    assert "demo" in text and "WRITE_IMM" in text
+    assert "patches" in text            # the self-mod annotation
+
+
+def test_cli_list_and_single_builder(capsys):
+    assert analysis.main(["--list"]) == 0
+    out = capsys.readouterr().out
+    assert "rpc_echo" in out and "hopscotch_migrator" in out
+    assert analysis.main(["rpc_echo"]) == 0
+    out = capsys.readouterr().out
+    assert "SEND" in out and "0 error(s)" in out
+
+
+def test_cli_sweep_exits_zero(capsys):
+    assert analysis.main(["--sweep"]) == 0
+    out = capsys.readouterr().out
+    assert "clean-or-waivered" in out
