@@ -59,6 +59,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import re
 import sys
 from typing import (Callable, Dict, FrozenSet, List, Optional, Sequence, Set,
                     Tuple)
@@ -106,14 +107,110 @@ class Finding:
 
 @dataclasses.dataclass(frozen=True)
 class Waiver:
-    """Declared-benign finding: matched by pass name + substring."""
+    """Declared-benign finding: matched by pass name + substring.
+
+    ``covers`` receives the static model too, so proof-carrying subclasses
+    (:class:`RetryWaiver`) can check program *structure* instead of taking
+    the declaration on faith; the base class ignores it."""
     pass_name: str
     match: str              # substring of str(finding)
     reason: str
 
-    def covers(self, finding: Finding) -> bool:
+    def covers(self, finding: Finding, model=None) -> bool:
         return (finding.pass_name == self.pass_name
                 and self.match in str(finding))
+
+
+_RACE_PARTIES = re.compile(
+    r"race: WQ(\d+)\(([^)]*)\)\[(\d+)\] vs WQ(\d+)\(([^)]*)\)\[(\d+)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryWaiver(Waiver):
+    """Proof-carrying race waiver for bounded CAS-retry loops.
+
+    Two unordered CAS-claims on the same cell are exactly the race the
+    §3.5 multi-writer story is *built on* — benign because a CAS is one
+    atomic step and every loser takes its not-taken branch.  But "the
+    parties are retry loops" must be checked, not declared: this waiver
+    covers a race finding only if **both** parties prove out as
+    :func:`repro.core.constructs.emit_cas_retry_loop` structure:
+
+    1. *claim-shaped*: the party WR is a CAS whose return-old (``src``)
+       steers into a conditional NOOP's ctrl word in a managed mod WQ,
+       and that conditional is CAS-convertible (the claim-test pair) —
+       so a lost race provably leaves the cell and the branch untouched;
+    2. *failure-gated*: consecutive claims of the same cell within the
+       party's one-by-one WQ are separated by a WAIT on the mod WQ —
+       the re-probe only fetches after the previous attempt's events
+       completed un-converted (the loop re-probes on loss, never
+       double-fires).
+
+    Structure missing -> not covered -> the race stays an ERROR and the
+    waiver is reported stale (the engineered-bad test in
+    ``tests/test_analysis.py``).
+    """
+
+    def covers(self, finding: Finding, model=None) -> bool:
+        if not super().covers(finding):
+            return False
+        if model is None:
+            return False
+        mobj = _RACE_PARTIES.search(finding.message)
+        if not mobj:
+            return False
+        qa, _, sa, qb, _, sb = mobj.groups()
+        for wq, slot in ((int(qa), int(sa)), (int(qb), int(sb))):
+            mod_wq = _claim_shaped(model, wq, slot)
+            if mod_wq is None:
+                return False
+            if not _failure_gated(model, wq, slot, mod_wq):
+                return False
+        return True
+
+
+def _claim_shaped(m, wq: int, slot: int) -> Optional[int]:
+    """Is WQ[slot] an `emit_cas_claim`-style claiming CAS?  Returns the
+    mod WQ index its conditional lives in, else None."""
+    wr = m.wr(wq, slot)
+    if wr is None or wr.opcode != isa.CAS or wr.src < 0:
+        return None
+    loc = m.locate(wr.src)                  # return-old steering target
+    if loc is None or loc[2] != "ctrl":
+        return None
+    twq, tslot, _ = loc
+    cond = m.wr(twq, tslot)
+    if cond is None or cond.opcode != isa.NOOP or not cond.conversions:
+        return None
+    if not m.wqs[twq].managed:
+        return None
+    return twq
+
+
+def _failure_gated(m, wq: int, slot: int, mod_wq: int) -> bool:
+    """Every pair of consecutive claims (same cell, same mod WQ) in this
+    one-by-one WQ must have a WAIT-on-mod between them."""
+    q = m.wqs[wq]
+    if q.ordering not in _ONE_BY_ONE:
+        return False
+    cell = m.wr(wq, slot).dst
+    claim_slots = [w.slot for w in q.wrs
+                   if w.opcode == isa.CAS and w.dst == cell
+                   and "dst" not in w.patched
+                   and _claim_shaped(m, wq, w.slot) == mod_wq]
+    for s1, s2 in zip(claim_slots, claim_slots[1:]):
+        gated = any(w.opcode == isa.WAIT and w.opb == mod_wq
+                    and "opa" not in w.patched and "opb" not in w.patched
+                    for w in q.wrs[s1 + 1:s2])
+        if not gated:
+            return False
+    return True
+
+
+def retry_loop_waiver(match: str, reason: str) -> RetryWaiver:
+    """A :class:`RetryWaiver` for the race pass (the only pass where the
+    retry-loop proof applies)."""
+    return RetryWaiver(PASS_RACE, match, reason)
 
 
 @dataclasses.dataclass
@@ -1172,7 +1269,7 @@ def verify_program(prog, waivers: Sequence[Waiver] = (),
     used = set()
     final: List[Finding] = []
     for f in findings:
-        cover = next((w for w in waivers if w.covers(f)), None)
+        cover = next((w for w in waivers if w.covers(f, m)), None)
         if cover is not None and f.severity in (SEV_ERROR, SEV_WARN):
             used.add(cover)
             final.append(dataclasses.replace(
@@ -1244,6 +1341,17 @@ def _registry() -> Dict[str, RegistryEntry]:
         it = turing.build_interpreter()
         return it.prog, None
 
+    def cas_retry_pair():
+        from . import programs
+        pair = programs.build_cas_retry_pair(attempts=2)
+        return pair.prog, pair.fuel
+
+    def multi_writer_group():
+        from . import programs
+        g = programs.build_multi_writer_group(16, 2, neighborhood=4,
+                                              n_writers=2)
+        return g.prog, g.fuel
+
     # Declared-benign races.  Both waivers cover the same pattern: the
     # per-bucket probe WQs race their response copies on the shared
     # response window, but at most one probe bucket can hold the looked-
@@ -1260,6 +1368,14 @@ def _registry() -> Dict[str, RegistryEntry]:
         "per-bucket response arms are exclusive by the hash-table "
         "invariant: a key occupies at most one bucket of its "
         "neighborhood, so at most one resp copy is CAS-converted")
+    # Genuinely-racing CAS claims: admitted by *proof*, not declaration —
+    # RetryWaiver checks both parties are bounded failure-gated retry
+    # loops (see the class docstring) before covering the finding.
+    claim_race = retry_loop_waiver(
+        "claim.cas",
+        "bounded CAS-retry race: a claim CAS is one atomic step, losers "
+        "observe old != expect and re-probe behind a failure gate — any "
+        "interleaving equals a serialized order (linearizability)")
     entries = [
         RegistryEntry("rpc_echo", rpc_echo),
         RegistryEntry("hash_lookup", hash_lookup(True),
@@ -1274,6 +1390,9 @@ def _registry() -> Dict[str, RegistryEntry]:
         RegistryEntry("list_traversal_break", list_traversal(True)),
         RegistryEntry("recycled_get_server", recycled_server),
         RegistryEntry("turing_interpreter", interpreter),
+        RegistryEntry("cas_retry_pair", cas_retry_pair,
+                      waivers=(claim_race,)),
+        RegistryEntry("multi_writer_group", multi_writer_group),
     ]
     return {e.name: e for e in entries}
 

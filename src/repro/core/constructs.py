@@ -138,6 +138,91 @@ def emit_cas_claim(ctl: WQBuilder, mod: WQBuilder, *, cell: int = 0,
 
 
 # ---------------------------------------------------------------------------
+# CAS-retry loop: bounded re-probe of one contended cell (lost races)
+# ---------------------------------------------------------------------------
+
+# mod-WQ completions per FAILED attempt: the cond NOOP + the two event
+# NOOPs.  A winning attempt's then-WRITE stamps the events with a
+# completion-suppressed template, so the winner contributes only 1 and
+# every later attempt's gate (WAIT mod >= FAIL_COMPLETIONS * a) starves.
+FAIL_COMPLETIONS = 3
+
+
+@dataclasses.dataclass
+class CasRetryRefs:
+    claims: List[CasClaimRefs]   # one per attempt, in order
+    gates: List[WRRef]           # attempt a>0's WAIT(mod, 3a) entry gate
+    attempts: int
+
+    @property
+    def exhausted_count(self) -> int:
+        """mod completion count observed iff *every* attempt lost."""
+        return FAIL_COMPLETIONS * self.attempts
+
+
+def emit_cas_retry_loop(ctl: WQBuilder, mod: WQBuilder, *, cell: int = 0,
+                        expect: int = 0, new: int = 0, template: int,
+                        attempts: int, backoff_base: int = 1,
+                        tag: str = "retry") -> CasRetryRefs:
+    """Bounded CAS-retry loop: re-probe ``mem[cell]`` on a *lost race*.
+
+    The loop is the unrolled-while idiom (Fig. 5) applied to §3.5's
+    CAS-claim: ``attempts`` copies of :func:`emit_cas_claim` aimed at the
+    same cell, where attempt ``a > 0`` is gated behind
+    ``WAIT(mod, 3a)`` — a count only reachable if attempt ``a-1``'s cond
+    *and* both of its event NOOPs completed unconverted, i.e. the claim
+    lost.  A winning attempt's then-WRITE copies the 2-WR
+    completion-suppressed ``template`` image (16 words: the caller's
+    result WRs, ``FLAG_SUPPRESS_COMPLETION`` set) over the two event
+    slots, so the events execute the result *without* signaling — the
+    next gate starves and the remaining attempts are dead code (the
+    Fig. 6 ``break``).  Backoff is chain fuel: attempt ``a`` is preceded
+    by ``backoff_base << (a-1)`` suppressed NOOPs on ``ctl``, an
+    exponentially growing delay priced by the latency clocks.
+
+    Retry semantics: a retry fires when the claim observed ``old !=
+    expect`` — a *lost race* (another writer holds the cell).  It
+    succeeds if the cell is released (or spuriously NAK'd CASes — the
+    ``fail_cas`` fault — left it holding ``expect``) by the time the
+    re-probe runs; a spurious NAK whose return-old already equals
+    ``expect`` converts the then-branch like a win, and the fsck +
+    re-issue loop (``ShardedKVService.set_reliable``) is the recovery
+    discipline for that torn claim.  After ``attempts`` losses the loop
+    exhausts: ``mod``'s completion count equals ``exhausted_count``,
+    which the caller can WAIT on to take the give-up path.
+
+    ``ctl`` must be one-by-one ordered (doorbell/completion) and ``mod``
+    a managed doorbell WQ starting disabled, as with
+    :func:`emit_cas_claim`.
+    """
+    if attempts < 1:
+        raise ValueError(f"attempts must be >= 1, got {attempts}")
+    if ctl.ordering == isa.ORD_WQ:
+        raise ValueError(
+            f"{tag}: ctl WQ{ctl.index} must be one-by-one ordered "
+            "(doorbell/completion) — the gate must fetch after the "
+            "previous attempt's outcome is known")
+    claims: List[CasClaimRefs] = []
+    gates: List[WRRef] = []
+    for a in range(attempts):
+        if a:
+            gates.append(ctl.wait(mod, FAIL_COMPLETIONS * a,
+                                  tag=f"{tag}.gate{a}"))
+            for b in range(backoff_base << (a - 1)):
+                ctl.noop(signaled=False, tag=f"{tag}.backoff{a}.{b}")
+        refs = emit_cas_claim(
+            ctl, mod, cell=cell, expect=expect, new=new,
+            then_src=template, then_dst=mod.future_wr_addr(1, "ctrl"),
+            then_len=2 * isa.WR_WORDS)
+        mod.post(isa.NOOP, tag=f"{tag}.ev{a}a")
+        mod.post(isa.NOOP, tag=f"{tag}.ev{a}b")
+        ctl.enable(mod, upto=FAIL_COMPLETIONS * (a + 1),
+                   tag=f"{tag}.en{a}")
+        claims.append(refs)
+    return CasRetryRefs(claims=claims, gates=gates, attempts=attempts)
+
+
+# ---------------------------------------------------------------------------
 # enable-branch: if (v <= threshold) ENABLE(then) else ENABLE(else)
 # ---------------------------------------------------------------------------
 

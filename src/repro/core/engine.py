@@ -34,6 +34,7 @@ Migration (single-request → batched)::
 """
 from __future__ import annotations
 
+import collections
 import functools
 
 import jax
@@ -114,7 +115,16 @@ class ChainEngine:
       checks).
     """
 
-    _cache: dict = {}
+    # Bounded LRU of engines keyed (spec, backend).  Evicting an engine
+    # object is safe: the jitted fast paths (`_run_many`, `_serve_stream`,
+    # `machine.run`) are module-level and keep their own compile caches, so
+    # eviction only drops the cheap wrapper + its pallas image-check memo.
+    # A long-lived service cycling through many distinct writer-count /
+    # geometry specs must not grow host memory without bound (regression-
+    # tested in tests/test_multiwriter.py).
+    _cache: "collections.OrderedDict" = collections.OrderedDict()
+    _cache_limit: int = 64
+    _cache_stats: dict = {"hits": 0, "misses": 0, "evictions": 0}
 
     def __init__(self, spec: machine.MachineSpec, backend: str = "interp"):
         if backend not in _INTERP_BACKENDS + _PALLAS_BACKENDS:
@@ -136,9 +146,28 @@ class ChainEngine:
                  backend: str = "interp") -> "ChainEngine":
         key = (spec, backend)
         eng = cls._cache.get(key)
-        if eng is None:
-            eng = cls._cache[key] = cls(spec, backend)
+        if eng is not None:
+            cls._cache.move_to_end(key)
+            cls._cache_stats["hits"] += 1
+            return eng
+        cls._cache_stats["misses"] += 1
+        eng = cls._cache[key] = cls(spec, backend)
+        while len(cls._cache) > cls._cache_limit:
+            cls._cache.popitem(last=False)
+            cls._cache_stats["evictions"] += 1
         return eng
+
+    @classmethod
+    def cache_stats(cls) -> dict:
+        """Snapshot of the engine-memo LRU: size/limit plus cumulative
+        hit/miss/eviction counters (see the satellite regression test)."""
+        return {"size": len(cls._cache), "limit": cls._cache_limit,
+                **cls._cache_stats}
+
+    @classmethod
+    def cache_clear(cls) -> None:
+        cls._cache.clear()
+        cls._cache_stats.update(hits=0, misses=0, evictions=0)
 
     def _check_pallas_faults(self, faults):
         """The pallas kernel models exactly one fault: fuel truncation
@@ -182,6 +211,39 @@ class ChainEngine:
             return machine.run_batch(self.spec, states, max_steps, faults)
         self._check_pallas_faults(faults)
         return self._run_batch_pallas(states, max_steps, faults)
+
+    def run_interleaved(self, state: machine.VMState,
+                        schedule: machine.Schedule,
+                        writer_slices, max_steps: int = 4096
+                        ) -> machine.VMState:
+        """Run many writers' chains over ONE shared memory image under a
+        deterministic :class:`machine.Schedule`.
+
+        The serialized scan (``Schedule.serialized``) is the bit-exact
+        oracle for the *committed* state under any schedule, for programs
+        whose only cross-writer touch points are CAS claims on shared
+        cells.  The argument is linearizability of the claim CAS: a CAS is
+        one atomic VM step, so each contended cell is won by exactly one
+        writer at one step; every loser observes ``old != expect``, takes
+        its not-taken branch, and re-probes — exactly what it would have
+        observed running *after* the winner in some serialized order.
+        Writers' private WQs, completion counters, and staging regions are
+        disjoint by construction (`writer_slices`), so the committed
+        shared state (table cells + claimed value rows + per-writer
+        responses) equals the serialized run whose order is the order the
+        contended CASes won — proved exhaustively by the 2-writer
+        cut-point sweep in ``tests/test_faults.py`` (0 diverged).
+
+        Interpreter-only: the pallas kernel is a grid of *independent*
+        single-WQ contexts and cannot share a memory image.
+        """
+        if self.backend not in _INTERP_BACKENDS:
+            raise ValueError(
+                "run_interleaved shares one memory image across writers; "
+                "the pallas grid runs independent contexts — use the "
+                "interp backend")
+        return machine.run_scheduled(self.spec, state, schedule,
+                                     tuple(writer_slices), max_steps)
 
     # -- batched request paths ----------------------------------------------
     def deliver_many(self, state: machine.VMState, wq: int,

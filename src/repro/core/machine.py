@@ -511,3 +511,138 @@ def run_batch(spec: MachineSpec, states: VMState,
 def total_time_us(state: VMState) -> jnp.ndarray:
     """End-to-end chain latency: the latest PU clock."""
     return jnp.max(state.clock)
+
+
+# -- multi-writer scheduling --------------------------------------------------
+#
+# Many independent chains share ONE memory image; a Schedule decides, round
+# by round, how many VM steps each writer's WQ group may take.  This extends
+# the FaultPlan data-threading idiom (``repro.core.faults``): a Schedule is a
+# NamedTuple of int32 leaves, rounds are rows, and the sentinel ``-1`` means
+# "unlimited" the same way FaultPlan's ``NONE = -1`` means "disarmed".
+# Schedules are *traced* pytree inputs, so every cut-point of an interleaving
+# sweep shares a single compilation of :func:`run_scheduled`.
+
+SCHED_DRAIN = -1  # quota sentinel: run this writer to quiescence this round
+
+
+class Schedule(NamedTuple):
+    """Deterministic multi-writer interleaving plan.
+
+    ``quota`` is int32 of shape ``(n_rounds, n_writers)``.  Round ``r``
+    advances writers in index order ``0..n-1``; writer ``w`` executes at most
+    ``quota[r, w]`` VM steps (``SCHED_DRAIN`` = -1: run to quiescence, 0:
+    skip).  A step is one executed WR picked min-clock-first among the
+    writer's *own* eligible WQs — the same scheduler as :func:`run`, masked
+    to the writer's WQ slice.
+    """
+    quota: jnp.ndarray
+
+    # -- constructors (mirror FaultPlan's classmethod style) -----------------
+    @classmethod
+    def serialized(cls, n_writers: int,
+                   order: Sequence[int] | None = None) -> "Schedule":
+        """One writer per round, each run to quiescence — the serialized
+        oracle order (default 0..n-1)."""
+        order = tuple(range(n_writers)) if order is None else tuple(order)
+        q = np.zeros((len(order), n_writers), np.int32)
+        for r, w in enumerate(order):
+            q[r, w] = SCHED_DRAIN
+        return cls(jnp.asarray(q))
+
+    @classmethod
+    def round_robin(cls, n_writers: int, quantum: int,
+                    n_rounds: int) -> "Schedule":
+        """``n_rounds`` rounds of ``quantum`` steps each, then a drain round
+        so outstanding work always completes."""
+        q = np.full((n_rounds, n_writers), int(quantum), np.int32)
+        drain = np.full((1, n_writers), SCHED_DRAIN, np.int32)
+        return cls(jnp.asarray(np.concatenate([q, drain])))
+
+    @classmethod
+    def cut(cls, c, n_writers: int = 2) -> "Schedule":
+        """Cut-point schedule (the interleaving analogue of
+        ``FaultPlan.kill_at``): writer 0 runs exactly ``c`` steps, writer 1
+        drains against the half-done state, then everyone drains.  ``c`` may
+        be a traced scalar — all cut-points share one compilation."""
+        c = jnp.asarray(c, jnp.int32)
+        zero = jnp.zeros((), jnp.int32)
+        drain = jnp.full((), SCHED_DRAIN, jnp.int32)
+        pad = [zero] * (n_writers - 2)
+        rows = [
+            jnp.stack([c, zero] + pad),
+            jnp.stack([zero, drain] + pad),
+            jnp.stack([drain] * n_writers),
+            jnp.stack([drain] * n_writers),
+        ]
+        return cls(jnp.stack(rows))
+
+    # -- row plumbing (FaultPlan.as_rows/from_row idiom) ---------------------
+    def as_rows(self) -> jnp.ndarray:
+        return jnp.asarray(self.quota, jnp.int32)
+
+    @classmethod
+    def from_rows(cls, rows) -> "Schedule":
+        return cls(jnp.asarray(rows, jnp.int32))
+
+    @property
+    def n_rounds(self) -> int:
+        return self.quota.shape[0]
+
+    @property
+    def n_writers(self) -> int:
+        return self.quota.shape[1]
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3, 4))
+def run_scheduled(spec: MachineSpec, state: VMState, schedule: Schedule,
+                  writer_slices: tuple, max_steps: int = 4096) -> VMState:
+    """Run many writers' chains over ONE shared memory image under a
+    deterministic :class:`Schedule`.
+
+    ``writer_slices`` is a static tuple of ``(lo, hi)`` WQ index ranges, one
+    per writer; writer ``w`` owns WQs ``lo..hi-1``.  Slices must be disjoint
+    (shared *memory* is the point; shared *WQs* are not).  Any WQ outside
+    every slice (e.g. the null guard WQ) never advances.
+
+    The per-writer step is the same fused execute as :func:`run` with
+    eligibility masked to the writer's slice, so a round's steps are
+    min-clock-first *within* that writer.  ``max_steps`` bounds the global
+    step count across all rounds; fault injection is not supported here
+    (interleaving sweeps and fault sweeps compose at the harness level, not
+    in one run).
+    """
+    eligibility, execute = _fused_step(spec)
+    masks = []
+    for lo, hi in writer_slices:
+        m = np.zeros(spec.num_wqs, bool)
+        m[lo:hi] = True
+        masks.append(m)
+
+    def writer_round(s: VMState, quota, mask):
+        # quota counts *this round's* steps, so the counter is local —
+        # VMState.steps is the global (max_steps) odometer.
+        def cond(carry):
+            s, eligible, _, k = carry
+            under = jnp.where(quota < 0, True, k < quota)
+            return (jnp.any(eligible) & (~s.halted)
+                    & (s.steps < max_steps) & under)
+
+        def body(carry):
+            s, eligible, addrs, k = carry
+            new = execute(s, eligible, addrs, guard=False)
+            e2, a2, _ = eligibility(new)
+            return new, e2 & mask, a2, k + 1
+
+        elig0, addrs0, _ = eligibility(s)
+        out, _, _, _ = lax.while_loop(
+            cond, body, (s, elig0 & mask, addrs0, jnp.zeros((), jnp.int32)))
+        return out
+
+    def round_step(s, quota_row):
+        for w, mask in enumerate(masks):
+            s = writer_round(s, quota_row[w], mask)
+        return s, None
+
+    out, _ = lax.scan(round_step, state, schedule.as_rows())
+    return out

@@ -507,6 +507,54 @@ def _emit_set_match_phase(p: Program, rq, h: int, key_w: int, val_stage: int,
         m_mods.append(mmod)
     return rd1s, m_tmpls, m_mods
 
+
+def _emit_set_claim_phase(p: Program, rd1s, m_tmpls, m_mods, h: int,
+                          key_w: int, val_stage: int, val_len: int,
+                          resp: int):
+    """The SET programs' claim phase: sequential CAS-claims over the H
+    probed buckets, gated on an all-miss match phase.  Shared by the
+    single-writer hopscotch SET and the multi-writer group program (one
+    claim lane per writer, all aimed at the same shared table)."""
+    cdrv = p.add_wq(5 * h, ordering=isa.ORD_DOORBELL, managed=True)
+    cexe = p.add_wq(4 * h, ordering=isa.ORD_DOORBELL, managed=True)
+    cmod = p.add_wq(3 * h, ordering=isa.ORD_DOORBELL, managed=True,
+                    initial_enable=0)
+
+    claims = []
+    for pi in range(h):
+        tmpl, stage = _set_templates(p, val_stage, val_len, resp,
+                                     SET_INSERTED)
+        if pi == 0:
+            # every cdrv patch below completed (and, transitively, every
+            # match probe finished without a hit)
+            cexe.wait(cdrv, 5 * h, tag="wr.cgate")
+        else:
+            # previous claim resolved un-claimed (its events completed)
+            cexe.wait(cmod, 3 * pi, tag=f"wr.cseq{pi}")
+        refs = constructs.emit_cas_claim(
+            cexe, cmod, cell=0, expect=EMPTY_KEY, new=0, then_src=tmpl,
+            then_dst=cmod.future_wr_addr(1, "ctrl"),
+            then_len=2 * isa.WR_WORDS)
+        cmod.post(isa.NOOP, tag=f"wr.ce{pi}")     # event: value WRITE slot
+        cmod.post(isa.NOOP, tag=f"wr.cf{pi}")     # event: response slot
+        cexe.enable(cmod, upto=3 * (pi + 1), tag=f"wr.cen{pi}")
+        claims.append((refs, tmpl, stage))
+    cexe.initial_enable = cexe.n_posted + 1
+
+    for pi in range(h):
+        cdrv.wait(m_mods[pi], 3, tag=f"wr.nomatch{pi}")
+    for pi, (refs, tmpl, stage) in enumerate(claims):
+        cdrv.write(src=rd1s[pi].addr("src"), dst=refs.cell_dst_addr,
+                   tag=f"wr.cdst{pi}")            # claim the probed bucket
+        cdrv.write(src=key_w, dst=refs.new_opb_addr,
+                   tag=f"wr.cnew{pi}")            # CAS new <- key
+        cdrv.write(src=m_tmpls[pi] + isa.F_DST, dst=tmpl + isa.F_DST,
+                   tag=f"wr.cvp{pi}")             # reuse probed val_ptr
+        cdrv.write(src=rd1s[pi].addr("src"), dst=stage + 1,
+                   tag=f"wr.caddr{pi}")           # bucket addr -> response
+    cdrv.initial_enable = cdrv.n_posted + 1
+    return cdrv, cexe, cmod
+
 @dataclasses.dataclass(frozen=True, eq=False)
 class HopscotchShardWriter:
     """The write-side companion of :class:`HopscotchShardServer`.
@@ -765,44 +813,8 @@ def build_hopscotch_writer(n_buckets: int, val_len: int,
         p, rq, h, key_w, val_stage, val_len, resp)
 
     # --- claim phase: sequential CAS-claims, gated on an all-miss match ---
-    cdrv = p.add_wq(5 * h, ordering=isa.ORD_DOORBELL, managed=True)
-    cexe = p.add_wq(4 * h, ordering=isa.ORD_DOORBELL, managed=True)
-    cmod = p.add_wq(3 * h, ordering=isa.ORD_DOORBELL, managed=True,
-                    initial_enable=0)
-
-    claims = []
-    for pi in range(h):
-        tmpl, stage = _set_templates(p, val_stage, val_len, resp,
-                                     SET_INSERTED)
-        if pi == 0:
-            # every cdrv patch below completed (and, transitively, every
-            # match probe finished without a hit)
-            cexe.wait(cdrv, 5 * h, tag="wr.cgate")
-        else:
-            # previous claim resolved un-claimed (its events completed)
-            cexe.wait(cmod, 3 * pi, tag=f"wr.cseq{pi}")
-        refs = constructs.emit_cas_claim(
-            cexe, cmod, cell=0, expect=EMPTY_KEY, new=0, then_src=tmpl,
-            then_dst=cmod.future_wr_addr(1, "ctrl"),
-            then_len=2 * isa.WR_WORDS)
-        cmod.post(isa.NOOP, tag=f"wr.ce{pi}")     # event: value WRITE slot
-        cmod.post(isa.NOOP, tag=f"wr.cf{pi}")     # event: response slot
-        cexe.enable(cmod, upto=3 * (pi + 1), tag=f"wr.cen{pi}")
-        claims.append((refs, tmpl, stage))
-    cexe.initial_enable = cexe.n_posted + 1
-
-    for pi in range(h):
-        cdrv.wait(m_mods[pi], 3, tag=f"wr.nomatch{pi}")
-    for pi, (refs, tmpl, stage) in enumerate(claims):
-        cdrv.write(src=rd1s[pi].addr("src"), dst=refs.cell_dst_addr,
-                   tag=f"wr.cdst{pi}")            # claim the probed bucket
-        cdrv.write(src=key_w, dst=refs.new_opb_addr,
-                   tag=f"wr.cnew{pi}")            # CAS new <- key
-        cdrv.write(src=m_tmpls[pi] + isa.F_DST, dst=tmpl + isa.F_DST,
-                   tag=f"wr.cvp{pi}")             # reuse probed val_ptr
-        cdrv.write(src=rd1s[pi].addr("src"), dst=stage + 1,
-                   tag=f"wr.caddr{pi}")           # bucket addr -> response
-    cdrv.initial_enable = cdrv.n_posted + 1
+    _emit_set_claim_phase(p, rd1s, m_tmpls, m_mods, h, key_w, val_stage,
+                          val_len, resp)
 
     # RECV scatter: key, staged value words, one probe addr per READ
     tbl = p.scatter_table(
@@ -815,6 +827,252 @@ def build_hopscotch_writer(n_buckets: int, val_len: int,
         prog=p, spec=spec, state0=st0, n_buckets=n_buckets,
         val_len=val_len, neighborhood=neighborhood, table_base=table,
         values_base=values, resp_region=resp, recv_wq=rq.index)
+
+
+# ---------------------------------------------------------------------------
+# §3.5 multi-writer: N independent SET lanes racing over ONE shared table
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class MultiWriterGroup:
+    """N independent hopscotch SET writers sharing ONE memory image.
+
+    Each *lane* is a full :class:`HopscotchShardWriter` pipeline — private
+    recv WQ, match phase, claim phase, response/staging regions — but the
+    table and value rows are allocated once and shared, so the lanes'
+    pre-posted :func:`repro.core.constructs.emit_cas_claim`\\ s genuinely
+    race: the claim CAS ``EMPTY -> key`` against the shared bucket word is
+    the arbitration point, exactly the paper's §3.5 concurrent-writer
+    story.  Interleaving is controlled by a :class:`machine.Schedule` over
+    ``writer_slices`` (each lane's contiguous WQ index range).
+
+    **Linearizability.** A claim CAS is one atomic VM step, so each bucket
+    cell is won by exactly one lane at one step; a loser observes ``old !=
+    expect``, leaves the cell and its conditional untouched, and re-probes
+    the next bucket — the same path it would take running strictly after
+    the winner.  Lanes share *nothing else* (disjoint WQs, completions,
+    staging, responses), so for distinct keys the committed state under
+    ANY schedule equals the serialized order in which the contended claims
+    won — proven exhaustively by the 2-writer cut-point sweep in
+    ``tests/test_faults.py``.  (Two lanes inserting the *same* key can
+    both claim distinct EMPTY buckets — a duplicate no serial order
+    produces; the store's sharded path never issues that, and fsck flags
+    ``dup-key`` if a client does.)
+    """
+    prog: Program
+    spec: machine.MachineSpec
+    state0: machine.VMState
+    n_buckets: int
+    val_len: int
+    neighborhood: int
+    n_writers: int
+    table_base: int
+    values_base: int
+    lanes: tuple               # per writer: (recv_wq, resp_region)
+    writer_slices: tuple       # per writer: (lo, hi) WQ index range
+
+    resp_words = 2             # [status, bucket addr] per lane
+
+    @property
+    def engine(self) -> ChainEngine:
+        return ChainEngine.for_spec(self.spec)
+
+    @property
+    def fuel(self) -> int:
+        """Safe global step budget: nothing is recycled, so the total
+        posted count bounds any schedule's run."""
+        return int(np.asarray(self.state0.tail).sum()) + 1
+
+    @property
+    def writer_fuel(self) -> int:
+        """Steps after which any single lane has certainly quiesced — the
+        cut-point sweep's upper bound (per-lane posted count max)."""
+        tails = np.asarray(self.state0.tail)
+        return int(max(tails[lo:hi].sum()
+                       for lo, hi in self.writer_slices)) + 1
+
+    def device_state(self, keys: jnp.ndarray,
+                     vals: jnp.ndarray) -> machine.VMState:
+        """Image with the shared shard slice scattered in (see
+        :meth:`HopscotchShardWriter.device_state`)."""
+        rows = jnp.arange(self.n_buckets, dtype=jnp.int32)
+        mem = self.state0.mem
+        mem = mem.at[self.table_base + rows * BUCKET_WORDS].set(
+            keys.astype(jnp.int32))
+        vidx = (self.values_base + rows[:, None] * self.val_len
+                + jnp.arange(self.val_len, dtype=jnp.int32)[None, :])
+        mem = mem.at[vidx.reshape(-1)].set(
+            vals.astype(jnp.int32).reshape(-1))
+        return self.state0._replace(mem=mem)
+
+    def device_payloads(self, queries: jnp.ndarray, home: jnp.ndarray,
+                        values: jnp.ndarray) -> jnp.ndarray:
+        """``[key, value x V, probe addrs x H]`` — one row per request;
+        row ``w`` of a ``(n_writers, ...)`` batch feeds lane ``w``."""
+        h = self.neighborhood
+        offs = jnp.arange(h, dtype=jnp.int32)
+        rows = (home[:, None] + offs[None, :]) % self.n_buckets
+        addrs = (self.table_base + rows * BUCKET_WORDS).astype(jnp.int32)
+        return jnp.concatenate(
+            [queries[:, None].astype(jnp.int32),
+             values.astype(jnp.int32).reshape(-1, self.val_len), addrs],
+            axis=1)
+
+    def run_group(self, keys: jnp.ndarray, vals: jnp.ndarray,
+                  payloads: jnp.ndarray, schedule: machine.Schedule,
+                  max_steps: int = 4096):
+        """One concurrent group round: deliver payload row ``w`` to lane
+        ``w``, run all lanes over the shared image under ``schedule``,
+        read the table/value regions straight back (torn-image commit —
+        every executed WR's write is already in device memory; see
+        :meth:`HopscotchShardWriter.commit_torn`).
+
+        Returns ``(status (n_writers,), new_keys, new_vals)``.  A
+        zero-padded lane (key 0) probes the null guard region and reports
+        status 0; its claim phase starves on the ghost match, so it never
+        touches the table.
+        """
+        st = self.device_state(keys, vals)
+        for w, (recv_wq, _) in enumerate(self.lanes):
+            st = machine.deliver(st, recv_wq, payloads[w])
+        out = machine.run_scheduled(self.spec, st, schedule,
+                                    self.writer_slices, max_steps)
+        rows = jnp.arange(self.n_buckets, dtype=jnp.int32)
+        keys_out = out.mem[self.table_base + rows * BUCKET_WORDS]
+        cols = jnp.arange(self.val_len, dtype=jnp.int32)[None, :]
+        vals_out = out.mem[self.values_base
+                           + rows[:, None] * self.val_len + cols]
+        status = jnp.stack(
+            [jnp.where(payloads[w][0] == EMPTY_KEY, 0, out.mem[resp])
+             for w, (_, resp) in enumerate(self.lanes)])
+        return (status, keys_out.astype(keys.dtype),
+                vals_out.astype(vals.dtype))
+
+
+@functools.lru_cache(maxsize=None)
+def build_multi_writer_group(n_buckets: int, val_len: int,
+                             neighborhood: int = 8,
+                             n_writers: int = 2) -> MultiWriterGroup:
+    """Build (and cache per geometry) the N-writer shared-table group.
+
+    Structurally ``n_writers`` copies of :func:`build_hopscotch_writer`'s
+    lane emitted into one :class:`Program` against one table/values
+    allocation; each lane's WQs form a contiguous index slice for
+    :func:`machine.run_scheduled` masking.
+    """
+    if n_writers < 1:
+        raise ValueError("n_writers must be >= 1")
+    if not 1 <= neighborhood:
+        raise ValueError("neighborhood must be >= 1")
+    if 1 + val_len + neighborhood > min(isa.MAX_SCATTER, isa.MSG_WORDS):
+        raise ValueError(
+            f"val_len {val_len} + neighborhood {neighborhood} exceeds the "
+            f"one-SEND request budget ({isa.MAX_SCATTER}-scatter RECV)")
+    h = neighborhood
+
+    # exact image sizing: guard + per-lane code; shared table/values + per-
+    # lane data (mirrors build_hopscotch_writer's accounting)
+    lane_code = (2 + h * (7 + 3 + 3) + 5 * h + 4 * h + 3 * h)
+    code_words = (1 + n_writers * lane_code) * isa.WR_WORDS
+    lane_data = (2 + 1 + val_len                     # resp, key_w, val_stage
+                 + h * 2 * (2 * isa.WR_WORDS + 2)    # templates + stages
+                 + 2 + val_len + h)                  # scatter table
+    data_words = (n_buckets * val_len + n_buckets * BUCKET_WORDS
+                  + n_writers * lane_data)
+    mem_words = -(-(code_words + data_words + 32) // 128) * 128
+
+    p = Program(mem_words)
+    p.add_wq(1)                 # WQ0: all-zero null bucket (padding guard)
+
+    # shared state: ONE value region, ONE table
+    values = p.alloc(n_buckets * val_len, name="values")
+    tbl_init = [0] * (n_buckets * BUCKET_WORDS)
+    for b in range(n_buckets):
+        tbl_init[b * BUCKET_WORDS + 2] = values + b * val_len
+    table = p.alloc(n_buckets * BUCKET_WORDS, tbl_init, "table")
+
+    lanes, slices = [], []
+    for w in range(n_writers):
+        resp = p.alloc(2, [SET_NEEDS_DISPLACEMENT, 0], f"resp{w}")
+        key_w = p.word(0, f"key{w}")
+        val_stage = p.alloc(val_len, [0] * val_len, f"val_stage{w}")
+
+        lo = len(p.wqs)
+        rq = p.add_wq(2)
+        rd1s, m_tmpls, m_mods = _emit_set_match_phase(
+            p, rq, h, key_w, val_stage, val_len, resp)
+        _emit_set_claim_phase(p, rd1s, m_tmpls, m_mods, h, key_w,
+                              val_stage, val_len, resp)
+        tbl = p.scatter_table(
+            [key_w] + [val_stage + j for j in range(val_len)]
+            + [rd.addr("src") for rd in rd1s])
+        rq.recv(scatter_table=tbl, tag="wr.recv")
+        lanes.append((rq.index, resp))
+        slices.append((lo, len(p.wqs)))
+
+    spec, st0 = p.finalize()
+    return MultiWriterGroup(
+        prog=p, spec=spec, state0=st0, n_buckets=n_buckets,
+        val_len=val_len, neighborhood=neighborhood, n_writers=n_writers,
+        table_base=table, values_base=values, lanes=tuple(lanes),
+        writer_slices=tuple(slices))
+
+
+# ---------------------------------------------------------------------------
+# bounded CAS-retry demo: two writers racing retry loops on one static cell
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class CasRetryPair:
+    """Two chains running :func:`repro.core.constructs.emit_cas_retry_loop`
+    against ONE statically named cell — the minimal genuinely-racing
+    program (the verifier's race pass *must* flag it; the retry-loop
+    proof admits it).  The winner's stamped template writes ``w + 1`` to
+    its mark word; a loser retries with exponential NOOP backoff until
+    its attempts exhaust, leaving its mark 0."""
+    prog: Program
+    spec: machine.MachineSpec
+    state0: machine.VMState
+    cell: int
+    marks: tuple               # per writer: mark word address
+    writer_slices: tuple       # per writer: (lo, hi) WQ index range
+    attempts: int
+
+    @property
+    def fuel(self) -> int:
+        return int(np.asarray(self.state0.tail).sum()) + 1
+
+
+def build_cas_retry_pair(attempts: int = 2,
+                         backoff_base: int = 1) -> CasRetryPair:
+    """Build the two-writer CAS-retry race (not memoized: tests mutate
+    the posted image to engineer structurally-broken variants)."""
+    p = Program(1024)
+    cell = p.word(0, "cell")
+    marks, slices = [], []
+    n_ctl = sum(3 + ((1 + (backoff_base << (a - 1))) if a else 0)
+                for a in range(attempts))
+    for w in range(2):
+        mark = p.word(0, f"mark{w}")
+        # 2-WR suppressed result template: WRITE_IMM mark <- w+1, NOOP pad
+        tmpl = p.alloc(2 * isa.WR_WORDS, [
+            isa.pack_ctrl(isa.WRITE_IMM, 0), isa.FLAG_SUPPRESS_COMPLETION,
+            -1, mark, 1, w + 1, 0, -1,
+            isa.pack_ctrl(isa.NOOP, 0), isa.FLAG_SUPPRESS_COMPLETION,
+            0, 0, 1, 0, 0, -1], f"tmpl{w}")
+        lo = len(p.wqs)
+        ctl = p.add_wq(n_ctl, ordering=isa.ORD_DOORBELL)
+        mod = p.add_wq(3 * attempts, ordering=isa.ORD_DOORBELL,
+                       managed=True, initial_enable=0)
+        constructs.emit_cas_retry_loop(
+            ctl, mod, cell=cell, expect=0, new=w + 1, template=tmpl,
+            attempts=attempts, backoff_base=backoff_base, tag=f"w{w}")
+        marks.append(mark)
+        slices.append((lo, len(p.wqs)))
+    spec, st0 = p.finalize()
+    return CasRetryPair(prog=p, spec=spec, state0=st0, cell=cell,
+                        marks=tuple(marks), writer_slices=tuple(slices),
+                        attempts=attempts)
 
 
 # ---------------------------------------------------------------------------

@@ -45,6 +45,7 @@ the migration, and none of it involves the host.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 from typing import NamedTuple, Optional, Sequence, Tuple
@@ -56,6 +57,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from ..compat import shard_map
 from ..core import faults as faults_mod
+from ..core import machine
 from ..core import programs
 from ..rdma import isolation, transport
 from . import hopscotch
@@ -330,8 +332,38 @@ def sharded_get(mesh: Mesh, axis: str, keys: jnp.ndarray, vals: jnp.ndarray,
 # through it the devices' buffers — for the process lifetime, and two
 # equal-geometry meshes each paid a full re-trace.  One entry per
 # distinct geometry (the first mesh of a geometry is captured by the
-# compiled closure; later equal meshes share it).
-_MAPPED_CACHE: dict = {}
+# compiled closure; later equal meshes share it) — LRU-bounded, because
+# a long-lived service cycling through capacities / writer counts /
+# geometries would otherwise pin every compiled executable it ever
+# built (regression-tested in tests/test_multiwriter.py).  Evicted
+# entries only cost a re-trace on the next same-key call.
+_MAPPED_CACHE: "collections.OrderedDict" = collections.OrderedDict()
+_MAPPED_CACHE_LIMIT = 64
+_MAPPED_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+
+
+def _mapped_cache_get(key):
+    fn = _MAPPED_CACHE.get(key)
+    if fn is not None:
+        _MAPPED_CACHE.move_to_end(key)
+        _MAPPED_CACHE_STATS["hits"] += 1
+    return fn
+
+
+def _mapped_cache_put(key, fn):
+    _MAPPED_CACHE_STATS["misses"] += 1
+    _MAPPED_CACHE[key] = fn
+    while len(_MAPPED_CACHE) > _MAPPED_CACHE_LIMIT:
+        _MAPPED_CACHE.popitem(last=False)
+        _MAPPED_CACHE_STATS["evictions"] += 1
+    return fn
+
+
+def mapped_cache_stats() -> dict:
+    """Snapshot of the serving-body compile cache: size/limit plus
+    cumulative hit/miss/eviction counters."""
+    return {"size": len(_MAPPED_CACHE), "limit": _MAPPED_CACHE_LIMIT,
+            **_MAPPED_CACHE_STATS}
 
 
 def _mesh_fingerprint(mesh: Mesh):
@@ -348,7 +380,7 @@ def _mapped_get(mesh: Mesh, axis: str, method: str, n_shards: int,
     context)."""
     key = ("get", _mesh_fingerprint(mesh), axis, method, n_shards,
            capacity, neighborhood, val_words)
-    cached = _MAPPED_CACHE.get(key)
+    cached = _mapped_cache_get(key)
     if cached is not None:
         return cached
     path = functools.partial(
@@ -366,8 +398,7 @@ def _mapped_get(mesh: Mesh, axis: str, method: str, n_shards: int,
     fn = jax.jit(shard_map(
         body, mesh=mesh, in_specs=(spec, spec, spec, spec),
         out_specs=(spec, spec, spec, spec, spec), check_vma=False))
-    _MAPPED_CACHE[key] = fn
-    return fn
+    return _mapped_cache_put(key, fn)
 
 
 def sharded_get_isolated(mesh: Mesh, axis: str, keys: jnp.ndarray,
@@ -601,6 +632,66 @@ def _writer_set_local_faulted(keys, vals, qk, qv, live, frows, *, n_shards,
     return status[None], ok[None], nk[None], nv[None]
 
 
+def _mw_set_local(keys, vals, qk, qv, live, *, n_shards, capacity, axis,
+                  neighborhood, val_words, max_steps, max_search,
+                  max_moves, n_writers):
+    """Owner-side SET serving with **racing writer QPs**: each shard's
+    receive window is partitioned into laps of ``n_writers`` slots, and a
+    lap's requests execute *concurrently* — ``n_writers`` independent
+    pre-posted writer lanes over ONE shared table image
+    (:func:`repro.core.programs.build_multi_writer_group`), their claim
+    CASes genuinely racing under a fair round-robin
+    :class:`repro.core.machine.Schedule`.  Laps serialize through the
+    scan carry, so the batch is lap-serialized / intra-lap concurrent —
+    and by CAS linearizability each lap's outcome equals *some*
+    serialized order of its rows, keeping the whole batch equivalent to
+    a serialized run (the single-writer path remains the oracle; see the
+    2-writer sweep).
+
+    Escalation is unchanged: ``SET_NEEDS_DISPLACEMENT`` rows re-dispatch
+    through the single-writer displacer stage (displacement bubbles
+    mutate many buckets and stay serialized, like the NIC serializes
+    bounded atomics)."""
+    q = qk.reshape(-1)
+    dest = shard_of(q, n_shards)
+    n_buckets = keys.shape[1]
+    lv = live.reshape(-1)
+    group = programs.build_multi_writer_group(n_buckets, val_words,
+                                              neighborhood, n_writers)
+    payload = group.device_payloads(q, hopscotch.bucket_of(q, n_buckets),
+                                    qv.reshape(-1, val_words))
+    # fair interleave: quantum-16 rounds while lanes are busy, then the
+    # drain round completes stragglers; fuel bounds any schedule's run
+    sched = machine.Schedule.round_robin(n_writers, quantum=16, n_rounds=8)
+    gsteps = max(max_steps, group.fuel)
+
+    def group_fn(carry, lap):
+        status, nk, nv = group.run_group(*carry, lap, sched, gsteps)
+        return (nk, nv), status[:, None]
+
+    resp, ok, (nk, nv) = transport.triggered_chain_group(
+        group_fn, (keys[0], vals[0]), payload, dest, n_shards, capacity,
+        axis, 1, n_writers, lv)
+    status = resp[:, 0]
+    live2 = ok & (status == programs.SET_NEEDS_DISPLACEMENT)
+
+    if neighborhood < 2 or max_search < neighborhood:
+        status = jnp.where(live2, jnp.int32(programs.SET_NEEDS_RESIZE),
+                           status)
+        return status[None], ok[None], nk[None], nv[None]
+
+    disp = programs.build_hopscotch_displacer(
+        n_buckets, val_words, neighborhood, max_search, max_moves)
+    payload2 = disp.device_payloads(q, hopscotch.bucket_of(q, n_buckets),
+                                    qv.reshape(-1, val_words))
+    disp_steps = max(max_steps, disp.fuel)
+    resp2, ok2, (nk, nv) = transport.triggered_chain_stateful(
+        _guarded_step(disp.run_one, disp_steps), (nk, nv), payload2,
+        dest, n_shards, capacity, axis, 1, live2)
+    status = jnp.where(live2 & ok2, resp2[:, 0], status)
+    return status[None], ok[None], nk[None], nv[None]
+
+
 def sharded_set(mesh: Mesh, axis: str, keys: jnp.ndarray, vals: jnp.ndarray,
                 set_keys: jnp.ndarray, set_vals: jnp.ndarray,
                 neighborhood: int = 8, capacity: Optional[int] = None,
@@ -608,7 +699,8 @@ def sharded_set(mesh: Mesh, axis: str, keys: jnp.ndarray, vals: jnp.ndarray,
                 max_steps: int = 512,
                 max_search: int = hopscotch.DEFAULT_MAX_SEARCH,
                 max_moves: int = hopscotch.DEFAULT_MAX_MOVES,
-                faults: Optional[faults_mod.FaultPlan] = None
+                faults: Optional[faults_mod.FaultPlan] = None,
+                n_writers: int = 1
                 ) -> Tuple[SetResult, jnp.ndarray, jnp.ndarray]:
     """Batched chain-offloaded distributed SET — displacement included.
 
@@ -636,7 +728,21 @@ def sharded_set(mesh: Mesh, axis: str, keys: jnp.ndarray, vals: jnp.ndarray,
     :func:`_writer_set_local_faulted`).  The interpreter is the
     authority on fault semantics; recovery is
     :meth:`repro.rdma.failure.ShardedKVService.set_reliable`.
+
+    ``n_writers`` > 1 partitions each shard's receive window into laps
+    of ``n_writers`` concurrently-racing writer lanes over the shared
+    table (:func:`_mw_set_local`) — same results as the serialized path
+    up to lap-internal serialization order (CAS linearizability), same
+    ``SetResult`` contract.  Mutually exclusive with ``faults`` (the
+    fault format addresses a single chain's WQs; arming one lane of a
+    racing group is not yet modeled).
     """
+    if n_writers < 1:
+        raise ValueError(f"n_writers must be >= 1, got {n_writers}")
+    if n_writers > 1 and faults is not None:
+        raise ValueError("fault injection is single-writer only: "
+                         "FaultPlan rows address one chain's WQ layout, "
+                         "which the racing writer group does not share")
     _check_key_batch(set_keys, what="set", allow_zero=True, live=live)
     n_shards = mesh.shape[axis]
     b_local = set_keys.shape[1]
@@ -656,7 +762,7 @@ def sharded_set(mesh: Mesh, axis: str, keys: jnp.ndarray, vals: jnp.ndarray,
 
     mapped = _mapped_set(mesh, axis, n_shards, capacity, neighborhood,
                          vals.shape[-1], max_steps, max_search, max_moves,
-                         faulted=faults is not None)
+                         faulted=faults is not None, n_writers=n_writers)
     if faults is not None:
         status, ok, dropped, deferred, nk, nv = mapped(
             keys, vals, set_keys, set_vals, live, faults.as_rows())
@@ -671,24 +777,37 @@ def sharded_set(mesh: Mesh, axis: str, keys: jnp.ndarray, vals: jnp.ndarray,
 
 def _mapped_set(mesh: Mesh, axis: str, n_shards: int, capacity: int,
                 neighborhood: int, val_words: int, max_steps: int,
-                max_search: int, max_moves: int, faulted: bool = False):
+                max_search: int, max_moves: int, faulted: bool = False,
+                n_writers: int = 1):
     """Compile-cache the sharded set per (mesh geometry, path geometry),
     like :func:`_mapped_get` — one trace of the writer + displacer scan
     serves every subsequent batch of the same shape.  The faulted
     variant caches separately ("set-faulted") and takes the packed
     fault rows as one more sharded input — fault *parameters* stay
-    traced, so a whole cut-point sweep reuses a single compile."""
-    key = ("set-faulted" if faulted else "set", _mesh_fingerprint(mesh),
+    traced, so a whole cut-point sweep reuses a single compile.  The
+    multi-writer variant ("set-mw") swaps the serialized writer stage
+    for the racing group (:func:`_mw_set_local`)."""
+    key = ("set-faulted" if faulted else
+           f"set-mw{n_writers}" if n_writers > 1 else "set",
+           _mesh_fingerprint(mesh),
            axis, n_shards, capacity, neighborhood, val_words, max_steps,
            max_search, max_moves)
-    cached = _MAPPED_CACHE.get(key)
+    cached = _mapped_cache_get(key)
     if cached is not None:
         return cached
-    path = functools.partial(
-        _writer_set_local_faulted if faulted else _writer_set_local,
-        n_shards=n_shards, capacity=capacity, axis=axis,
-        neighborhood=neighborhood, val_words=val_words,
-        max_steps=max_steps, max_search=max_search, max_moves=max_moves)
+    if n_writers > 1 and not faulted:
+        path = functools.partial(
+            _mw_set_local, n_shards=n_shards, capacity=capacity,
+            axis=axis, neighborhood=neighborhood, val_words=val_words,
+            max_steps=max_steps, max_search=max_search,
+            max_moves=max_moves, n_writers=n_writers)
+    else:
+        path = functools.partial(
+            _writer_set_local_faulted if faulted else _writer_set_local,
+            n_shards=n_shards, capacity=capacity, axis=axis,
+            neighborhood=neighborhood, val_words=val_words,
+            max_steps=max_steps, max_search=max_search,
+            max_moves=max_moves)
 
     if faulted:
         def body(keys, vals, qk, qv, live, frows):
@@ -716,8 +835,7 @@ def _mapped_set(mesh: Mesh, axis: str, n_shards: int, capacity: int,
     fn = jax.jit(shard_map(
         body, mesh=mesh, in_specs=(spec,) * n_in, out_specs=(spec,) * 6,
         check_vma=False))
-    _MAPPED_CACHE[key] = fn
-    return fn
+    return _mapped_cache_put(key, fn)
 
 
 # ---------------------------------------------------------------------------
@@ -980,7 +1098,7 @@ def _mapped_resize(mesh: Mesh, axis: str, step: int, neighborhood: int,
     key = ("resize-faulted" if faulted else "resize",
            _mesh_fingerprint(mesh), axis, step, neighborhood,
            val_words, max_search, max_moves)
-    cached = _MAPPED_CACHE.get(key)
+    cached = _mapped_cache_get(key)
     if cached is not None:
         return cached
     kw = dict(step=step, neighborhood=neighborhood, val_words=val_words,
@@ -996,8 +1114,7 @@ def _mapped_resize(mesh: Mesh, axis: str, step: int, neighborhood: int,
     fn = jax.jit(shard_map(
         body, mesh=mesh, in_specs=(spec,) * n_in, out_specs=(spec,) * 9,
         check_vma=False))
-    _MAPPED_CACHE[key] = fn
-    return fn
+    return _mapped_cache_put(key, fn)
 
 
 def _mig_get_local(ok, ov, nk, nv, wm, queries, live, *, n_shards,
@@ -1083,7 +1200,7 @@ def _mapped_mig_get(mesh: Mesh, axis: str, n_shards: int, capacity: int,
                     neighborhood: int, val_words: int):
     key = ("mig_get", _mesh_fingerprint(mesh), axis, n_shards, capacity,
            neighborhood, val_words)
-    cached = _MAPPED_CACHE.get(key)
+    cached = _mapped_cache_get(key)
     if cached is not None:
         return cached
     path = functools.partial(
@@ -1101,8 +1218,7 @@ def _mapped_mig_get(mesh: Mesh, axis: str, n_shards: int, capacity: int,
     fn = jax.jit(shard_map(
         body, mesh=mesh, in_specs=(spec,) * 7, out_specs=(spec,) * 5,
         check_vma=False))
-    _MAPPED_CACHE[key] = fn
-    return fn
+    return _mapped_cache_put(key, fn)
 
 
 def _mig_set_local(ok_, ov, nk, nv, wm, qk, qv, live, *, n_shards,
@@ -1230,7 +1346,7 @@ def _mapped_mig_set(mesh: Mesh, axis: str, n_shards: int, capacity: int,
                     max_search: int, max_moves: int):
     key = ("mig_set", _mesh_fingerprint(mesh), axis, n_shards, capacity,
            neighborhood, val_words, max_steps, max_search, max_moves)
-    cached = _MAPPED_CACHE.get(key)
+    cached = _mapped_cache_get(key)
     if cached is not None:
         return cached
     path = functools.partial(
@@ -1252,8 +1368,7 @@ def _mapped_mig_set(mesh: Mesh, axis: str, n_shards: int, capacity: int,
     fn = jax.jit(shard_map(
         body, mesh=mesh, in_specs=(spec,) * 8, out_specs=(spec,) * 8,
         check_vma=False))
-    _MAPPED_CACHE[key] = fn
-    return fn
+    return _mapped_cache_put(key, fn)
 
 
 # ---------------------------------------------------------------------------

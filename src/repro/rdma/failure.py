@@ -146,6 +146,8 @@ class ShardedKVService(_HostDriverLifecycle):
     backoff_base_s: float = 1e-4   # first retry delay (doubles per attempt)
     backoff_cap_s: float = 0.05    # exponential backoff ceiling
     repairs_applied: int = 0       # fsck repairs across the service lifetime
+    # -- concurrent serving (racing writer QPs over shared shard state) ------
+    n_writers: int = 1             # writer lanes per shard on the SET path
 
     @classmethod
     def start(cls, items: Sequence[Tuple[int, Sequence[int]]],
@@ -205,6 +207,15 @@ class ShardedKVService(_HostDriverLifecycle):
         incrementally on every subsequent serving call.  All of it is
         chain execution against device state, so the escalation path
         works with the driver dead too.
+
+        With ``n_writers`` > 1 the steady-state path serves each shard's
+        window through that many *racing* writer lanes
+        (:func:`repro.kvstore.store.sharded_set` ``n_writers=``); the
+        resize and fault paths stay serialized — concurrency is a
+        steady-state throughput lever, not a recovery one, and
+        :meth:`set_reliable`'s fsck + re-issue loop is unchanged as the
+        per-writer retry discipline (a lane that loses its CAS race to
+        a torn claim recovers exactly like an interrupted chain).
         """
         import jax.numpy as jnp
 
@@ -217,6 +228,8 @@ class ShardedKVService(_HostDriverLifecycle):
                 self.mesh, self.axis, self.resize, qk, qv, **kwargs)
             self._advance_resize()
             return res
+        if self.n_writers > 1 and "faults" not in kwargs:
+            kwargs = dict(kwargs, n_writers=self.n_writers)
         res, self.keys, self.vals = kv_store.sharded_set(
             self.mesh, self.axis, self.keys, self.vals, qk, qv, **kwargs)
         if not self.auto_resize:

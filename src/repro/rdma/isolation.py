@@ -7,10 +7,13 @@ a non-terminating recycled loop cannot starve others.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
 
 import jax.numpy as jnp
 
+from ..core import machine
 from . import transport
 
 
@@ -47,3 +50,46 @@ def admit(state: BucketState, client: jnp.ndarray, now_us: float,
     tokens = jnp.maximum(refilled - spent, 0.0)
     last = jnp.full_like(state.last_us, now)
     return BucketState(tokens, last), admitted
+
+
+def fair_quotas(rates: Sequence[float], n_rounds: int,
+                burst: Optional[float] = None) -> machine.Schedule:
+    """Token-bucket fairness **between racing writers**: compile per-QP
+    rate limits down to a :class:`repro.core.machine.Schedule`.
+
+    :func:`admit` rations *requests into* the engine; this rations
+    *execution steps between* concurrent writer lanes over shared state
+    — the same ConnectX WQ rate-limiter, applied one layer down.  Each
+    scheduler round refills writer ``w``'s bucket by ``rates[w]`` tokens
+    (capped at ``burst``, default ``2 * max(rates)``), grants
+    ``floor(bucket)`` WR completions as that round's quota, and carries
+    the fractional remainder — deterministic and host-side, so the
+    whole plan is a static pytree the jitted
+    :func:`repro.core.machine.run_scheduled` scans over.  A final
+    drain round (``SCHED_DRAIN`` for every writer) runs stragglers to
+    quiescence: rate limiting shapes *interleaving*, it must never
+    abandon an admitted request mid-chain.
+
+    Equal rates reproduce :meth:`Schedule.round_robin` fairness; skewed
+    rates bound how far a hot writer can outrun a starved one (the §5.5
+    isolation claim, measured by ``benchmarks/write_contention.py``).
+    """
+    r = np.asarray(rates, np.float64)
+    if r.ndim != 1 or r.size < 1:
+        raise ValueError(f"rates must be a 1-D sequence, got {rates!r}")
+    if (r <= 0).any():
+        raise ValueError(f"rates must be positive, got {rates!r}")
+    if n_rounds < 1:
+        raise ValueError(f"n_rounds must be >= 1, got {n_rounds}")
+    cap = float(2.0 * r.max() if burst is None else burst)
+    if cap < 1.0:
+        raise ValueError(f"burst {cap} grants no whole token ever")
+    bucket = np.zeros_like(r)
+    rows = np.zeros((n_rounds + 1, r.size), np.int32)
+    for k in range(n_rounds):
+        bucket = np.minimum(bucket + r, cap)
+        grant = np.floor(bucket)
+        bucket -= grant
+        rows[k] = grant.astype(np.int32)
+    rows[n_rounds] = machine.SCHED_DRAIN
+    return machine.Schedule.from_rows(jnp.asarray(rows))

@@ -204,6 +204,44 @@ def triggered_chain_stateful(step_fn: Callable, carry, payload: jnp.ndarray,
     return combine(resp, dest, pos, ok, axis_name), ok, carry
 
 
+def triggered_chain_group(group_fn: Callable, carry, payload: jnp.ndarray,
+                          dest: jnp.ndarray, n_shards: int, capacity: int,
+                          axis_name: str, resp_words: int, n_writers: int,
+                          live: Optional[jnp.ndarray] = None):
+    """:func:`triggered_chain_stateful` with the receive window partitioned
+    into **racing writer QPs** (the §3.5 multi-writer wire pattern).
+
+    The owner's window rows are grouped into *laps* of ``n_writers``
+    consecutive slots; each lap's rows are delivered to ``n_writers``
+    independent pre-posted writer lanes that execute **concurrently**
+    against the shard's shared state (one
+    :meth:`repro.core.programs.MultiWriterGroup.run_group` call), while
+    laps themselves serialize through the scan carry.  So within a lap
+    the chains genuinely race their claim CASes; across laps request
+    ``i`` observes lap ``< i``'s committed writes, preserving the
+    serialized-oracle equivalence lap by lap (CAS linearizability).
+
+    ``group_fn(carry, lap_rows (n_writers, W)) -> (carry, resp
+    (n_writers, resp_words))``.  The window is zero-padded up to a
+    multiple of ``n_writers``; padded rows reach the lanes and must be
+    self-guarding exactly like the stateful path's padded slots.
+    Returns ``(responses (B, resp_words), ok (B,), final_carry)``.
+    """
+    recv, pos, ok = dispatch(payload, dest, n_shards, capacity, axis_name,
+                             live)
+    flat = recv.reshape(-1, recv.shape[-1])
+    rows = flat.shape[0]
+    pad = (-rows) % n_writers
+    if pad:
+        flat = jnp.concatenate(
+            [flat, jnp.zeros((pad, flat.shape[1]), flat.dtype)])
+    laps = flat.reshape(-1, n_writers, flat.shape[1])
+    carry, resp = lax.scan(group_fn, carry, laps)
+    resp = resp.reshape(-1, resp_words)[:rows]
+    resp = resp.reshape(n_shards, capacity, resp_words)
+    return combine(resp, dest, pos, ok, axis_name), ok, carry
+
+
 def local_chain_stateful(step_fn: Callable, carry, payload: jnp.ndarray,
                          faults: Optional[jnp.ndarray] = None):
     """Loopback chains: the owner triggers its *own* pre-posted chain.

@@ -330,3 +330,69 @@ def test_cli_sweep_exits_zero(capsys):
     assert analysis.main(["--sweep"]) == 0
     out = capsys.readouterr().out
     assert "clean-or-waivered" in out
+
+
+# ---------------------------------------------------------------------------
+# pass: races — the bounded CAS-retry loop (waiver-or-proof admission)
+# ---------------------------------------------------------------------------
+
+def _retry_pair():
+    from repro.core import programs
+    return programs.build_cas_retry_pair(attempts=2)
+
+
+def test_retry_race_flagged_without_waiver():
+    """Two writers' claim CASes on one cell are a genuine HB-unordered
+    write/write race — the analyzer must say so when nobody vouches."""
+    rep = report(_retry_pair().prog, name="retry-pair")
+    errs = errors_of(rep, analysis.PASS_RACE)
+    assert errs and "claim.cas" in errs[0].message
+
+
+def test_retry_waiver_admits_proven_retry_shape():
+    """retry_loop_waiver carries a structural proof, not just a tag
+    match: both racing WRs must be claim-shaped CASes on a one-by-one
+    WQ whose consecutive attempts are failure-gated.  The genuine
+    retry pair satisfies it and verifies clean."""
+    w = analysis.retry_loop_waiver("claim.cas", "bounded CAS-retry race")
+    rep = report(_retry_pair().prog, waivers=(w,), name="retry-pair")
+    assert rep.ok() and len(rep.waived) >= 1
+    assert "bounded CAS-retry race" in rep.waived[0].message
+
+
+def test_retry_waiver_refuses_unproven_shape():
+    """Cut the claim CAS's return-old steering (src=-1): the WR still
+    races, but it is no longer the retry idiom — a lost race would go
+    unobserved, so nothing bounds the 'retry'.  The waiver's proof must
+    fail, the race must survive as an error, and the unused waiver must
+    warn stale."""
+    pair = _retry_pair()
+    broken = 0
+    for wq in pair.prog.wqs:
+        for wr in wq.wrs:
+            if wr.get("tag") == "claim.cas":
+                wr["src"] = -1
+                broken += 1
+    assert broken == 2 * pair.attempts
+    w = analysis.retry_loop_waiver("claim.cas", "no longer true")
+    rep = report(pair.prog, waivers=(w,), name="retry-pair-broken")
+    assert not rep.ok()
+    assert errors_of(rep, analysis.PASS_RACE)
+    assert any(f.pass_name == analysis.PASS_WAIVER for f in rep.warnings)
+
+
+def test_retry_waiver_base_class_tag_match_is_not_enough():
+    """A plain Waiver on the same tag would wave the race through with
+    no proof at all — retry_loop_waiver must be strictly stronger: on
+    the BROKEN pair the plain waiver still (unsoundly) admits, the
+    proof-carrying one refuses.  Guards against regressing the factory
+    to a bare tag match."""
+    pair = _retry_pair()
+    for wq in pair.prog.wqs:
+        for wr in wq.wrs:
+            if wr.get("tag") == "claim.cas":
+                wr["src"] = -1
+    plain = analysis.Waiver(analysis.PASS_RACE, "claim.cas", "tag only")
+    assert report(pair.prog, waivers=(plain,)).ok()
+    proof = analysis.retry_loop_waiver("claim.cas", "proof")
+    assert not report(pair.prog, waivers=(proof,)).ok()

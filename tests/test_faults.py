@@ -766,3 +766,105 @@ def test_get_result_repr_summarizes():
         dropped=jnp.zeros((1,), jnp.int32),
         deferred=jnp.zeros((1,), jnp.int32))
     assert "found 1/2" in repr(res) and "ok 2/2" in repr(res)
+
+
+# --- concurrent writers: exhaustive 2-writer interleaving sweep --------------
+#
+# The linearizability claim behind `ChainEngine.run_interleaved` and the
+# store's `n_writers>1` path: because each insert's only cross-chain
+# conflict is ONE CAS claim (and CAS executes atomically at the NIC), any
+# interleaving of two racing writer chains commits the same table as SOME
+# serialized order of the two requests.  The sweep proves it by brute
+# force: for every cut point c, run writer A for its first c completions,
+# then let writer B (and then A's remainder) run to quiescence, and demand
+# the shared image lands bit-exactly on one of the two sequential oracles
+# — fsck-clean, both statuses terminal, zero divergent schedules.
+
+def _mw_scenario():
+    """n=16, H=4: two distinct keys homed at the same bucket, racing for
+    the two free slots of a half-full neighborhood."""
+    n, v, h = 16, 2, 4
+    group = programs.build_multi_writer_group(n, v, neighborhood=h,
+                                              n_writers=2)
+    homed = store.keys_homed_at(3, 4, n)
+    keys0 = np.zeros(n, np.int32)
+    vals0 = np.zeros((n, v), np.int32)
+    for b, k in zip((3, 4), homed[:2]):
+        keys0[b] = k
+        vals0[b] = [k & 0xFF, b]
+    qa, qb = homed[2], homed[3]
+    return group, h, keys0, vals0, qa, qb
+
+
+def _mw_oracles(h, keys0, vals0, qa, qb):
+    """The two sequential single-writer outcomes (AB and BA order)."""
+    n = len(keys0)
+    w = programs.build_hopscotch_writer(n, len(vals0[0]), neighborhood=h)
+    run = jax.jit(w.run_one, static_argnames=("max_steps",))
+    outs = {}
+    for name, order in (("AB", (qa, qb)), ("BA", (qb, qa))):
+        k, v = jnp.asarray(keys0), jnp.asarray(vals0)
+        for q in order:
+            pay = w.device_payloads(
+                jnp.asarray([q]),
+                jnp.asarray([hopscotch.bucket_of(q, n)]),
+                jnp.asarray([[q & 0xFF, q >> 4]]))[0]
+            st, k, v = run(k, v, pay, max_steps=w.fuel)
+            assert int(st) in TERMINAL_SET
+        outs[name] = (np.asarray(k), np.asarray(v))
+    return outs
+
+
+def _sweep_mw(cuts):
+    group, h, keys0, vals0, qa, qb = _mw_scenario()
+    oracles = _mw_oracles(h, keys0, vals0, qa, qb)
+    n = len(keys0)
+    pay = group.device_payloads(
+        jnp.asarray([qa, qb]),
+        jnp.asarray([hopscotch.bucket_of(q, n) for q in (qa, qb)]),
+        jnp.asarray([[qa & 0xFF, qa >> 4], [qb & 0xFF, qb >> 4]]))
+    k0, v0 = jnp.asarray(keys0), jnp.asarray(vals0)
+    diverged = []
+    for cut in cuts:
+        sched = machine.Schedule.cut(jnp.int32(cut))
+        st, k, v = group.run_group(k0, v0, pay, sched, group.fuel)
+        st, k, v = np.asarray(st), np.asarray(k), np.asarray(v)
+        assert all(int(s) in TERMINAL_SET for s in st), (cut, st)
+        rep = fsck.check_invariants(k[None], v[None], neighborhood=h)
+        assert rep.clean, (cut, rep)
+        hit = any((k == ok).all() and (v == ov).all()
+                  for ok, ov in oracles.values())
+        if not hit:
+            diverged.append(cut)
+    assert diverged == [], f"non-linearizable cuts: {diverged}"
+
+
+def test_multiwriter_cutpoint_sweep_smoke():
+    group, *_ = _mw_scenario()
+    fuel = group.writer_fuel
+    _sweep_mw(sorted(set(list(range(0, fuel + 1, 7)) + [fuel])))
+
+
+@pytest.mark.slow
+def test_multiwriter_cutpoint_sweep_full():
+    group, *_ = _mw_scenario()
+    _sweep_mw(range(group.writer_fuel + 1))
+
+
+def test_multiwriter_serialized_schedule_matches_sequential_oracle():
+    """Schedule.serialized((0, 1)) must reproduce the AB oracle exactly —
+    the concurrent engine's degenerate case IS the sequential engine."""
+    group, h, keys0, vals0, qa, qb = _mw_scenario()
+    oracles = _mw_oracles(h, keys0, vals0, qa, qb)
+    n = len(keys0)
+    pay = group.device_payloads(
+        jnp.asarray([qa, qb]),
+        jnp.asarray([hopscotch.bucket_of(q, n) for q in (qa, qb)]),
+        jnp.asarray([[qa & 0xFF, qa >> 4], [qb & 0xFF, qb >> 4]]))
+    k0, v0 = jnp.asarray(keys0), jnp.asarray(vals0)
+    for name, order in (("AB", (0, 1)), ("BA", (1, 0))):
+        sched = machine.Schedule.serialized(2, order=order)
+        st, k, v = group.run_group(k0, v0, pay, sched, group.fuel)
+        ok, ov = oracles[name]
+        np.testing.assert_array_equal(np.asarray(k), ok, err_msg=name)
+        np.testing.assert_array_equal(np.asarray(v), ov, err_msg=name)

@@ -1,0 +1,293 @@
+"""Concurrent multi-writer engine tests.
+
+The subject: many writers' chains advancing over ONE shared memory image
+under a deterministic :class:`repro.core.machine.Schedule` — the
+scheduling layer itself (constructors, quota semantics, drain), the
+engine front-door (``ChainEngine.run_interleaved``), the bounded
+CAS-retry loop's schedule-dependent outcomes, writer fairness compiled
+from token buckets (``isolation.fair_quotas``), and the two compile
+caches the multi-writer paths would otherwise grow without bound.
+
+The *linearizability* of racing claim CASes is proven by the exhaustive
+cut-point sweep in ``tests/test_faults.py``; this file pins down the
+machinery that sweep runs on.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import assembler, constructs, isa, machine
+from repro.core.engine import ChainEngine
+from repro.kvstore import store
+from repro.rdma import isolation
+
+
+# ---------------------------------------------------------------------------
+# Schedule: constructors and row plumbing
+# ---------------------------------------------------------------------------
+
+def test_schedule_serialized_rows():
+    s = machine.Schedule.serialized(3)
+    rows = np.asarray(s.as_rows())
+    assert rows.shape == (3, 3)
+    for r in range(3):
+        assert rows[r, r] == machine.SCHED_DRAIN
+        assert (np.delete(rows[r], r) == 0).all()
+    s2 = machine.Schedule.serialized(2, order=(1, 0))
+    assert np.asarray(s2.as_rows()).tolist() == [[0, -1], [-1, 0]]
+
+
+def test_schedule_round_robin_has_drain_tail():
+    s = machine.Schedule.round_robin(2, quantum=5, n_rounds=3)
+    rows = np.asarray(s.as_rows())
+    assert rows.shape == (4, 2)
+    assert (rows[:3] == 5).all()
+    assert (rows[3] == machine.SCHED_DRAIN).all()
+    assert s.n_rounds == 4 and s.n_writers == 2
+
+
+def test_schedule_cut_shape_and_roundtrip():
+    s = machine.Schedule.cut(jnp.int32(7))
+    rows = np.asarray(s.as_rows())
+    assert rows.shape == (4, 2)
+    assert rows[0].tolist() == [7, 0]
+    assert rows[1].tolist() == [0, machine.SCHED_DRAIN]
+    assert (rows[2:] == machine.SCHED_DRAIN).all()
+    rt = machine.Schedule.from_rows(rows)
+    np.testing.assert_array_equal(np.asarray(rt.as_rows()), rows)
+
+
+# ---------------------------------------------------------------------------
+# run_scheduled: quota semantics over a toy two-writer program
+# ---------------------------------------------------------------------------
+
+def _two_counters(n_adds=4):
+    """Two private counters, one WQ each: writer w ADDs 1 to counter w,
+    n_adds times.  No shared state — pure scheduling semantics."""
+    p = assembler.Program(256)
+    c0 = p.word(0, "c0")
+    c1 = p.word(0, "c1")
+    for c in (c0, c1):
+        wq = p.add_wq(n_adds)
+        for _ in range(n_adds):
+            wq.add(dst=c, addend=1)
+    spec, st0 = p.finalize()
+    return spec, st0, (c0, c1)
+
+
+def test_run_scheduled_drain_completes_both():
+    spec, st0, (c0, c1) = _two_counters()
+    sched = machine.Schedule.serialized(2)
+    out = machine.run_scheduled(spec, st0, sched, ((0, 1), (1, 2)))
+    assert int(out.mem[c0]) == 4 and int(out.mem[c1]) == 4
+
+
+def test_run_scheduled_zero_quota_freezes_writer():
+    spec, st0, (c0, c1) = _two_counters()
+    sched = machine.Schedule.from_rows([[machine.SCHED_DRAIN, 0]])
+    out = machine.run_scheduled(spec, st0, sched, ((0, 1), (1, 2)))
+    assert int(out.mem[c0]) == 4
+    assert int(out.mem[c1]) == 0          # never scheduled, never ran
+
+
+def test_run_scheduled_quota_counts_steps_exactly():
+    spec, st0, (c0, c1) = _two_counters()
+    sched = machine.Schedule.from_rows([[3, 1], [1, 0]])
+    out = machine.run_scheduled(spec, st0, sched, ((0, 1), (1, 2)))
+    assert int(out.mem[c0]) == 4          # 3 + 1 steps
+    assert int(out.mem[c1]) == 1          # 1 + 0 steps
+    assert int(out.steps) == 5
+
+
+def test_run_scheduled_unsliced_wq_never_advances():
+    """A WQ outside every writer slice (the null-guard idiom) is inert
+    even under a full-drain schedule."""
+    spec, st0, (c0, c1) = _two_counters()
+    sched = machine.Schedule.serialized(1)
+    out = machine.run_scheduled(spec, st0, sched, ((0, 1),))
+    assert int(out.mem[c0]) == 4
+    assert int(out.mem[c1]) == 0
+
+
+# ---------------------------------------------------------------------------
+# ChainEngine.run_interleaved: the engine front-door
+# ---------------------------------------------------------------------------
+
+def test_run_interleaved_matches_run_scheduled():
+    spec, st0, (c0, c1) = _two_counters()
+    sched = machine.Schedule.round_robin(2, quantum=2, n_rounds=3)
+    eng = ChainEngine.for_spec(spec)
+    a = eng.run_interleaved(st0, sched, ((0, 1), (1, 2)))
+    b = machine.run_scheduled(spec, st0, sched, ((0, 1), (1, 2)))
+    np.testing.assert_array_equal(np.asarray(a.mem), np.asarray(b.mem))
+
+
+def test_run_interleaved_rejects_pallas_backend():
+    p = assembler.Program(128)
+    x = p.word(0)
+    p.add_wq(2).write_imm(dst=x, value=1)
+    spec, st0 = p.finalize()
+    eng = ChainEngine.for_spec(spec, backend="pallas-interpret")
+    sched = machine.Schedule.serialized(1)
+    with pytest.raises(ValueError, match="interp backend"):
+        eng.run_interleaved(st0, sched, ((0, 1),))
+
+
+# ---------------------------------------------------------------------------
+# CAS-retry loop: schedule-dependent outcomes, both linearizable
+# ---------------------------------------------------------------------------
+
+def _retry_vs_releaser():
+    """Writer 0 retry-claims a cell that starts OCCUPIED (value 9);
+    writer 1 is a releaser that writes the cell free.  Whether writer 0
+    lands the claim depends purely on when the scheduler runs the
+    releaser relative to writer 0's bounded attempts."""
+    p = assembler.Program(1024)
+    cell = p.word(9, "cell")
+    mark = p.word(0, "mark")
+    tmpl = p.alloc(2 * isa.WR_WORDS, [
+        isa.pack_ctrl(isa.WRITE_IMM, 0), isa.FLAG_SUPPRESS_COMPLETION,
+        -1, mark, 1, 1, 0, -1,
+        isa.pack_ctrl(isa.NOOP, 0), isa.FLAG_SUPPRESS_COMPLETION,
+        0, 0, 1, 0, 0, -1], "tmpl")
+    ctl = p.add_wq(8, ordering=isa.ORD_DOORBELL)
+    mod = p.add_wq(6, ordering=isa.ORD_DOORBELL, managed=True,
+                   initial_enable=0)
+    refs = constructs.emit_cas_retry_loop(
+        ctl, mod, cell=cell, expect=0, new=1, template=tmpl, attempts=2)
+    rel = p.add_wq(1)
+    rel.write_imm(dst=cell, value=0, tag="release")
+    spec, st0 = p.finalize()
+    assert refs.exhausted_count == 6
+    return spec, st0, cell, mark
+
+
+def test_retry_exhausts_when_release_comes_too_late():
+    spec, st0, cell, mark = _retry_vs_releaser()
+    sched = machine.Schedule.serialized(2, order=(0, 1))
+    out = machine.run_scheduled(spec, st0, sched, ((0, 2), (2, 3)))
+    assert int(out.mem[mark]) == 0        # both attempts lost
+    assert int(out.mem[cell]) == 0        # releaser ran after exhaustion
+
+
+def test_retry_wins_when_schedule_releases_between_attempts():
+    spec, st0, cell, mark = _retry_vs_releaser()
+    # 6 steps = exactly attempt 0 failing (claim+test+enable, cond+2
+    # events); then the releaser frees the cell; then attempt 1 wins.
+    sched = machine.Schedule.from_rows(
+        [[6, 0], [0, machine.SCHED_DRAIN],
+         [machine.SCHED_DRAIN, machine.SCHED_DRAIN]])
+    out = machine.run_scheduled(spec, st0, sched, ((0, 2), (2, 3)))
+    assert int(out.mem[mark]) == 1        # attempt 1 landed the claim
+    assert int(out.mem[cell]) == 1
+
+
+# ---------------------------------------------------------------------------
+# isolation.fair_quotas: token buckets compiled to a Schedule
+# ---------------------------------------------------------------------------
+
+def test_fair_quotas_fractional_rates_accumulate():
+    s = isolation.fair_quotas([2.0, 0.5], n_rounds=4)
+    rows = np.asarray(s.as_rows())
+    assert rows[:, 0].tolist() == [2, 2, 2, 2, machine.SCHED_DRAIN]
+    # 0.5/round grants a whole token every other round
+    assert rows[:, 1].tolist() == [0, 1, 0, 1, machine.SCHED_DRAIN]
+
+
+def test_fair_quotas_burst_caps_refill():
+    s = isolation.fair_quotas([3.0], n_rounds=2, burst=1.0)
+    assert np.asarray(s.as_rows())[:, 0].tolist() == [1, 1,
+                                                      machine.SCHED_DRAIN]
+
+
+def test_fair_quotas_drives_run_scheduled():
+    spec, st0, (c0, c1) = _two_counters()
+    out = machine.run_scheduled(spec, st0,
+                                isolation.fair_quotas([1.0, 1.0], 2),
+                                ((0, 1), (1, 2)))
+    assert int(out.mem[c0]) == 4 and int(out.mem[c1]) == 4
+
+
+def test_fair_quotas_validation():
+    with pytest.raises(ValueError):
+        isolation.fair_quotas([], 3)
+    with pytest.raises(ValueError):
+        isolation.fair_quotas([1.0, 0.0], 3)
+    with pytest.raises(ValueError):
+        isolation.fair_quotas([1.0], 0)
+    with pytest.raises(ValueError):
+        isolation.fair_quotas([0.25], 3, burst=0.75)
+
+
+# ---------------------------------------------------------------------------
+# bounded compile caches (satellite: no unbounded growth)
+# ---------------------------------------------------------------------------
+
+def _tiny_spec(i):
+    p = assembler.Program(64 + 8 * i)     # distinct mem size -> distinct spec
+    x = p.word(0)
+    p.add_wq(1).write_imm(dst=x, value=1)
+    return p.finalize()[0]
+
+
+def test_engine_cache_is_bounded_lru():
+    saved = dict(ChainEngine._cache)
+    saved_limit = ChainEngine._cache_limit
+    try:
+        ChainEngine.cache_clear()
+        ChainEngine._cache_limit = 4
+        specs = [_tiny_spec(i) for i in range(6)]
+        for s in specs:
+            ChainEngine.for_spec(s)
+        st = ChainEngine.cache_stats()
+        assert st["size"] == 4 and st["limit"] == 4
+        assert st["misses"] == 6 and st["evictions"] == 2
+        # most-recent entries survive, oldest were evicted
+        eng = ChainEngine.for_spec(specs[-1])
+        assert ChainEngine.cache_stats()["hits"] == 1
+        assert eng.spec == specs[-1]
+        ChainEngine.for_spec(specs[0])    # evicted -> rebuilt, not a hit
+        assert ChainEngine.cache_stats()["misses"] == 7
+    finally:
+        ChainEngine.cache_clear()
+        ChainEngine._cache_limit = saved_limit
+        ChainEngine._cache.update(saved)
+
+
+def test_mapped_cache_is_bounded_lru(monkeypatch):
+    monkeypatch.setattr(store, "_MAPPED_CACHE", type(store._MAPPED_CACHE)())
+    monkeypatch.setattr(store, "_MAPPED_CACHE_LIMIT", 3)
+    monkeypatch.setattr(store, "_MAPPED_CACHE_STATS",
+                        {"hits": 0, "misses": 0, "evictions": 0})
+    for i in range(5):
+        assert store._mapped_cache_put(("k", i), i) == i
+    st = store.mapped_cache_stats()
+    assert st["size"] == 3 and st["limit"] == 3
+    assert st["misses"] == 5 and st["evictions"] == 2
+    assert store._mapped_cache_get(("k", 0)) is None      # evicted
+    assert store._mapped_cache_get(("k", 4)) == 4
+    assert store.mapped_cache_stats()["hits"] == 1
+    # a hit refreshes recency: inserting one more now evicts ("k", 2)
+    store._mapped_cache_put(("k", 5), 5)
+    assert store._mapped_cache_get(("k", 2)) is None
+    assert store._mapped_cache_get(("k", 4)) == 4
+
+
+def test_multiwriter_store_paths_share_bounded_cache():
+    """The n_writers>1 serving body lands in the same bounded cache
+    under a distinct key (one compile per writer count)."""
+    import jax
+    from jax.sharding import Mesh
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("x",))
+    keys = jnp.zeros((1, 16), jnp.int32)
+    vals = jnp.zeros((1, 16, 2), jnp.int32)
+    qk = jnp.asarray([[store.keys_homed_at(2, 1, 16)[0]]])
+    qv = jnp.asarray([[[7, 8]]])
+    before = store.mapped_cache_stats()["size"]
+    for _ in range(2):
+        store.sharded_set(mesh, "x", keys, vals, qk, qv, neighborhood=4,
+                          n_writers=2)
+    after = store.mapped_cache_stats()
+    assert after["size"] <= after["limit"]
+    assert after["size"] >= min(before + 1, after["limit"])
