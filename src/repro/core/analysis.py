@@ -1312,14 +1312,14 @@ def _registry() -> Dict[str, RegistryEntry]:
             return off.prog, None
         return build
 
-    def hopscotch(kind):
+    def hopscotch(kind, **kw):
         def build():
             from . import programs
             fn = getattr(programs, f"build_hopscotch_{kind}")
             if kind == "displacer":
                 off = fn(16, 2, neighborhood=4, max_search=8, max_moves=4)
             else:
-                off = fn(16, 2, neighborhood=4)
+                off = fn(16, 2, neighborhood=4, **kw)
             return off.prog, getattr(off, "fuel", None)
         return build
 
@@ -1346,11 +1346,19 @@ def _registry() -> Dict[str, RegistryEntry]:
         pair = programs.build_cas_retry_pair(attempts=2)
         return pair.prog, pair.fuel
 
-    def multi_writer_group():
+    def multi_writer_group(lane_kinds=None):
+        def build():
+            from . import programs
+            g = programs.build_multi_writer_group(16, 2, neighborhood=4,
+                                                  n_writers=2,
+                                                  lane_kinds=lane_kinds)
+            return g.prog, g.fuel
+        return build
+
+    def clock_sweeper():
         from . import programs
-        g = programs.build_multi_writer_group(16, 2, neighborhood=4,
-                                              n_writers=2)
-        return g.prog, g.fuel
+        off = programs.build_clock_sweeper(16, 2)
+        return off.prog, off.fuel
 
     # Declared-benign races.  Both waivers cover the same pattern: the
     # per-bucket probe WQs race their response copies on the shared
@@ -1392,7 +1400,20 @@ def _registry() -> Dict[str, RegistryEntry]:
         RegistryEntry("turing_interpreter", interpreter),
         RegistryEntry("cas_retry_pair", cas_retry_pair,
                       waivers=(claim_race,)),
-        RegistryEntry("multi_writer_group", multi_writer_group),
+        RegistryEntry("multi_writer_group", multi_writer_group()),
+        # Full-lifecycle programs (DELETE + TTL).  The deleter, sweeper,
+        # and mixed set/delete group verify clean — the vacate CAS
+        # re-reads its comparand behind per-probe exclusivity, so no
+        # waiver is needed.  The TTL server variant hits the same
+        # hs.resp response-arm family as the plain server.
+        RegistryEntry("hopscotch_deleter", hopscotch("deleter")),
+        RegistryEntry("hopscotch_server_ttl", hopscotch("server", ttl=True),
+                      waivers=(hs_resp_race,)),
+        RegistryEntry("clock_sweeper", clock_sweeper),
+        RegistryEntry("multi_writer_del_group",
+                      multi_writer_group(("set", "delete"))),
+        RegistryEntry("multi_writer_sweep_group",
+                      multi_writer_group(("set", "sweep"))),
     ]
     return {e.name: e for e in entries}
 

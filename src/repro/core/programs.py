@@ -66,6 +66,19 @@ MIG_MOVED = 6                # source bucket re-homed into the new frame
 MIG_DISCARDED = 7            # key already in the new frame: stale copy dropped
 MIG_NEEDS_DISPLACE = 8       # new-frame neighborhood full: displacer needed
 
+# DELETE / sweep outcome codes (the full Memcached lifecycle; mirrored in
+# repro.kvstore.hopscotch like the SET/MIG codes, disjoint from both)
+DEL_DELETED = 9              # bucket matched and vacated (key -> EMPTY)
+DEL_MISS = 10                # no probe matched; the pre-set default response
+SWEEP_RECLAIMED = 11         # expired bucket vacated by the CLOCK sweeper
+SWEEP_LIVE = 12              # deadline still ahead; bucket left untouched
+
+# TTL sentinel: a bucket with no deadline carries INT32_MAX in its expiry
+# word, so the chains' one signed compare — expired <=> deadline - now <= 0
+# — needs no "has a TTL" special case (NO_TTL - now stays positive for any
+# plausible now)
+NO_TTL = 0x7FFFFFFF
+
 # the hopscotch home-bucket hash, array form — numerically identical to
 # repro.kvstore.hopscotch.bucket_of (core must not import kvstore; the
 # displacer's device_state derives per-bucket home distances with it)
@@ -277,6 +290,17 @@ class HopscotchShardServer:
     ``shard_map``-partitioned store.  Instances are frozen and cached per
     geometry (:func:`build_hopscotch_server`); all mutable state lives in
     the ``VMState`` values they produce.
+
+    **TTL variant** (``ttl=True``): each bucket's otherwise-unused pad
+    word carries an expiry deadline (:data:`NO_TTL` = never), the client
+    additionally sends ``-now``, and each probe's conversion WQ grows a
+    Calc-verb expiry check — ``e = min(max(deadline - now, 0), 1)`` over
+    the deadline the probe READ landed on the response WR's flags field —
+    whose result conditionally converts a *tester* CAS that un-converts a
+    matched response WRITE back into a NOOP.  An expired hit therefore
+    quiesces exactly like a miss (no response write), bit-exact with
+    :func:`repro.kvstore.hopscotch.lookup_ttl`; the deadline is compared
+    on device, not by the host.
     """
     prog: Program
     spec: machine.MachineSpec
@@ -288,6 +312,7 @@ class HopscotchShardServer:
     values_base: int
     resp_region: int
     recv_wq: int
+    ttl: bool = False
 
     @property
     def resp_words(self) -> int:
@@ -297,8 +322,8 @@ class HopscotchShardServer:
     def engine(self) -> ChainEngine:
         return ChainEngine.for_spec(self.spec)
 
-    def device_state(self, keys: jnp.ndarray,
-                     vals: jnp.ndarray) -> machine.VMState:
+    def device_state(self, keys: jnp.ndarray, vals: jnp.ndarray,
+                     exp: Optional[jnp.ndarray] = None) -> machine.VMState:
         """Image with this shard's hopscotch slice scattered in.
 
         keys: (n_buckets,) int32 (0 = empty); vals: (n_buckets, val_len).
@@ -306,12 +331,21 @@ class HopscotchShardServer:
         val_ptr columns are static (baked at build time); keys, values,
         and the per-row found flag (``keys != EMPTY`` — empty rows must
         answer a ghost-matching query 0 with found=0) are written here.
+        A TTL build additionally scatters the per-bucket deadline column
+        ``exp`` into the bucket pad words.
         """
+        if self.ttl != (exp is not None):
+            raise ValueError(
+                "exp column required iff the server was built with "
+                f"ttl=True (ttl={self.ttl}, exp given={exp is not None})")
         row_stride = self.val_len + 1
         rows = jnp.arange(self.n_buckets, dtype=jnp.int32)
         mem = self.state0.mem
         mem = mem.at[self.table_base + rows * BUCKET_WORDS].set(
             keys.astype(jnp.int32))
+        if exp is not None:
+            mem = mem.at[self.table_base + rows * BUCKET_WORDS + 1].set(
+                exp.astype(jnp.int32))
         mem = mem.at[self.values_base + rows * row_stride].set(
             (keys != EMPTY_KEY).astype(jnp.int32))
         vidx = (self.values_base + rows[:, None] * row_stride + 1
@@ -320,43 +354,70 @@ class HopscotchShardServer:
             vals.astype(jnp.int32).reshape(-1))
         return self.state0._replace(mem=mem)
 
-    def device_payloads(self, queries: jnp.ndarray,
-                        home: jnp.ndarray) -> jnp.ndarray:
-        """Client-side request assembly: ``[key x H, probe addrs x H]``.
+    def device_payloads(self, queries: jnp.ndarray, home: jnp.ndarray,
+                        now=None) -> jnp.ndarray:
+        """Client-side request assembly: ``[key x H, probe addrs x H]``
+        (default build) or ``[key, -now, probe addrs x H]`` (TTL build —
+        the chain ADDs the negated clock onto each probed deadline, so
+        the client sends it pre-negated; a padded row keeps ``-now`` 0).
 
         queries: (B,) int32; home: (B,) int32 home buckets (the client
         computes the hash, exactly as the paper's client computes bucket
         addresses).  Probes cover the wrapping neighborhood
         ``[home, home + H)``.
         """
+        if self.ttl != (now is not None):
+            raise ValueError(
+                "now required iff the server was built with ttl=True "
+                f"(ttl={self.ttl}, now given={now is not None})")
         h = self.neighborhood
         offs = jnp.arange(h, dtype=jnp.int32)
         rows = (home[:, None] + offs[None, :]) % self.n_buckets
         addrs = (self.table_base + rows * BUCKET_WORDS).astype(jnp.int32)
+        if now is not None:
+            live = (queries != EMPTY_KEY)
+            negnow = jnp.broadcast_to(
+                -jnp.asarray(now, jnp.int32), queries.shape
+            ) * live.astype(jnp.int32)
+            return jnp.concatenate(
+                [queries[:, None].astype(jnp.int32), negnow[:, None],
+                 addrs], axis=1)
         keys_rep = jnp.broadcast_to(queries[:, None].astype(jnp.int32),
                                     rows.shape)
         return jnp.concatenate([keys_rep, addrs], axis=1)
 
     def get_many(self, keys: jnp.ndarray, vals: jnp.ndarray,
                  queries: jnp.ndarray, home: jnp.ndarray,
-                 max_steps: int = 96):
+                 max_steps: int = 96, exp=None, now=None):
         """Single-machine batched get (tests / benchmarks; the sharded
         path goes through ``transport.triggered_chain_engine``).
         Returns (found bool (B,), values (B, val_len))."""
-        st = self.device_state(keys, vals)
+        st = self.device_state(keys, vals, exp)
         out = self.engine.run_many(
-            st, self.recv_wq, self.device_payloads(queries, home), max_steps)
+            st, self.recv_wq, self.device_payloads(queries, home, now),
+            max_steps)
         resp = out.mem[:, self.resp_region:self.resp_region + self.resp_words]
         return resp[:, 0] > 0, resp[:, 1:]
 
 
 @functools.lru_cache(maxsize=None)
 def build_hopscotch_server(n_buckets: int, val_len: int,
-                           neighborhood: int = 8) -> HopscotchShardServer:
+                           neighborhood: int = 8,
+                           ttl: bool = False) -> HopscotchShardServer:
     """Build (and cache per geometry) the per-shard hopscotch get chain.
 
     ``2 * neighborhood`` payload words / scatter entries must fit the
     RECV scatter limit (§5.3: 16 scatters), so ``neighborhood <= 8``.
+
+    With ``ttl=True`` each probe additionally evaluates the expiry
+    predicate on device (see :class:`HopscotchShardServer`): the probe
+    READ already lands the bucket's pad word — now the deadline — on the
+    response WR's flags field; a Calc chain (ADD the scattered ``-now``,
+    MAX 0, MIN 1) collapses it to ``e in {0, 1}`` and an ``e == 0`` CAS
+    arms a *tester* that un-converts the matched response WRITE, so an
+    expired hit answers as a miss without any host compare.  The request
+    sends ``[key, -now]`` once (plus the probe addrs), so the scatter
+    budget is ``2 + H <= 16`` instead of the default build's ``2H``.
     """
     if not 1 <= neighborhood <= isa.MAX_SCATTER // 2:
         raise ValueError(
@@ -367,13 +428,14 @@ def build_hopscotch_server(n_buckets: int, val_len: int,
     row_stride = val_len + 1
     h = neighborhood
 
-    # size the image exactly: code (1 guard + recv + 6 slots per probe)
-    # grows up, data grows down
-    code_words = (1 + 2 + 6 * h) * isa.WR_WORDS
+    # size the image exactly: code (1 guard + recv + 6 [ttl: 17] slots per
+    # probe) grows up, data grows down
+    code_words = (1 + 2 + (4 + 13 if ttl else 6) * h) * isa.WR_WORDS
     data_words = (row_stride                      # response region
                   + n_buckets * row_stride        # value rows [flag, v...]
                   + n_buckets * BUCKET_WORDS      # table
-                  + 1 + 2 * h)                    # scatter table
+                  + (2 + h if ttl else 0)         # key/-now words, e cells
+                  + 1 + (2 + h if ttl else 2 * h))  # scatter table
     mem_words = -(-(code_words + data_words + 32) // 128) * 128
 
     p = Program(mem_words)
@@ -385,42 +447,99 @@ def build_hopscotch_server(n_buckets: int, val_len: int,
     values = p.alloc(n_buckets * row_stride,
                      [0] * (n_buckets * row_stride), "values")
     # table rows [key=0, pad, val_ptr]: val_ptr column baked statically
-    tbl_init = [0] * (n_buckets * BUCKET_WORDS)
+    # (the pad column holds the deadline in a TTL build; device_state
+    # scatters it, NO_TTL statically so an unscattered row never expires)
+    tbl_init = [NO_TTL if ttl else 0] * (n_buckets * BUCKET_WORDS)
     for b in range(n_buckets):
+        tbl_init[b * BUCKET_WORDS] = 0
         tbl_init[b * BUCKET_WORDS + 2] = values + b * row_stride
     table = p.alloc(n_buckets * BUCKET_WORDS, tbl_init, "table")
+    key_w = p.word(0, "key") if ttl else None
+    negnow_w = p.word(0, "negnow") if ttl else None
 
     rq = p.add_wq(2)
     cas_opa_addrs, read_src_addrs = [], []
     for pi in range(h):
-        wq1 = p.add_wq(2, ordering=isa.ORD_DOORBELL, managed=True)
-        wq2 = p.add_wq(4, ordering=isa.ORD_DOORBELL, managed=True,
-                       initial_enable=3)
-        wq1.wait(rq, 1, tag=f"hs.trig{pi}")
-        wq1.initial_enable = wq1.n_posted + 1
-        rd = wq1.read(src=0, dst=0, ln=BUCKET_WORDS, tag=f"hs.read{pi}")
+        if not ttl:
+            wq1 = p.add_wq(2, ordering=isa.ORD_DOORBELL, managed=True)
+            wq2 = p.add_wq(4, ordering=isa.ORD_DOORBELL, managed=True,
+                           initial_enable=3)
+            wq1.wait(rq, 1, tag=f"hs.trig{pi}")
+            wq1.initial_enable = wq1.n_posted + 1
+            rd = wq1.read(src=0, dst=0, ln=BUCKET_WORDS, tag=f"hs.read{pi}")
 
-        wq2.wait(wq1, rd.completion_count, tag=f"hs.sync{pi}")
+            wq2.wait(wq1, rd.completion_count, tag=f"hs.sync{pi}")
+            cas = wq2.cas(dst=0, old=isa.pack_ctrl(isa.NOOP, 0),
+                          new=isa.pack_ctrl(isa.WRITE, 0),
+                          tag=f"hs.cas{pi}")
+            wq2.enable(wq2, upto=4, tag=f"hs.en{pi}")
+            # the response: NOOP unless the CAS converts it; the bucket row
+            # [key, pad, val_ptr] lands on its [ctrl, flags, src]
+            r4 = wq2.post(isa.NOOP, src=0, dst=resp, ln=row_stride,
+                          tag=f"hs.resp{pi}")
+            wq1.wrs[rd.slot]["dst"] = r4.ctrl_addr
+            wq2.wrs[cas.slot]["dst"] = r4.ctrl_addr
+            cas_opa_addrs.append(cas.addr("opa"))
+            read_src_addrs.append(rd.addr("src"))
+            continue
+
+        # TTL probe: wq1 patches key/-now into wq2's compare verbs, then
+        # the usual 3-word probe READ; wq2 computes e = clamp(deadline -
+        # now) between the match CAS and the response slot and arms the
+        # tester iff expired.  Chained self-enables fence the tester (10)
+        # and the response (12) behind the arithmetic.
+        e_cell = p.word(0, f"e{pi}")
+        wq1 = p.add_wq(4, ordering=isa.ORD_DOORBELL, managed=True)
+        wq2 = p.add_wq(13, ordering=isa.ORD_DOORBELL, managed=True,
+                       initial_enable=10)
+        wq1.wait(rq, 1, tag=f"hs.trig{pi}")
+        wq1.write(src=key_w, dst=wq2.future_wr_addr(1, "opa"),
+                  tag=f"hs.key{pi}")              # match comparand <- key
+        wq1.write(src=negnow_w, dst=wq2.future_wr_addr(4, "opa"),
+                  tag=f"hs.now{pi}")              # ADD operand <- -now
+        rd = wq1.read(src=0, dst=0, ln=BUCKET_WORDS, tag=f"hs.read{pi}")
+        wq1.initial_enable = wq1.n_posted + 1
+
+        wq2.wait(wq1, rd.completion_count, tag=f"hs.sync{pi}")      # [0]
         cas = wq2.cas(dst=0, old=isa.pack_ctrl(isa.NOOP, 0),
-                      new=isa.pack_ctrl(isa.WRITE, 0), tag=f"hs.cas{pi}")
-        wq2.enable(wq2, upto=4, tag=f"hs.en{pi}")
-        # the response: NOOP unless the CAS converts it; the bucket row
-        # [key, pad, val_ptr] lands on its [ctrl, flags, src]
+                      new=isa.pack_ctrl(isa.WRITE, 0),
+                      tag=f"hs.cas{pi}")                            # [1]
+        wq2.write(src=wq2.future_wr_addr(10, "flags"), dst=e_cell,
+                  tag=f"hs.exp{pi}")              # [2] deadline -> e
+        wq2.write_imm(dst=wq2.future_wr_addr(9, "flags"), value=0,
+                      tag=f"hs.fl0{pi}")          # [3] flags hygiene
+        wq2.add(dst=e_cell, addend=0, tag=f"hs.sub{pi}")            # [4]
+        wq2.max_(dst=e_cell, operand=0, tag=f"hs.clm{pi}")          # [5]
+        wq2.min_(dst=e_cell, operand=1, tag=f"hs.cl1{pi}")          # [6]
+        wq2.write(src=e_cell, dst=wq2.future_wr_addr(3, "ctrl"),
+                  tag=f"hs.et{pi}")               # [7] e -> tester ctrl
+        wq2.cas(dst=wq2.future_wr_addr(2, "ctrl"),
+                old=isa.pack_ctrl(isa.NOOP, 0),
+                new=isa.pack_ctrl(isa.CAS, 0),
+                tag=f"hs.arm{pi}")                # [8] arm tester iff e=0
+        wq2.enable(wq2, upto=12, tag=f"hs.en{pi}")                  # [9]
+        # the tester: NOOP unless armed; armed, it CASes the response WR
+        # back WRITE -> NOOP (an expired match answers as a miss)
+        wq2.post(isa.NOOP, src=-1, dst=wq2.future_wr_addr(2, "ctrl"),
+                 opa=isa.pack_ctrl(isa.WRITE, 0),
+                 opb=isa.pack_ctrl(isa.NOOP, 0),
+                 tag=f"hs.tst{pi}")               # [10]
+        wq2.enable(wq2, upto=13, tag=f"hs.en2{pi}")                 # [11]
         r4 = wq2.post(isa.NOOP, src=0, dst=resp, ln=row_stride,
-                      tag=f"hs.resp{pi}")
+                      tag=f"hs.resp{pi}")         # [12]
         wq1.wrs[rd.slot]["dst"] = r4.ctrl_addr
         wq2.wrs[cas.slot]["dst"] = r4.ctrl_addr
-        cas_opa_addrs.append(cas.addr("opa"))
         read_src_addrs.append(rd.addr("src"))
 
-    tbl = p.scatter_table(cas_opa_addrs + read_src_addrs)
+    tbl = p.scatter_table(
+        ([key_w, negnow_w] if ttl else cas_opa_addrs) + read_src_addrs)
     rq.recv(scatter_table=tbl, tag="hs.recv")
 
     spec, st0 = p.finalize()
     return HopscotchShardServer(
         prog=p, spec=spec, state0=st0, n_buckets=n_buckets, val_len=val_len,
         neighborhood=neighborhood, table_base=table, values_base=values,
-        resp_region=resp, recv_wq=rq.index)
+        resp_region=resp, recv_wq=rq.index, ttl=ttl)
 
 
 # ---------------------------------------------------------------------------
@@ -870,6 +989,7 @@ class MultiWriterGroup:
     values_base: int
     lanes: tuple               # per writer: (recv_wq, resp_region)
     writer_slices: tuple       # per writer: (lo, hi) WQ index range
+    lane_kinds: tuple          # per writer: "set" | "delete"
 
     resp_words = 2             # [status, bucket addr] per lane
 
@@ -891,14 +1011,18 @@ class MultiWriterGroup:
         return int(max(tails[lo:hi].sum()
                        for lo, hi in self.writer_slices)) + 1
 
-    def device_state(self, keys: jnp.ndarray,
-                     vals: jnp.ndarray) -> machine.VMState:
+    def device_state(self, keys: jnp.ndarray, vals: jnp.ndarray,
+                     exp: Optional[jnp.ndarray] = None) -> machine.VMState:
         """Image with the shared shard slice scattered in (see
-        :meth:`HopscotchShardWriter.device_state`)."""
+        :meth:`HopscotchShardWriter.device_state`).  ``exp`` (only with a
+        ``"sweep"`` lane): per-bucket TTL deadlines into the pad words."""
         rows = jnp.arange(self.n_buckets, dtype=jnp.int32)
         mem = self.state0.mem
         mem = mem.at[self.table_base + rows * BUCKET_WORDS].set(
             keys.astype(jnp.int32))
+        if exp is not None:
+            mem = mem.at[self.table_base + rows * BUCKET_WORDS + 1].set(
+                exp.astype(jnp.int32))
         vidx = (self.values_base + rows[:, None] * self.val_len
                 + jnp.arange(self.val_len, dtype=jnp.int32)[None, :])
         mem = mem.at[vidx.reshape(-1)].set(
@@ -918,9 +1042,33 @@ class MultiWriterGroup:
              values.astype(jnp.int32).reshape(-1, self.val_len), addrs],
             axis=1)
 
+    def device_delete_payloads(self, queries: jnp.ndarray,
+                               home: jnp.ndarray) -> jnp.ndarray:
+        """``[key, probe addrs x H]`` for a DELETE lane — narrower than a
+        SET row; the caller zero-pads rows to a common width (a lane's
+        RECV scatters exactly its own scatter-table length, so trailing
+        pad words are never read)."""
+        h = self.neighborhood
+        offs = jnp.arange(h, dtype=jnp.int32)
+        rows = (home[:, None] + offs[None, :]) % self.n_buckets
+        addrs = (self.table_base + rows * BUCKET_WORDS).astype(jnp.int32)
+        return jnp.concatenate(
+            [queries[:, None].astype(jnp.int32), addrs], axis=1)
+
+    def device_sweep_payloads(self, buckets: jnp.ndarray,
+                              now) -> jnp.ndarray:
+        """``[bucket_addr, deadline_addr, -now]`` for a SWEEP lane (same
+        wire row as :meth:`ClockSweeper.device_payloads`); caller
+        zero-pads rows to the group's common width."""
+        b = buckets.astype(jnp.int32)
+        addr = self.table_base + b * BUCKET_WORDS
+        negnow = jnp.broadcast_to(-jnp.asarray(now, jnp.int32), b.shape)
+        return jnp.stack([addr, addr + 1, negnow], axis=1)
+
     def run_group(self, keys: jnp.ndarray, vals: jnp.ndarray,
                   payloads: jnp.ndarray, schedule: machine.Schedule,
-                  max_steps: int = 4096):
+                  max_steps: int = 4096,
+                  exp: Optional[jnp.ndarray] = None):
         """One concurrent group round: deliver payload row ``w`` to lane
         ``w``, run all lanes over the shared image under ``schedule``,
         read the table/value regions straight back (torn-image commit —
@@ -931,8 +1079,15 @@ class MultiWriterGroup:
         zero-padded lane (key 0) probes the null guard region and reports
         status 0; its claim phase starves on the ghost match, so it never
         touches the table.
+
+        With ``exp`` (a group that has a ``"sweep"`` lane) the deadline
+        column rides the image too and the return gains a fourth element
+        ``new_exp``.  Buckets that came back EMPTY are normalized to
+        :data:`NO_TTL` — the delete lane's deadline reset is modeled at
+        the commit layer, same as the sharded store's
+        ``sharded_delete``.
         """
-        st = self.device_state(keys, vals)
+        st = self.device_state(keys, vals, exp)
         for w, (recv_wq, _) in enumerate(self.lanes):
             st = machine.deliver(st, recv_wq, payloads[w])
         out = machine.run_scheduled(self.spec, st, schedule,
@@ -945,23 +1100,50 @@ class MultiWriterGroup:
         status = jnp.stack(
             [jnp.where(payloads[w][0] == EMPTY_KEY, 0, out.mem[resp])
              for w, (_, resp) in enumerate(self.lanes)])
+        if exp is None:
+            return (status, keys_out.astype(keys.dtype),
+                    vals_out.astype(vals.dtype))
+        exp_out = out.mem[self.table_base + rows * BUCKET_WORDS + 1]
+        exp_out = jnp.where(keys_out == EMPTY_KEY, jnp.int32(NO_TTL),
+                            exp_out)
         return (status, keys_out.astype(keys.dtype),
-                vals_out.astype(vals.dtype))
+                vals_out.astype(vals.dtype), exp_out.astype(exp.dtype))
 
 
 @functools.lru_cache(maxsize=None)
 def build_multi_writer_group(n_buckets: int, val_len: int,
-                             neighborhood: int = 8,
-                             n_writers: int = 2) -> MultiWriterGroup:
+                             neighborhood: int = 8, n_writers: int = 2,
+                             lane_kinds: Optional[tuple] = None,
+                             ) -> MultiWriterGroup:
     """Build (and cache per geometry) the N-writer shared-table group.
 
     Structurally ``n_writers`` copies of :func:`build_hopscotch_writer`'s
     lane emitted into one :class:`Program` against one table/values
     allocation; each lane's WQs form a contiguous index slice for
     :func:`machine.run_scheduled` masking.
+
+    ``lane_kinds`` (default: all ``"set"``) assigns each lane a verb —
+    ``"set"``, ``"delete"``, or ``"sweep"`` — so the full Memcached write
+    mix races under one schedule; a delete lane is
+    :func:`_emit_delete_probes` against the shared table (payload rows:
+    :meth:`MultiWriterGroup.device_delete_payloads`), a sweep lane is the
+    CLOCK eviction body (:func:`_emit_sweep_lane`; payload rows:
+    :meth:`MultiWriterGroup.device_sweep_payloads`, table pad words carry
+    the deadlines — pass ``exp`` to ``device_state``/``run_group``).
     """
     if n_writers < 1:
         raise ValueError("n_writers must be >= 1")
+    if lane_kinds is None:
+        lane_kinds = ("set",) * n_writers
+    lane_kinds = tuple(lane_kinds)
+    if len(lane_kinds) != n_writers:
+        raise ValueError(
+            f"lane_kinds has {len(lane_kinds)} entries for "
+            f"{n_writers} writers")
+    bad = sorted(set(lane_kinds) - {"set", "delete", "sweep"})
+    if bad:
+        raise ValueError(f"unknown lane kinds {bad!r} "
+                         "(expected 'set', 'delete', or 'sweep')")
     if not 1 <= neighborhood:
         raise ValueError("neighborhood must be >= 1")
     if 1 + val_len + neighborhood > min(isa.MAX_SCATTER, isa.MSG_WORDS):
@@ -969,44 +1151,93 @@ def build_multi_writer_group(n_buckets: int, val_len: int,
             f"val_len {val_len} + neighborhood {neighborhood} exceeds the "
             f"one-SEND request budget ({isa.MAX_SCATTER}-scatter RECV)")
     h = neighborhood
+    n_del = lane_kinds.count("delete")
+    n_swp = lane_kinds.count("sweep")
+    n_set = n_writers - n_del - n_swp
 
     # exact image sizing: guard + per-lane code; shared table/values + per-
-    # lane data (mirrors build_hopscotch_writer's accounting)
-    lane_code = (2 + h * (7 + 3 + 3) + 5 * h + 4 * h + 3 * h)
-    code_words = (1 + n_writers * lane_code) * isa.WR_WORDS
-    lane_data = (2 + 1 + val_len                     # resp, key_w, val_stage
-                 + h * 2 * (2 * isa.WR_WORDS + 2)    # templates + stages
-                 + 2 + val_len + h)                  # scatter table
+    # lane data (mirrors build_hopscotch_writer's / the deleter's / the
+    # sweeper's accounting).  A delete or sweep lane's ghost lap covers
+    # words [0..2] and a val_len zero-write, so the guard widens when one
+    # is present.
+    lane_code_set = (2 + h * (7 + 3 + 3) + 5 * h + 4 * h + 3 * h)
+    lane_code_del = 2 + h * (8 + 3 + 4 + 3)
+    lane_code_swp = 2 + sum(_SWEEP_WQS)
+    guard_slots = (1 if not (n_del or n_swp)
+                   else max(1, -(-val_len // isa.WR_WORDS)))
+    code_words = (guard_slots + n_set * lane_code_set
+                  + n_del * lane_code_del
+                  + n_swp * lane_code_swp) * isa.WR_WORDS
+    lane_data_set = (2 + 1 + val_len                 # resp, key_w, val_stage
+                     + h * 2 * (2 * isa.WR_WORDS + 2)  # templates + stages
+                     + 2 + val_len + h)              # scatter table
+    lane_data_del = (2 + 1                           # resp, key_w
+                     + h * (2 * isa.WR_WORDS + 2)    # templates + stages
+                     + 2 + h)                        # scatter table
+    lane_data_swp = 2 + 2 + 1 + 3                    # resp, cells, scatter
     data_words = (n_buckets * val_len + n_buckets * BUCKET_WORDS
-                  + n_writers * lane_data)
+                  + (val_len if (n_del or n_swp) else 0)  # shared zero row
+                  + (1 if n_swp else 0)              # shared NO_TTL word
+                  + n_set * lane_data_set
+                  + n_del * lane_data_del
+                  + n_swp * lane_data_swp)
     mem_words = -(-(code_words + data_words + 32) // 128) * 128
 
     p = Program(mem_words)
-    p.add_wq(1)                 # WQ0: all-zero null bucket (padding guard)
+    p.add_wq(guard_slots)       # WQ0: all-zero null bucket (padding guard)
 
-    # shared state: ONE value region, ONE table
+    # shared state: ONE value region, ONE table (pad words carry the TTL
+    # deadlines when a sweep lane is present — NO_TTL until scattered)
     values = p.alloc(n_buckets * val_len, name="values")
     tbl_init = [0] * (n_buckets * BUCKET_WORDS)
     for b in range(n_buckets):
+        if n_swp:
+            tbl_init[b * BUCKET_WORDS + 1] = NO_TTL
         tbl_init[b * BUCKET_WORDS + 2] = values + b * val_len
     table = p.alloc(n_buckets * BUCKET_WORDS, tbl_init, "table")
+    zeros_v = (p.alloc(val_len, [0] * val_len, "zeros")
+               if (n_del or n_swp) else None)
+    no_ttl_w = p.word(NO_TTL, "no_ttl") if n_swp else None
 
     lanes, slices = [], []
-    for w in range(n_writers):
-        resp = p.alloc(2, [SET_NEEDS_DISPLACEMENT, 0], f"resp{w}")
-        key_w = p.word(0, f"key{w}")
-        val_stage = p.alloc(val_len, [0] * val_len, f"val_stage{w}")
+    for w, kind in enumerate(lane_kinds):
+        if kind == "set":
+            resp = p.alloc(2, [SET_NEEDS_DISPLACEMENT, 0], f"resp{w}")
+            key_w = p.word(0, f"key{w}")
+            val_stage = p.alloc(val_len, [0] * val_len, f"val_stage{w}")
 
-        lo = len(p.wqs)
-        rq = p.add_wq(2)
-        rd1s, m_tmpls, m_mods = _emit_set_match_phase(
-            p, rq, h, key_w, val_stage, val_len, resp)
-        _emit_set_claim_phase(p, rd1s, m_tmpls, m_mods, h, key_w,
-                              val_stage, val_len, resp)
-        tbl = p.scatter_table(
-            [key_w] + [val_stage + j for j in range(val_len)]
-            + [rd.addr("src") for rd in rd1s])
-        rq.recv(scatter_table=tbl, tag="wr.recv")
+            lo = len(p.wqs)
+            rq = p.add_wq(2)
+            rd1s, m_tmpls, m_mods = _emit_set_match_phase(
+                p, rq, h, key_w, val_stage, val_len, resp)
+            _emit_set_claim_phase(p, rd1s, m_tmpls, m_mods, h, key_w,
+                                  val_stage, val_len, resp)
+            tbl = p.scatter_table(
+                [key_w] + [val_stage + j for j in range(val_len)]
+                + [rd.addr("src") for rd in rd1s])
+            rq.recv(scatter_table=tbl, tag="wr.recv")
+        elif kind == "delete":
+            resp = p.alloc(2, [DEL_MISS, 0], f"resp{w}")
+            key_w = p.word(0, f"key{w}")
+
+            lo = len(p.wqs)
+            rq = p.add_wq(2)
+            rd1s = _emit_delete_probes(p, rq, h, val_len, key_w, resp,
+                                       zeros_v)
+            tbl = p.scatter_table(
+                [key_w] + [rd.addr("src") for rd in rd1s])
+            rq.recv(scatter_table=tbl, tag="dl.recv")
+        else:
+            resp = p.alloc(2, [SWEEP_LIVE, 0], f"resp{w}")
+            bucket_w = p.word(0, f"bucket{w}")
+            e_cell = p.word(0, f"e{w}")
+
+            lo = len(p.wqs)
+            rq = p.add_wq(2)
+            scatter = _emit_sweep_lane(p, rq, val_len, resp, bucket_w,
+                                       e_cell, no_ttl_w, zeros_v)
+            tbl = p.scatter_table(scatter)
+            rq.recv(scatter_table=tbl, tag="sw.recv")
         lanes.append((rq.index, resp))
         slices.append((lo, len(p.wqs)))
 
@@ -1015,7 +1246,7 @@ def build_multi_writer_group(n_buckets: int, val_len: int,
         prog=p, spec=spec, state0=st0, n_buckets=n_buckets,
         val_len=val_len, neighborhood=neighborhood, n_writers=n_writers,
         table_base=table, values_base=values, lanes=tuple(lanes),
-        writer_slices=tuple(slices))
+        writer_slices=tuple(slices), lane_kinds=lane_kinds)
 
 
 # ---------------------------------------------------------------------------
@@ -1929,6 +2160,517 @@ def build_hopscotch_migrator(n_buckets: int, val_len: int,
         neighborhood=h, old_table_base=table_old,
         old_values_base=values_old, new_table_base=table_new,
         new_values_base=values_new, resp_region=resp, recv_wq=rq.index)
+
+
+# ---------------------------------------------------------------------------
+# the Memcached lifecycle verbs: DELETE and the CLOCK expiry sweeper
+# ---------------------------------------------------------------------------
+
+def _emit_delete_probes(p: Program, rq, h: int, val_len: int, key_w: int,
+                        resp: int, zeros: int):
+    """The DELETE programs' match-and-vacate phase: H parallel probes.
+
+    Migrator-shaped (``_mig_templates`` conversions, ENABLE-as-event),
+    but with no claim phase — a delete of an absent key does nothing, so
+    an all-miss batch simply quiesces on the pre-set ``[DEL_MISS, 0]``
+    default.  Each probe READs its bucket key onto a conditional WR's
+    control word and CAS-tests it against the query key; a hit converts
+    the conditional into a template copy whose two suppressed events land
+    ``[DEL_DELETED, bucket_addr]`` in the response region and ENABLE the
+    probe's private vacate WQ — :func:`repro.core.constructs.
+    emit_bucket_vacate` on the matched bucket (re-read-comparand CAS
+    ``key -> EMPTY``, then the stale value row zeroed).  The hopscotch
+    invariant (a key occupies at most one bucket) means at most one
+    probe converts per request.  Shared by
+    :func:`build_hopscotch_deleter` and the delete lanes of
+    :func:`build_multi_writer_group`.  Returns the probe READs (their
+    ``src`` fields are the RECV scatter targets).
+    """
+    VAC = 8                    # emit_bucket_vacate's exact WR count
+    rd1s = []
+    for pi in range(h):
+        vac = p.add_wq(VAC, ordering=isa.ORD_DOORBELL, managed=True,
+                       initial_enable=0)
+        m_tmpl, m_stage = _mig_templates(p, resp, DEL_DELETED,
+                                         vac.index, VAC)
+        mmod = p.add_wq(3, ordering=isa.ORD_DOORBELL, managed=True,
+                        initial_enable=0)
+        mdrv = p.add_wq(4, ordering=isa.ORD_DOORBELL, managed=True)
+        mexe = p.add_wq(3, ordering=isa.ORD_DOORBELL, managed=True,
+                        initial_enable=3)
+
+        c_i = mmod.post(isa.NOOP, src=m_tmpl,
+                        dst=mmod.future_wr_addr(1, "ctrl"),
+                        ln=2 * isa.WR_WORDS, tag=f"dl.mc{pi}")
+        mmod.post(isa.NOOP, tag=f"dl.me{pi}")     # event: response slot
+        mmod.post(isa.NOOP, tag=f"dl.mf{pi}")     # event: ENABLE(vacate)
+
+        mdrv.wait(rq, 1, tag=f"dl.trig{pi}")
+        mdrv.write(src=key_w, dst=mexe.future_wr_addr(1, "opa"),
+                   tag=f"dl.key{pi}")             # CAS comparand <- key
+        rd1 = mdrv.read(src=0, dst=c_i.ctrl_addr, ln=1,
+                        tag=f"dl.read{pi}")       # src RECV-scattered
+        last = mdrv.write(src=rd1.addr("src"), dst=m_stage + 1,
+                          tag=f"dl.addr{pi}")     # bucket addr -> response
+        mdrv.initial_enable = mdrv.n_posted + 1
+
+        mexe.wait(mdrv, last.completion_count, tag=f"dl.sync{pi}")
+        mexe.cas(dst=c_i.ctrl_addr, old=isa.pack_ctrl(isa.NOOP, 0),
+                 new=isa.pack_ctrl(isa.WRITE, 0), tag=f"dl.cas{pi}")
+        mexe.enable(mmod, upto=3, tag=f"dl.en{pi}")
+
+        # the vacate reads its bucket address out of the probe READ's own
+        # src field — the scattered cell itself, no copy needed
+        constructs.emit_bucket_vacate(vac, bucket_w=rd1.addr("src"),
+                                      val_len=val_len, zeros=zeros,
+                                      empty_key=EMPTY_KEY,
+                                      tag=f"dl.vac{pi}")
+        rd1s.append(rd1)
+    return rd1s
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class HopscotchShardDeleter:
+    """The delete-side companion of :class:`HopscotchShardWriter` — the
+    verb that makes the store a *cache* (a KV store that can never forget
+    is not one).  The client SEND carries ``[key, probe-bucket addrs x
+    H]``; the chain is a match phase feeding per-probe
+    :func:`repro.core.constructs.emit_bucket_vacate` retirements (see
+    :func:`_emit_delete_probes`), so the bucket transition ``key ->
+    EMPTY`` is a re-read-comparand CAS against the table itself and the
+    value row is zeroed before the response commits — exactly the
+    migrator's retirement discipline, reused verbatim.
+
+    Bit-exact with :func:`repro.kvstore.hopscotch.delete_many`
+    (:meth:`HopscotchTable.delete <repro.kvstore.hopscotch.
+    HopscotchTable.delete>` applied in order); commit/fault semantics
+    mirror the writer's (status-gated fold vs torn-image readback).
+    """
+    prog: Program
+    spec: machine.MachineSpec
+    state0: machine.VMState
+    n_buckets: int
+    val_len: int
+    neighborhood: int
+    table_base: int
+    values_base: int
+    resp_region: int
+    recv_wq: int
+
+    resp_words = 2                     # [status, bucket addr]
+
+    @property
+    def engine(self) -> ChainEngine:
+        return ChainEngine.for_spec(self.spec)
+
+    @property
+    def fuel(self) -> int:
+        """Exact step budget (no WQ recycles; see
+        :attr:`HopscotchShardWriter.fuel`)."""
+        return int(np.asarray(self.state0.tail).sum()) + 1
+
+    def device_state(self, keys: jnp.ndarray,
+                     vals: jnp.ndarray) -> machine.VMState:
+        """Image with this shard's authoritative slice scattered in
+        (see :meth:`HopscotchShardWriter.device_state`)."""
+        rows = jnp.arange(self.n_buckets, dtype=jnp.int32)
+        mem = self.state0.mem
+        mem = mem.at[self.table_base + rows * BUCKET_WORDS].set(
+            keys.astype(jnp.int32))
+        vidx = (self.values_base + rows[:, None] * self.val_len
+                + jnp.arange(self.val_len, dtype=jnp.int32)[None, :])
+        mem = mem.at[vidx.reshape(-1)].set(
+            vals.astype(jnp.int32).reshape(-1))
+        return self.state0._replace(mem=mem)
+
+    def device_payloads(self, queries: jnp.ndarray,
+                        home: jnp.ndarray) -> jnp.ndarray:
+        """Client-side request assembly: ``[key, probe addrs x H]``."""
+        h = self.neighborhood
+        offs = jnp.arange(h, dtype=jnp.int32)
+        rows = (home[:, None] + offs[None, :]) % self.n_buckets
+        addrs = (self.table_base + rows * BUCKET_WORDS).astype(jnp.int32)
+        return jnp.concatenate(
+            [queries[:, None].astype(jnp.int32), addrs], axis=1)
+
+    def commit(self, out_mem: jnp.ndarray, payload: jnp.ndarray,
+               keys: jnp.ndarray, vals: jnp.ndarray):
+        """Fold one quiesced context's effects into the shard arrays:
+        a ``DEL_DELETED`` response vacates the reported bucket (key ->
+        EMPTY, value row zeroed); a miss commits nothing.  Padded rows
+        (key 0) report status 0."""
+        status = out_mem[self.resp_region]
+        addr = out_mem[self.resp_region + 1]
+        applied = (payload[0] != EMPTY_KEY) & (status == DEL_DELETED)
+        row = jnp.where(applied,
+                        (addr - self.table_base) // BUCKET_WORDS, 0)
+        keys = keys.at[row].set(
+            jnp.where(applied, EMPTY_KEY, keys[row]))
+        vals = vals.at[row].set(
+            jnp.where(applied, jnp.zeros_like(vals[row]), vals[row]))
+        return jnp.where(payload[0] == EMPTY_KEY, 0, status), keys, vals
+
+    def commit_torn(self, out_mem: jnp.ndarray, payload: jnp.ndarray,
+                    keys: jnp.ndarray, vals: jnp.ndarray):
+        """Fault-mode commit: the torn image itself (see
+        :meth:`HopscotchShardWriter.commit_torn`) — a vacate CAS that
+        landed without its row zeroing is exactly what fsck's
+        stale-row/torn-vacate classifiers exist for."""
+        rows = jnp.arange(self.n_buckets, dtype=jnp.int32)
+        keys_out = out_mem[self.table_base + rows * BUCKET_WORDS]
+        cols = jnp.arange(self.val_len, dtype=jnp.int32)[None, :]
+        vals_out = out_mem[self.values_base
+                           + rows[:, None] * self.val_len + cols]
+        status = out_mem[self.resp_region]
+        return (jnp.where(payload[0] == EMPTY_KEY, 0, status),
+                keys_out.astype(keys.dtype), vals_out.astype(vals.dtype))
+
+    def run_one(self, keys: jnp.ndarray, vals: jnp.ndarray,
+                payload: jnp.ndarray, max_steps: int = 512):
+        """Serve one assembled DELETE against the shard arrays.
+        Returns ``(status, new_keys, new_vals)``."""
+        st = machine.deliver(self.device_state(keys, vals), self.recv_wq,
+                             payload)
+        out = self.engine.run(st, max_steps)
+        return self.commit(out.mem, payload, keys, vals)
+
+    def run_one_faulted(self, keys: jnp.ndarray, vals: jnp.ndarray,
+                        payload: jnp.ndarray, max_steps: int, faults):
+        """:meth:`run_one` under a :class:`repro.core.faults.FaultPlan`
+        (see :meth:`HopscotchShardWriter.run_one_faulted`)."""
+        st = machine.deliver(self.device_state(keys, vals), self.recv_wq,
+                             payload)
+        out = self.engine.run(st, max_steps, faults)
+        torn = self.commit_torn(out.mem, payload, keys, vals)
+        clean = self.commit(out.mem, payload, keys, vals)
+        act = faults.active()
+        return tuple(jnp.where(act, t, c) for t, c in zip(torn, clean))
+
+    def delete_many(self, keys: jnp.ndarray, vals: jnp.ndarray,
+                    queries: jnp.ndarray, home: jnp.ndarray,
+                    max_steps: int = 512):
+        """Single-machine batched DELETE (tests / benchmarks): one
+        ``lax.scan`` over the batch, each chain committed before the
+        next — bit-exact with :func:`repro.kvstore.hopscotch.
+        delete_many`.  Returns ``(status (B,), new_keys, new_vals)``."""
+        payloads = self.device_payloads(queries, home)
+
+        def step(carry, pay):
+            status, tk, tv = self.run_one(*carry, pay, max_steps)
+            return (tk, tv), status
+
+        (nk, nv), statuses = jax.lax.scan(step, (keys, vals), payloads)
+        return statuses, nk, nv
+
+
+@functools.lru_cache(maxsize=None)
+def build_hopscotch_deleter(n_buckets: int, val_len: int,
+                            neighborhood: int = 8) -> HopscotchShardDeleter:
+    """Build (and cache per geometry) the per-shard hopscotch DELETE chain.
+
+    ``1 + neighborhood`` payload words must fit the RECV scatter limit
+    (§5.3: 16 scatters), so ``neighborhood <= 15``.
+    """
+    if not 1 <= neighborhood:
+        raise ValueError("neighborhood must be >= 1")
+    if 1 + neighborhood > min(isa.MAX_SCATTER, isa.MSG_WORDS):
+        raise ValueError(
+            f"neighborhood {neighborhood} exceeds the one-SEND request "
+            f"budget ({isa.MAX_SCATTER}-scatter RECV)")
+    if val_len > isa.MAX_COPY:
+        raise ValueError(
+            f"val_len {val_len} exceeds the one-WRITE row-zero budget")
+    h = neighborhood
+
+    # exact image sizing: guard + recv + per probe (8 vacate + 3 match-
+    # cond + 4 match-driver + 3 match-exec); a ghost probe (padded key 0,
+    # all probe addrs 0) reads bucket words [0..2] and zero-writes
+    # val_len words at value-pointer 0, all inside the guard
+    guard_slots = max(2, -(-val_len // isa.WR_WORDS))
+    code_words = (guard_slots + 2 + h * (8 + 3 + 4 + 3)) * isa.WR_WORDS
+    data_words = (2 + 1 + val_len              # resp, key_w, zeros
+                  + n_buckets * val_len        # value rows
+                  + n_buckets * BUCKET_WORDS   # table
+                  + h * (2 * isa.WR_WORDS + 2)  # templates + stages
+                  + 1 + 1 + h)                 # scatter table
+    mem_words = -(-(code_words + data_words + 32) // 128) * 128
+
+    p = Program(mem_words)
+    p.add_wq(guard_slots)       # WQ0: all-zero null bucket (padding guard)
+
+    resp = p.alloc(2, [DEL_MISS, 0], "resp")
+    key_w = p.word(0, "key")
+    zeros_v = p.alloc(val_len, [0] * val_len, "zeros")
+    values = p.alloc(n_buckets * val_len, name="values")
+    tbl_init = [0] * (n_buckets * BUCKET_WORDS)
+    for b in range(n_buckets):
+        tbl_init[b * BUCKET_WORDS + 2] = values + b * val_len
+    table = p.alloc(n_buckets * BUCKET_WORDS, tbl_init, "table")
+
+    rq = p.add_wq(2)
+    rd1s = _emit_delete_probes(p, rq, h, val_len, key_w, resp, zeros_v)
+
+    tbl = p.scatter_table([key_w] + [rd.addr("src") for rd in rd1s])
+    rq.recv(scatter_table=tbl, tag="dl.recv")
+
+    spec, st0 = p.finalize()
+    return HopscotchShardDeleter(
+        prog=p, spec=spec, state0=st0, n_buckets=n_buckets,
+        val_len=val_len, neighborhood=neighborhood, table_base=table,
+        values_base=values, resp_region=resp, recv_wq=rq.index)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ClockSweeper:
+    """One CLOCK-hand lap of chain-driven TTL eviction.
+
+    Each request visits ONE bucket (the hand advances one bucket per
+    request, exactly like the migrator visits one source bucket per lap):
+    the chain READs the bucket's deadline word, evaluates the expiry
+    predicate in Calc verbs (``e = min(max(deadline - now, 0), 1)``), and
+    an :func:`repro.core.constructs.emit_enable_branch` on ``e`` either
+    releases the **vacate** arm — :func:`~repro.core.constructs.
+    emit_bucket_vacate` on the bucket, then the deadline reset to
+    :data:`NO_TTL`, then ``SWEEP_RECLAIMED`` reported — or the **live**
+    arm (``SWEEP_LIVE``, bucket untouched).  The deadline column lives in
+    the bucket pad words, same as the TTL GET server's layout, so one
+    ``(keys, vals, exp)`` triple describes the shard to every lifecycle
+    program.
+
+    An EMPTY bucket whose deadline was somehow left stale (a torn vacate)
+    takes the vacate arm harmlessly — the CAS comparand re-reads EMPTY,
+    the row is already zero, and the deadline reset self-heals exactly
+    the state fsck's ``torn-vacate`` classifier flags.
+
+    Bit-exact with :func:`repro.kvstore.hopscotch.sweep_expired`.
+    """
+    prog: Program
+    spec: machine.MachineSpec
+    state0: machine.VMState
+    n_buckets: int
+    val_len: int
+    table_base: int
+    values_base: int
+    resp_region: int
+    recv_wq: int
+
+    resp_words = 2                     # [status, bucket addr]
+
+    @property
+    def engine(self) -> ChainEngine:
+        return ChainEngine.for_spec(self.spec)
+
+    @property
+    def fuel(self) -> int:
+        """Exact step budget (no WQ recycles; see
+        :attr:`HopscotchShardWriter.fuel`)."""
+        return int(np.asarray(self.state0.tail).sum()) + 1
+
+    def device_state(self, keys: jnp.ndarray, vals: jnp.ndarray,
+                     exp: jnp.ndarray) -> machine.VMState:
+        """Image with the shard's ``(keys, vals, exp)`` scattered in —
+        deadlines into the bucket pad words."""
+        rows = jnp.arange(self.n_buckets, dtype=jnp.int32)
+        mem = self.state0.mem
+        mem = mem.at[self.table_base + rows * BUCKET_WORDS].set(
+            keys.astype(jnp.int32))
+        mem = mem.at[self.table_base + rows * BUCKET_WORDS + 1].set(
+            exp.astype(jnp.int32))
+        vidx = (self.values_base + rows[:, None] * self.val_len
+                + jnp.arange(self.val_len, dtype=jnp.int32)[None, :])
+        mem = mem.at[vidx.reshape(-1)].set(
+            vals.astype(jnp.int32).reshape(-1))
+        return self.state0._replace(mem=mem)
+
+    def device_payloads(self, buckets: jnp.ndarray, now) -> jnp.ndarray:
+        """Request assembly: ``[bucket_addr, deadline_addr, -now]`` per
+        visited bucket (the driver computes the hand positions; the
+        clock rides the payload so one compiled image serves any now)."""
+        b = buckets.astype(jnp.int32)
+        addr = self.table_base + b * BUCKET_WORDS
+        negnow = jnp.broadcast_to(-jnp.asarray(now, jnp.int32), b.shape)
+        return jnp.stack([addr, addr + 1, negnow], axis=1)
+
+    def commit(self, out_mem: jnp.ndarray, payload: jnp.ndarray,
+               keys: jnp.ndarray, vals: jnp.ndarray, exp: jnp.ndarray):
+        """Fold one quiesced lap back: ``SWEEP_RECLAIMED`` vacates the
+        visited bucket and resets its deadline to :data:`NO_TTL`; a live
+        lap commits nothing.  Padded rows (addr 0) report status 0.
+        Returns ``(status, keys, vals, exp)``."""
+        status = out_mem[self.resp_region]
+        applied = (payload[0] != 0) & (status == SWEEP_RECLAIMED)
+        row = jnp.where(applied,
+                        (payload[0] - self.table_base) // BUCKET_WORDS, 0)
+        keys = keys.at[row].set(jnp.where(applied, EMPTY_KEY, keys[row]))
+        vals = vals.at[row].set(
+            jnp.where(applied, jnp.zeros_like(vals[row]), vals[row]))
+        exp = exp.at[row].set(
+            jnp.where(applied, jnp.int32(NO_TTL), exp[row]))
+        return jnp.where(payload[0] == 0, 0, status), keys, vals, exp
+
+    def commit_torn(self, out_mem: jnp.ndarray, payload: jnp.ndarray,
+                    keys: jnp.ndarray, vals: jnp.ndarray,
+                    exp: jnp.ndarray):
+        """Fault-mode commit: straight readback of keys, values, AND the
+        deadline column (see :meth:`HopscotchShardWriter.commit_torn`) —
+        a cut between the vacate CAS and the deadline reset is precisely
+        fsck's ``torn-vacate``."""
+        rows = jnp.arange(self.n_buckets, dtype=jnp.int32)
+        keys_out = out_mem[self.table_base + rows * BUCKET_WORDS]
+        exp_out = out_mem[self.table_base + rows * BUCKET_WORDS + 1]
+        cols = jnp.arange(self.val_len, dtype=jnp.int32)[None, :]
+        vals_out = out_mem[self.values_base
+                           + rows[:, None] * self.val_len + cols]
+        status = out_mem[self.resp_region]
+        return (jnp.where(payload[0] == 0, 0, status),
+                keys_out.astype(keys.dtype), vals_out.astype(vals.dtype),
+                exp_out.astype(exp.dtype))
+
+    def run_one(self, keys: jnp.ndarray, vals: jnp.ndarray,
+                exp: jnp.ndarray, payload: jnp.ndarray,
+                max_steps: int = 256):
+        """One sweeper lap.  Returns ``(status, keys, vals, exp)``."""
+        st = machine.deliver(self.device_state(keys, vals, exp),
+                             self.recv_wq, payload)
+        out = self.engine.run(st, max_steps)
+        return self.commit(out.mem, payload, keys, vals, exp)
+
+    def run_one_faulted(self, keys: jnp.ndarray, vals: jnp.ndarray,
+                        exp: jnp.ndarray, payload: jnp.ndarray,
+                        max_steps: int, faults):
+        """:meth:`run_one` under a :class:`repro.core.faults.FaultPlan`
+        (see :meth:`HopscotchShardWriter.run_one_faulted`)."""
+        st = machine.deliver(self.device_state(keys, vals, exp),
+                             self.recv_wq, payload)
+        out = self.engine.run(st, max_steps, faults)
+        torn = self.commit_torn(out.mem, payload, keys, vals, exp)
+        clean = self.commit(out.mem, payload, keys, vals, exp)
+        act = faults.active()
+        return tuple(jnp.where(act, t, c) for t, c in zip(torn, clean))
+
+    def sweep(self, keys: jnp.ndarray, vals: jnp.ndarray,
+              exp: jnp.ndarray, start: int, count: int, now,
+              max_steps: int = 256):
+        """``count`` CLOCK laps from the hand at ``start`` (wrapping):
+        one ``lax.scan``, each lap committed before the next.  Returns
+        ``(status (count,), keys, vals, exp)``."""
+        buckets = (jnp.asarray(start, jnp.int32)
+                   + jnp.arange(count, dtype=jnp.int32)) % self.n_buckets
+        payloads = self.device_payloads(buckets, now)
+
+        def step(carry, pay):
+            status, tk, tv, te = self.run_one(*carry, pay, max_steps)
+            return (tk, tv, te), status
+
+        (nk, nv, ne), statuses = jax.lax.scan(
+            step, (keys, vals, exp), payloads)
+        return statuses, nk, nv, ne
+
+
+#: sweeper lane WQ sizes — (ctl, mod, vacate arm, live arm); the group
+#: builder's sizing and :func:`_emit_sweep_lane` must agree on these
+_SWEEP_WQS = (13, 2, 11, 1)
+
+
+def _emit_sweep_lane(p: Program, rq, val_len: int, resp: int,
+                     bucket_w: int, e_cell: int, no_ttl_w: int,
+                     zeros_v: int):
+    """One CLOCK-lap chain body — shared by the standalone sweeper and a
+    ``"sweep"`` lane of :func:`build_multi_writer_group`.
+
+    Emits the control WQ (expiry predicate in Calc verbs, clamped to
+    ``e in {0, 1}``), the enable-branch modifier, and the vacate / live
+    arms against the caller's cells.  Returns the RECV scatter address
+    list ``[bucket_w, read-src patch, ADD-operand patch]``.
+    """
+    CTL, MOD, VAC, LIVE = _SWEEP_WQS
+    ctl = p.add_wq(CTL, ordering=isa.ORD_DOORBELL, managed=True)
+    mod = p.add_wq(MOD, ordering=isa.ORD_DOORBELL, managed=True,
+                   initial_enable=0)
+    vac = p.add_wq(VAC, ordering=isa.ORD_DOORBELL, managed=True,
+                   initial_enable=0)
+    live = p.add_wq(LIVE, ordering=isa.ORD_DOORBELL, managed=True,
+                    initial_enable=0)
+
+    ctl.wait(rq, 1, tag="sw.trig")
+    ctl.write(src=bucket_w, dst=resp + 1, tag="sw.addr")
+    rd = ctl.read(src=0, dst=e_cell, ln=1, tag="sw.exp")  # src scattered
+    ad = ctl.add(dst=e_cell, addend=0, tag="sw.sub")      # opa scattered
+    ctl.max_(dst=e_cell, operand=0, tag="sw.cl0")
+    ctl.min_(dst=e_cell, operand=1, tag="sw.cl1")         # e in {0, 1}
+
+    def load_e(a_addr, b_addr):
+        ctl.write(src=e_cell, dst=a_addr, tag="sw.e1")
+        ctl.write(src=e_cell, dst=b_addr, tag="sw.e2")
+
+    # e = 0 (expired) <= threshold -> vacate arm; e = 1 -> live arm
+    constructs.emit_enable_branch(
+        ctl, mod, threshold=0, then_wq=vac.index, then_upto=VAC,
+        else_wq=live.index, else_upto=LIVE, load=load_e, tag="sw.br")
+    ctl.initial_enable = ctl.n_posted + 1
+
+    # vacate arm: retire the bucket, reset its deadline, report
+    constructs.emit_bucket_vacate(vac, bucket_w=bucket_w, val_len=val_len,
+                                  zeros=zeros_v, empty_key=EMPTY_KEY,
+                                  tag="sw.vac")
+    vac.write(src=rd.addr("src"), dst=vac.future_wr_addr(1, "dst"),
+              tag="sw.rs_p")            # deadline addr <- scattered cell
+    vac.write(src=no_ttl_w, dst=0, ln=1, tag="sw.rs")
+    vac.write_imm(dst=resp, value=SWEEP_RECLAIMED, tag="sw.rc")
+
+    # live arm: the bucket is untouched; the report is the (idempotent)
+    # pre-set default, re-asserted so the arm completes observably
+    live.write_imm(dst=resp, value=SWEEP_LIVE, tag="sw.lv")
+
+    return [bucket_w, rd.addr("src"), ad.addr("opa")]
+
+
+@functools.lru_cache(maxsize=None)
+def build_clock_sweeper(n_buckets: int, val_len: int) -> ClockSweeper:
+    """Build (and cache per geometry) the per-shard CLOCK sweeper chain."""
+    if val_len > isa.MAX_COPY:
+        raise ValueError(
+            f"val_len {val_len} exceeds the one-WRITE row-zero budget")
+
+    # exact image sizing: the ghost lap (padded addr 0) reads words
+    # [0..2] and zero-writes val_len at ptr 0 — guard covers both; a
+    # ghost deadline reset also lands NO_TTL on guard word 0, which is
+    # never executed (WQ0 posts nothing)
+    CTL, MOD, VAC, LIVE = _SWEEP_WQS
+    guard_slots = max(2, -(-val_len // isa.WR_WORDS))
+    code_words = (guard_slots + 2 + CTL + MOD + VAC + LIVE) * isa.WR_WORDS
+    data_words = (2 + 3 + val_len              # resp, cells, zeros
+                  + n_buckets * val_len        # value rows
+                  + n_buckets * BUCKET_WORDS   # table (pad = deadline)
+                  + 1 + 3)                     # scatter table
+    mem_words = -(-(code_words + data_words + 32) // 128) * 128
+
+    p = Program(mem_words)
+    p.add_wq(guard_slots)       # WQ0: all-zero null bucket (padding guard)
+
+    resp = p.alloc(2, [SWEEP_LIVE, 0], "resp")
+    bucket_w = p.word(0, "bucket")     # scattered: visited bucket addr
+    e_cell = p.word(0, "e")
+    no_ttl_w = p.word(NO_TTL, "no_ttl")
+    zeros_v = p.alloc(val_len, [0] * val_len, "zeros")
+    values = p.alloc(n_buckets * val_len, name="values")
+    tbl_init = [0] * (n_buckets * BUCKET_WORDS)
+    for b in range(n_buckets):
+        tbl_init[b * BUCKET_WORDS + 1] = NO_TTL
+        tbl_init[b * BUCKET_WORDS + 2] = values + b * val_len
+    table = p.alloc(n_buckets * BUCKET_WORDS, tbl_init, "table")
+
+    rq = p.add_wq(2)
+    scatter = _emit_sweep_lane(p, rq, val_len, resp, bucket_w, e_cell,
+                               no_ttl_w, zeros_v)
+    tbl = p.scatter_table(scatter)
+    rq.recv(scatter_table=tbl, tag="sw.recv")
+
+    spec, st0 = p.finalize()
+    return ClockSweeper(
+        prog=p, spec=spec, state0=st0, n_buckets=n_buckets,
+        val_len=val_len, table_base=table, values_base=values,
+        resp_region=resp, recv_wq=rq.index)
 
 
 # ---------------------------------------------------------------------------

@@ -1,3 +1,49 @@
 """Memcached-analogue storage substrate: hopscotch/cuckoo tables and the
-sharded KV store with one-sided / two-sided / RedN-offload get paths."""
+sharded KV store with one-sided / two-sided / RedN-offload get paths.
+
+The package's public surface — what the experiments and the README
+snippets spell — re-exported here so callers write
+``from repro.kvstore import ShardedKVService, DeleteResult`` instead of
+spelunking submodules:
+
+* result types: :class:`GetResult`, :class:`SetResult`,
+  :class:`DeleteResult`, :class:`SweepReport` (all share the summarized
+  status-histogram ``repr``), plus :class:`Admission` (the unified
+  ``sharded_get``'s isolation parameter) and
+  :class:`WriterFaultConflict` (the typed ``n_writers``/``faults``
+  exclusivity error);
+* status vocabulary: :data:`STATUS_NAMES` / :func:`status_name` — one
+  table for set/migrate/delete/sweep codes, mirrored verbatim in
+  ``repro.core.programs`` (core never imports kvstore);
+* the host-side oracle table :class:`HopscotchTable` and the serving
+  facade :class:`ShardedKVService` (lazy: it lives in
+  ``repro.rdma.failure``, which itself imports this package).
+"""
 from . import cuckoo, hopscotch, store, fsck  # noqa: F401
+from .hopscotch import STATUS_NAMES, HopscotchTable, status_name  # noqa: F401
+from .store import (  # noqa: F401
+    Admission,
+    DeleteResult,
+    GetResult,
+    SetResult,
+    SweepReport,
+    WriterFaultConflict,
+)
+
+__all__ = [
+    "cuckoo", "hopscotch", "store", "fsck",
+    "Admission", "DeleteResult", "GetResult", "SetResult", "SweepReport",
+    "WriterFaultConflict", "STATUS_NAMES", "status_name", "HopscotchTable",
+    "ShardedKVService",
+]
+
+
+def __getattr__(name):
+    # deferred, not top-level: repro.rdma.failure imports repro.kvstore,
+    # so an eager import here would trip the cycle when failure loads
+    # first.  PEP 562 resolution keeps `from repro.kvstore import
+    # ShardedKVService` working from either direction.
+    if name == "ShardedKVService":
+        from ..rdma.failure import ShardedKVService
+        return ShardedKVService
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

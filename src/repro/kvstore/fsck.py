@@ -44,6 +44,12 @@ apply the *minimal rollback* policy:
                     it and let the re-driven lap re-migrate;
 ``stale-row``       vacate half-done (key EMPTY, row not yet zeroed) →
                     zero the row;
+``torn-vacate``     a delete/sweeper vacate cut between the key CAS and
+                    the deadline reset (key EMPTY, expiry word not
+                    ``NO_TTL``) → reset the deadline; harmless to
+                    serving (an EMPTY bucket answers nothing) but a
+                    later claim of the bucket would inherit a stale
+                    expiry and could be evicted instantly;
 ``neighborhood``    a live key outside its home neighborhood — no fault
                     in the model produces this (moves stay inside the
                     mover's neighborhood), so it is *unrepairable* here
@@ -62,16 +68,18 @@ from __future__ import annotations
 
 from typing import List, NamedTuple, Optional, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from . import hopscotch, store
 
 KINDS = ("torn-claim", "dup-key", "cross-frame-dup", "stale-row",
-         "neighborhood", "watermark")
+         "torn-vacate", "neighborhood", "watermark")
 
 #: kinds :func:`repair`/:func:`repair_resize` know how to mend; the rest
 #: indicate chain bugs, not crashes, and are surfaced unrepaired
-REPAIRABLE = ("torn-claim", "dup-key", "cross-frame-dup", "stale-row")
+REPAIRABLE = ("torn-claim", "dup-key", "cross-frame-dup", "stale-row",
+              "torn-vacate")
 
 
 class Violation(NamedTuple):
@@ -121,8 +129,11 @@ def _home_distance(key: int, bucket: int, n: int) -> int:
 
 
 def _check_frame(out: List[Violation], shard: int, frame: str,
-                 keys: np.ndarray, vals: np.ndarray, neighborhood: int):
-    """Per-frame single-shard checks: dups, membership, row tears."""
+                 keys: np.ndarray, vals: np.ndarray, neighborhood: int,
+                 exp: Optional[np.ndarray] = None):
+    """Per-frame single-shard checks: dups, membership, row/expiry
+    tears (``exp`` is the per-bucket deadline column, when the store
+    tracks TTLs)."""
     n = keys.shape[0]
     seen: dict = {}
     for b in range(n):
@@ -133,6 +144,11 @@ def _check_frame(out: List[Violation], shard: int, frame: str,
                 out.append(Violation(
                     "stale-row", shard, frame, b, 0,
                     f"EMPTY bucket holds value row {row.tolist()}"))
+            if exp is not None and int(exp[b]) != hopscotch.NO_TTL:
+                out.append(Violation(
+                    "torn-vacate", shard, frame, b, 0,
+                    f"EMPTY bucket holds deadline {int(exp[b])} "
+                    f"(vacate cut before the expiry reset)"))
             continue
         if not row.any():
             out.append(Violation(
@@ -154,11 +170,13 @@ def _check_frame(out: List[Violation], shard: int, frame: str,
 
 def check_invariants(keys=None, vals=None, *,
                      resize: Optional["store.ResizeState"] = None,
-                     neighborhood: int = 8) -> FsckReport:
+                     neighborhood: int = 8, exp=None) -> FsckReport:
     """Audit a store's frames for crash-consistency invariants.
 
     Steady state: pass the sharded ``keys (S, n)`` / ``vals (S, n, V)``
-    arrays.  Mid-resize: pass ``resize=`` a
+    arrays — plus the deadline column ``exp (S, n)`` when the store
+    tracks TTLs, which enables the ``torn-vacate`` classifier (an EMPTY
+    bucket must carry ``NO_TTL``).  Mid-resize: pass ``resize=`` a
     :class:`repro.kvstore.store.ResizeState` instead — both frames and
     the watermark prefix are audited, plus cross-frame duplicates.
     Host-side and eager by design (recovery runs between quanta, not
@@ -196,15 +214,18 @@ def check_invariants(keys=None, vals=None, *,
     else:
         kk = np.asarray(keys)
         vv = np.asarray(vals)
+        ee = None if exp is None else np.asarray(exp)
         for s in range(kk.shape[0]):
-            _check_frame(out, s, "single", kk[s], vv[s], neighborhood)
+            _check_frame(out, s, "single", kk[s], vv[s], neighborhood,
+                         None if ee is None else ee[s])
     return FsckReport(out)
 
 
 class RepairAction(NamedTuple):
     """One applied repair (the recovery log line)."""
     violation: Violation
-    action: str      # "vacate" | "zero-row" | "vacate-old" | "vacate-new"
+    action: str      # "vacate" | "zero-row" | "vacate-old" |
+    #                  "vacate-new" | "reset-deadline"
 
 
 def _mend_frame(keys, vals, shard: int, report: FsckReport, frame: str,
@@ -235,13 +256,17 @@ def _mend_frame(keys, vals, shard: int, report: FsckReport, frame: str,
     return keys, vals
 
 
-def repair(keys, vals, report: FsckReport, neighborhood: int = 8):
+def repair(keys, vals, report: FsckReport, neighborhood: int = 8,
+           exp=None):
     """Mend a steady-state store per the rollback policy.
 
-    Returns ``(keys, vals, actions)``; violations without a repair
-    (``neighborhood``, ``watermark`` — chain bugs, not crashes) are left
-    in place and simply absent from ``actions``.  Idempotent: repairing
-    a repaired store is a no-op, and a follow-up
+    Returns ``(keys, vals, actions)`` — or ``(keys, vals, exp,
+    actions)`` when the deadline column is passed, with every
+    ``torn-vacate`` mended by resetting the bucket's expiry to
+    ``NO_TTL`` (finishing the cut vacate's lost reset).  Violations
+    without a repair (``neighborhood``, ``watermark`` — chain bugs, not
+    crashes) are left in place and simply absent from ``actions``.
+    Idempotent: repairing a repaired store is a no-op, and a follow-up
     :func:`check_invariants` must come back clean — the property the
     recovery tests pin.
     """
@@ -250,7 +275,15 @@ def repair(keys, vals, report: FsckReport, neighborhood: int = 8):
     for s in range(kk.shape[0]):
         keys, vals = _mend_frame(keys, vals, s, report, "single",
                                  actions, kk)
-    return keys, vals, actions
+    if exp is None:
+        return keys, vals, actions
+    exp = jnp.asarray(exp)
+    for v in report.of_kind("torn-vacate"):
+        if v.frame != "single":
+            continue
+        exp = exp.at[v.shard, v.bucket].set(hopscotch.NO_TTL)
+        actions.append(RepairAction(v, "reset-deadline"))
+    return keys, vals, exp, actions
 
 
 def repair_resize(rs: "store.ResizeState", report: FsckReport,

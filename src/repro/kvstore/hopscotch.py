@@ -52,6 +52,18 @@ MIG_MOVED = 6                # source bucket re-homed into the new frame
 MIG_DISCARDED = 7            # key already in the new frame: stale copy dropped
 MIG_NEEDS_DISPLACE = 8       # new-frame neighborhood full: displacer needed
 
+# DELETE / CLOCK-sweep outcome codes (mirrored from repro.core.programs.
+# DEL_* / SWEEP_*, cross-checked in tests)
+DEL_DELETED = 9              # bucket matched and vacated (key -> EMPTY)
+DEL_MISS = 10                # no probe matched; table untouched
+SWEEP_RECLAIMED = 11         # expired bucket vacated by the CLOCK sweeper
+SWEEP_LIVE = 12              # deadline still ahead; bucket left untouched
+
+# TTL sentinel (mirrored from repro.core.programs.NO_TTL): buckets with no
+# deadline carry INT32_MAX so "expired <=> deadline - now <= 0" is a single
+# signed compare with no has-a-TTL special case
+NO_TTL = 0x7FFFFFFF
+
 # the displacer chain's bounds (mirrored defaults; the chain is unrolled
 # to exactly these, so the oracle must stop exactly where it does)
 DEFAULT_MAX_SEARCH = 16      # linear-probe window for the first EMPTY slot
@@ -69,6 +81,10 @@ STATUS_NAMES = {
     MIG_MOVED: "MIG_MOVED",
     MIG_DISCARDED: "MIG_DISCARDED",
     MIG_NEEDS_DISPLACE: "MIG_NEEDS_DISPLACE",
+    DEL_DELETED: "DEL_DELETED",
+    DEL_MISS: "DEL_MISS",
+    SWEEP_RECLAIMED: "SWEEP_RECLAIMED",
+    SWEEP_LIVE: "SWEEP_LIVE",
 }
 
 
@@ -206,6 +222,25 @@ class HopscotchTable:
         return self.set_full(key, value, max_search,
                              max_moves) != SET_NEEDS_RESIZE
 
+    def delete(self, key: int) -> int:
+        """The deleter chain's exact semantics: scan the neighborhood for
+        the key; on a match vacate the bucket (key -> ``EMPTY``) and zero
+        the value row — exactly what ``constructs.emit_bucket_vacate``
+        does on-chain — returning ``DEL_DELETED``; otherwise
+        ``DEL_MISS`` and the table is untouched.  Bit-exact oracle for
+        ``repro.core.programs.build_hopscotch_deleter``.
+        """
+        assert key != EMPTY
+        n, H = self.n_buckets, self.neighborhood
+        home = int(bucket_of(key, n))
+        for d in range(H):
+            i = (home + d) % n
+            if self.keys[i] == key:
+                self.keys[i] = EMPTY
+                self.values[i] = 0
+                return DEL_DELETED
+        return DEL_MISS
+
     # -- host-side online-resize oracle ---------------------------------------
     def migrate_bucket(self, new: "HopscotchTable", bucket: int) -> int:
         """Re-home one source bucket into the doubled frame — the exact
@@ -320,6 +355,67 @@ def lookup(keys: jnp.ndarray, values: jnp.ndarray, queries: jnp.ndarray,
     rows = jnp.take_along_axis(idx, slot[:, None], axis=1)[:, 0]  # (B,)
     vals = values[rows] * found[:, None].astype(values.dtype)
     return found, vals
+
+
+def lookup_ttl(keys: jnp.ndarray, values: jnp.ndarray, exp: jnp.ndarray,
+               queries: jnp.ndarray, now, neighborhood: int,
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """:func:`lookup` with the TTL-aware server chain's semantics: a hit
+    whose per-bucket deadline has lapsed (``exp[row] - now <= 0``) is
+    reported as a miss with a zero value row — the Calc-verb compare the
+    chain evaluates before releasing its response write.  Buckets with no
+    deadline carry :data:`NO_TTL` and can never expire.
+    """
+    n = keys.shape[0]
+    home = bucket_of(queries, n)                                  # (B,)
+    offs = jnp.arange(neighborhood, dtype=jnp.int32)              # (H,)
+    idx = (home[:, None] + offs[None, :]) % n                     # (B, H)
+    probed = keys[idx]                                            # (B, H)
+    hit = probed == queries[:, None].astype(probed.dtype)
+    found = jnp.any(hit, axis=1) & (queries != EMPTY)
+    slot = jnp.argmax(hit, axis=1)
+    rows = jnp.take_along_axis(idx, slot[:, None], axis=1)[:, 0]  # (B,)
+    live = (exp[rows] - jnp.int32(now)) > 0
+    found = found & live
+    vals = values[rows] * found[:, None].astype(values.dtype)
+    return found, vals
+
+
+def delete_many(table: HopscotchTable, keys) -> np.ndarray:
+    """Batched host delete oracle: applies the batch *in order* via
+    :meth:`HopscotchTable.delete` and returns per-request status codes —
+    the reference the deleter chain's response words are tested against.
+    """
+    return np.asarray([table.delete(int(k))
+                       for k in np.asarray(keys).tolist()], np.int32)
+
+
+def sweep_expired(table: HopscotchTable, exp: np.ndarray, now: int,
+                  start: int, count: int) -> Tuple[np.ndarray, np.ndarray]:
+    """CLOCK-sweeper oracle: one lap of ``count`` buckets from the hand at
+    ``start`` (wrapping).  Each visited bucket whose deadline has lapsed
+    (``exp[b] - now <= 0``) is vacated — key -> ``EMPTY``, value row
+    zeroed, deadline reset to :data:`NO_TTL` — exactly the chain's
+    vacate + expiry-reset sequence; live buckets are untouched.  Returns
+    ``(statuses, exp)``: per-visited-bucket ``SWEEP_RECLAIMED`` /
+    ``SWEEP_LIVE`` codes and the updated deadline column.  An EMPTY
+    bucket with a stale deadline is reclaimed too (the chain is
+    self-healing there: the vacate CAS on an EMPTY key is a no-op and
+    the reset still lands).
+    """
+    exp = np.array(exp, np.int32, copy=True)
+    st = np.zeros(count, np.int32)
+    n = table.n_buckets
+    for j in range(count):
+        b = (start + j) % n
+        if int(exp[b]) - int(now) <= 0:
+            table.keys[b] = EMPTY
+            table.values[b] = 0
+            exp[b] = NO_TTL
+            st[j] = SWEEP_RECLAIMED
+        else:
+            st[j] = SWEEP_LIVE
+    return st, exp
 
 
 def insert_many(table: HopscotchTable, keys, values) -> np.ndarray:

@@ -28,26 +28,47 @@ any ``SET_NEEDS_DISPLACEMENT`` rows escalate to the *displacer* chain
 bounded hopscotch bubble on-device.  The host tables are pure oracles;
 no SET path touches them.
 
-Every path returns a :class:`GetResult` (sets: :class:`SetResult`) whose
-per-request ``ok`` mask says whether the response is authoritative: a
-request dropped at the transport's capacity limit, or deferred by the
-per-client admission stage (``sharded_get_isolated``), has ``ok=False``
+Every path returns a :class:`GetResult` (sets: :class:`SetResult`,
+deletes: :class:`DeleteResult`) whose per-request ``ok`` mask says
+whether the response is authoritative: a request dropped at the
+transport's capacity limit, or deferred by the per-client admission
+stage (``sharded_get(..., isolation=Admission(...))``), has ``ok=False``
 and must never be read as a key miss (or a failed set).
+
+:func:`sharded_get` and :func:`sharded_set` are the *only* entry
+points: admission control rides the ``isolation=`` keyword, and passing
+a :class:`ResizeState` instead of device arrays selects the double-frame
+mid-migration arm.  The old per-mode names
+(``sharded_get_isolated`` / ``sharded_get_migrating`` /
+``sharded_set_migrating``) survive as thin :class:`DeprecationWarning`
+shims.
+
+The full Memcached lifecycle is device-authoritative too:
+:func:`sharded_delete` runs the *deleter* chain
+(:func:`repro.core.programs.build_hopscotch_deleter`) — re-read-comparand
+CAS vacates the key word, then zeroes the stale row — and
+:func:`sharded_set` with ``exp=``/``deadlines=`` stamps per-bucket TTL
+deadline words that the TTL-aware GET server compares on-device
+(expired hit ⇒ miss, no host help).  :func:`sharded_sweep` drives the
+CLOCK-style *sweeper* chain (:func:`repro.core.programs.
+build_clock_sweeper`) over a window of buckets, reclaiming expired
+entries as a background writer lane.
 
 The store also *grows* online (§5.6 "resize while serving"):
 :func:`begin_resize` opens a doubled frame, :func:`sharded_resize`
 drives the migrator chain (:func:`repro.core.programs.
-build_hopscotch_migrator`) in quanta, and the double-frame serving
-paths (:func:`sharded_get_migrating` / :func:`sharded_set_migrating`)
-keep every get and set authoritative mid-growth until
-:func:`finish_resize` cuts over — no request is dropped or misrouted by
-the migration, and none of it involves the host.
+build_hopscotch_migrator`) in quanta, and the resize arms of
+:func:`sharded_get` / :func:`sharded_set` keep every get and set
+authoritative mid-growth until :func:`finish_resize` cuts over — no
+request is dropped or misrouted by the migration, and none of it
+involves the host.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import functools
+import warnings
 from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
@@ -61,6 +82,10 @@ from ..core import machine
 from ..core import programs
 from ..rdma import isolation, transport
 from . import hopscotch
+
+# the unified entry points take an `isolation=` keyword, which shadows
+# the module inside their bodies — this alias keeps it reachable there
+isolation_mod = isolation
 
 _SHARD_MULT = 0x9E3779B1
 
@@ -232,6 +257,27 @@ def _redn_get_local(keys, vals, queries, live, *, n_shards, capacity, axis,
     return (resp[:, 0] > 0)[None], resp[None, :, 1:], ok[None]
 
 
+def _redn_get_ttl_local(keys, vals, exp, now, queries, live, *, n_shards,
+                        capacity, axis, neighborhood, val_words):
+    """TTL-aware redn path: the server chain built with ``ttl=True``
+    ADDs the client's negated clock onto each probed deadline and gates
+    the response write on the Calc-verb compare — an expired hit
+    quiesces exactly like a miss, with the deadline compared on device
+    (bit-exact with :func:`repro.kvstore.hopscotch.lookup_ttl`)."""
+    q = queries.reshape(-1)
+    dest = shard_of(q, n_shards)
+    n_buckets = keys.shape[1]
+    srv = programs.build_hopscotch_server(n_buckets, val_words,
+                                          neighborhood, ttl=True)
+    state = srv.device_state(keys[0], vals[0], exp[0])
+    payload = srv.device_payloads(q, hopscotch.bucket_of(q, n_buckets),
+                                  now[0])
+    resp, ok = transport.triggered_chain_engine(
+        srv.engine, state, srv.recv_wq, srv.resp_region, srv.resp_words,
+        payload, dest, n_shards, capacity, axis, live.reshape(-1))
+    return (resp[:, 0] > 0)[None], resp[None, :, 1:], ok[None]
+
+
 def _one_sided_get_local(keys, vals, queries, live, *, n_shards, capacity,
                          axis, neighborhood, val_words):
     """FaRM-style: READ the neighborhood metadata, match locally, READ the
@@ -293,17 +339,105 @@ RTTS = dict(redn=1, one_sided=2, two_sided=1)
 HOST_SERVICE = dict(redn=False, one_sided=False, two_sided=True)
 
 
-def sharded_get(mesh: Mesh, axis: str, keys: jnp.ndarray, vals: jnp.ndarray,
-                queries: jnp.ndarray, method: str = "redn",
-                neighborhood: int = 8, capacity: Optional[int] = None,
-                live: Optional[jnp.ndarray] = None) -> GetResult:
-    """Batched distributed get. queries: (S, B_local) int32 (dim 0 sharded).
+class Admission(NamedTuple):
+    """Per-client token-bucket admission parameters for the unified
+    :func:`sharded_get` (the §5.5 isolation stage, previously the
+    separate ``sharded_get_isolated`` entry point).
 
-    ``live`` (optional, (S, B) bool) is an admission mask — False requests
-    are never dispatched and come back with ``ok=False`` and a ``deferred``
-    count (see :func:`sharded_get_isolated` for the token-bucket stage
-    that produces it).  Returns a :class:`GetResult`.
+    ``clients``: (S, B) int32 global client/QP ids aligned with the
+    queries; ``bucket``: the :class:`repro.rdma.isolation.BucketState`
+    carried across calls.  Passing ``isolation=Admission(...)`` admits
+    each request against its client's bucket first — deferred rows are
+    never dispatched, surface ``ok=False``, and are counted per shard —
+    and makes the call return ``(GetResult, new BucketState)``.
     """
+    clients: jnp.ndarray
+    bucket: isolation.BucketState
+    now_us: float
+    rate_per_us: float
+    burst: float
+
+
+def _bind_args(fname: str, names: Tuple[str, ...], args, kwargs) -> dict:
+    """Map a dispatcher's ``*args`` onto the selected implementation's
+    parameter names (the unified entry points accept both spellings'
+    positional orders, chosen by the state argument's type)."""
+    if len(args) > len(names):
+        raise TypeError(
+            f"{fname}: too many positional arguments "
+            f"({len(args)} given, at most {len(names)}: {names})")
+    bound = dict(kwargs)
+    for name, val in zip(names, args):
+        if name in bound:
+            raise TypeError(
+                f"{fname}: got multiple values for argument '{name}'")
+        bound[name] = val
+    return bound
+
+
+def sharded_get(mesh: Mesh, axis: str, table_or_resize_state, *args,
+                isolation: Optional[Admission] = None, **kwargs):
+    """Batched distributed get — the one serving entry point.
+
+    The third argument selects the store's mode:
+
+    * device ``keys`` array (steady state) — followed by ``(vals,
+      queries, method="redn", neighborhood=8, capacity=None,
+      live=None, exp=None, now=None)``; passing a per-bucket deadline
+      column ``exp`` (S, n) plus the clock ``now`` serves TTL-aware
+      gets (chain path only): an expired hit answers as a miss.
+    * a :class:`ResizeState` (mid-growth) — followed by ``(queries,
+      neighborhood=8, capacity=None, live=None)``; served from the
+      double frame with the watermark-gated second probe.
+
+    ``live`` (optional, (S, B) bool) is an admission mask — False
+    requests are never dispatched and come back with ``ok=False`` and a
+    ``deferred`` count.  ``isolation=Admission(...)`` runs the §5.5
+    per-client token-bucket stage to *produce* that mask (composed with
+    any explicit ``live``) and returns ``(GetResult, new BucketState)``
+    instead of a bare :class:`GetResult`.
+    """
+    if isinstance(table_or_resize_state, ResizeState):
+        bound = _bind_args(
+            "sharded_get", ("queries", "neighborhood", "capacity", "live"),
+            args, kwargs)
+        run = functools.partial(_get_resize, mesh, axis,
+                                table_or_resize_state)
+    else:
+        bound = _bind_args(
+            "sharded_get", ("vals", "queries", "method", "neighborhood",
+                            "capacity", "live", "exp", "now"),
+            args, kwargs)
+        run = functools.partial(_get_table, mesh, axis,
+                                table_or_resize_state)
+    if isolation is None:
+        return run(**bound)
+    adm = isolation
+    bucket, admitted = isolation_mod.admit(
+        adm.bucket, adm.clients.reshape(-1), adm.now_us, adm.rate_per_us,
+        adm.burst)
+    live = admitted.reshape(bound["queries"].shape)
+    if bound.get("live") is not None:
+        live = live & bound["live"]
+    bound["live"] = live
+    return run(**bound), bucket
+
+
+def _get_table(mesh: Mesh, axis: str, keys: jnp.ndarray, vals: jnp.ndarray,
+               queries: jnp.ndarray, method: str = "redn",
+               neighborhood: int = 8, capacity: Optional[int] = None,
+               live: Optional[jnp.ndarray] = None,
+               exp: Optional[jnp.ndarray] = None, now=None) -> GetResult:
+    """Steady-state get (see :func:`sharded_get`).
+    queries: (S, B_local) int32 (dim 0 sharded)."""
+    if (exp is None) != (now is None):
+        raise ValueError("TTL gets need both exp and now (or neither): "
+                         f"exp given={exp is not None}, "
+                         f"now given={now is not None}")
+    if exp is not None and method != "redn":
+        raise ValueError("TTL-aware serving is chain-only: the deadline "
+                         "compare is a Calc verb in the server chain "
+                         f"(method='redn'), got method={method!r}")
     _check_key_batch(queries, what="query", allow_zero=True, live=live)
     n_shards = mesh.shape[axis]
     b_local = queries.shape[1]
@@ -321,6 +455,11 @@ def sharded_get(mesh: Mesh, axis: str, keys: jnp.ndarray, vals: jnp.ndarray,
             dropped=jnp.sum(live, axis=1, dtype=jnp.int32),
             deferred=jnp.sum(~live, axis=1, dtype=jnp.int32))
 
+    if exp is not None:
+        mapped = _mapped_get_ttl(mesh, axis, n_shards, capacity,
+                                 neighborhood, vals.shape[-1])
+        nows = jnp.full((keys.shape[0],), now, jnp.int32)
+        return GetResult(*mapped(keys, vals, exp, nows, queries, live))
     mapped = _mapped_get(mesh, axis, method, n_shards, capacity,
                          neighborhood, vals.shape[-1])
     return GetResult(*mapped(keys, vals, queries, live))
@@ -401,25 +540,51 @@ def _mapped_get(mesh: Mesh, axis: str, method: str, n_shards: int,
     return _mapped_cache_put(key, fn)
 
 
+def _mapped_get_ttl(mesh: Mesh, axis: str, n_shards: int, capacity: int,
+                    neighborhood: int, val_words: int):
+    """Compile-cache for the TTL-aware redn get (its body takes the
+    deadline column and the replicated clock as two more sharded
+    inputs; see :func:`_mapped_get`)."""
+    key = ("get-ttl", _mesh_fingerprint(mesh), axis, n_shards, capacity,
+           neighborhood, val_words)
+    cached = _mapped_cache_get(key)
+    if cached is not None:
+        return cached
+    path = functools.partial(
+        _redn_get_ttl_local, n_shards=n_shards, capacity=capacity,
+        axis=axis, neighborhood=neighborhood, val_words=val_words)
+
+    def body(keys, vals, exp, nows, queries, live):
+        found, v, ok = path(keys, vals, exp, nows, queries, live)
+        deferred = jnp.sum(~live, dtype=jnp.int32).reshape(1)
+        dropped = (jnp.sum(live, dtype=jnp.int32)
+                   - jnp.sum(ok, dtype=jnp.int32)).reshape(1)
+        return found, v, ok, dropped, deferred
+
+    spec = P(axis)
+    fn = jax.jit(shard_map(
+        body, mesh=mesh, in_specs=(spec,) * 6, out_specs=(spec,) * 5,
+        check_vma=False))
+    return _mapped_cache_put(key, fn)
+
+
 def sharded_get_isolated(mesh: Mesh, axis: str, keys: jnp.ndarray,
                          vals: jnp.ndarray, queries: jnp.ndarray,
                          clients: jnp.ndarray, bucket: isolation.BucketState,
                          now_us: float, rate_per_us: float, burst: float,
                          **kwargs) -> Tuple[GetResult, isolation.BucketState]:
-    """The §5.5 serving path: per-client token-bucket admission, then the
-    sharded get.  Admitted requests are dispatched; deferred ones are
-    reported per shard (``GetResult.deferred``) and surface ``ok=False`` —
-    a misbehaving client beyond its rate cannot occupy transport slots or
-    owner-shard chain contexts, so victims keep their 1-RTT latency.
-
-    clients: (S, B) int32 global client/QP ids aligned with ``queries``.
-    Returns (GetResult, new bucket state).
-    """
-    bucket, admitted = isolation.admit(
-        bucket, clients.reshape(-1), now_us, rate_per_us, burst)
-    live = admitted.reshape(queries.shape)
-    return (sharded_get(mesh, axis, keys, vals, queries, live=live,
-                        **kwargs), bucket)
+    """Deprecated spelling of the §5.5 isolated get — now
+    ``sharded_get(..., isolation=Admission(...))``.  Thin shim, bit-exact
+    with the unified path (tested)."""
+    warnings.warn(
+        "sharded_get_isolated is deprecated: call sharded_get(mesh, axis, "
+        "keys, vals, queries, isolation=Admission(clients, bucket, now_us, "
+        "rate_per_us, burst)) instead",
+        DeprecationWarning, stacklevel=2)
+    return sharded_get(
+        mesh, axis, keys, vals, queries,
+        isolation=Admission(clients, bucket, now_us, rate_per_us, burst),
+        **kwargs)
 
 
 # ---------------------------------------------------------------------------
@@ -479,6 +644,42 @@ def _guarded_step(run_one, budget, run_one_faulted=None):
     return step_f
 
 
+class WriterFaultConflict(ValueError):
+    """``sharded_set(..., n_writers=N, faults=...)`` — the two arguments
+    are mutually exclusive, and silently dropping either would run a
+    different experiment than the caller asked for.  FaultPlan rows
+    address a single chain's WQ layout, which the racing writer group
+    does not share; run the fault sweep single-writer, or the race
+    un-faulted (composing them is the ROADMAP's open item)."""
+
+    def __init__(self, n_writers: int):
+        self.n_writers = int(n_writers)
+        super().__init__(
+            f"n_writers={n_writers} and faults=... are mutually "
+            f"exclusive: FaultPlan rows address one chain's WQ layout, "
+            f"which the racing writer group does not share")
+
+
+def _mutation_repr(name: str, result) -> str:
+    """Shared summary ``__repr__`` for the mutation results (SetResult /
+    DeleteResult): a status histogram by *name* (hopscotch.STATUS_NAMES),
+    not a raw int32 array — "SET_INSERTED=30, SET_NEEDS_RESIZE=2" is
+    what a failing test or a log line actually needs to say.  Traced
+    instances (inside a caller's jit) can't be summarized."""
+    if isinstance(result.status, jax.core.Tracer):
+        return (f"{name}(traced: status={result.status}, "
+                f"ok={result.ok})")
+    st, ok = np.asarray(result.status), np.asarray(result.ok)
+    codes, counts = np.unique(st[ok.astype(bool)], return_counts=True)
+    hist = ", ".join(f"{hopscotch.status_name(c)}={n}"
+                     for c, n in zip(codes.tolist(), counts.tolist()))
+    return (f"{name}({hist or 'no served rows'}, "
+            f"ok {int(ok.sum())}/{ok.size}, "
+            f"applied={int(np.asarray(result.applied).sum())}, "
+            f"dropped={int(np.asarray(result.dropped).sum())}, "
+            f"deferred={int(np.asarray(result.deferred).sum())})")
+
+
 class SetResult(NamedTuple):
     """Distributed set outcome.  ``status`` is authoritative only where
     ``ok`` is True (a False row was dropped/deferred, status 0); values:
@@ -498,21 +699,24 @@ class SetResult(NamedTuple):
     deferred: jnp.ndarray   # (S,) int32
 
     def __repr__(self):
-        # a status histogram by *name* (hopscotch.STATUS_NAMES), not a
-        # raw int32 array — "SET_INSERTED=30, SET_NEEDS_RESIZE=2" is
-        # what a failing test or a log line actually needs to say
-        if isinstance(self.status, jax.core.Tracer):
-            return (f"SetResult(traced: status={self.status}, "
-                    f"ok={self.ok})")
-        st, ok = np.asarray(self.status), np.asarray(self.ok)
-        codes, counts = np.unique(st[ok.astype(bool)], return_counts=True)
-        hist = ", ".join(f"{hopscotch.status_name(c)}={n}"
-                         for c, n in zip(codes.tolist(), counts.tolist()))
-        return (f"SetResult({hist or 'no served rows'}, "
-                f"ok {int(ok.sum())}/{ok.size}, "
-                f"applied={int(np.asarray(self.applied).sum())}, "
-                f"dropped={int(np.asarray(self.dropped).sum())}, "
-                f"deferred={int(np.asarray(self.deferred).sum())})")
+        return _mutation_repr("SetResult", self)
+
+
+class DeleteResult(NamedTuple):
+    """Distributed delete outcome.  ``status`` is ``DEL_DELETED`` (9 —
+    the deleter chain's vacate CAS retired the bucket) or ``DEL_MISS``
+    (10 — no resident with that key; deleting an absent key is a
+    success of a different color, as in Memcached), authoritative only
+    where ``ok`` is True.  ``applied`` acks the rows that actually
+    vacated a bucket."""
+    status: jnp.ndarray     # (S, B) int32
+    applied: jnp.ndarray    # (S, B) bool — a bucket was vacated
+    ok: jnp.ndarray         # (S, B) bool — response authoritative
+    dropped: jnp.ndarray    # (S,) int32
+    deferred: jnp.ndarray   # (S,) int32
+
+    def __repr__(self):
+        return _mutation_repr("DeleteResult", self)
 
 
 def _writer_set_local(keys, vals, qk, qv, live, *, n_shards, capacity, axis,
@@ -692,17 +896,97 @@ def _mw_set_local(keys, vals, qk, qv, live, *, n_shards, capacity, axis,
     return status[None], ok[None], nk[None], nv[None]
 
 
-def sharded_set(mesh: Mesh, axis: str, keys: jnp.ndarray, vals: jnp.ndarray,
-                set_keys: jnp.ndarray, set_vals: jnp.ndarray,
-                neighborhood: int = 8, capacity: Optional[int] = None,
-                live: Optional[jnp.ndarray] = None,
-                max_steps: int = 512,
-                max_search: int = hopscotch.DEFAULT_MAX_SEARCH,
-                max_moves: int = hopscotch.DEFAULT_MAX_MOVES,
-                faults: Optional[faults_mod.FaultPlan] = None,
-                n_writers: int = 1
-                ) -> Tuple[SetResult, jnp.ndarray, jnp.ndarray]:
-    """Batched chain-offloaded distributed SET — displacement included.
+def relocate_exp(old_keys: jnp.ndarray, old_exp: jnp.ndarray,
+                 new_keys: jnp.ndarray,
+                 req_keys: Optional[jnp.ndarray] = None,
+                 req_deadlines: Optional[jnp.ndarray] = None,
+                 applied: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Re-derive a per-bucket deadline column after keys moved.
+
+    For every bucket of ``new_keys`` (S, m): carry the deadline its key
+    had in ``(old_keys (S, n), old_exp)`` — displacement and migration
+    move keys between buckets but never change their expiry — else
+    :data:`repro.kvstore.hopscotch.NO_TTL`.  Rows of ``req_keys``
+    (S, B) with ``applied`` True then override their key's deadline with
+    ``req_deadlines`` (``None`` = NO_TTL — a set without a TTL clears
+    any previous one, Memcached's replace-the-TTL semantics); when a
+    batch sets the same key twice the *later* request wins, matching the
+    owner windows' serialization order (source-major row order).
+
+    The deadline column is commit-layer state: the chains compare and
+    reset deadlines in-place for steady-state GET/sweep/delete, and this
+    helper re-homes the column when a writer/displacer/migrator chain
+    relocated the keys themselves.
+    """
+    empty = new_keys != hopscotch.EMPTY
+    m_old = (new_keys[:, :, None] == old_keys[:, None, :]) & empty[:, :, None]
+    has_old = jnp.any(m_old, axis=-1)
+    j = jnp.argmax(m_old, axis=-1)
+    carried = jnp.take_along_axis(old_exp, j, axis=-1)
+    out = jnp.where(has_old, carried, jnp.int32(hopscotch.NO_TTL))
+    if req_keys is None:
+        return out
+    rk = req_keys.reshape(-1)
+    ap = (jnp.ones_like(rk, jnp.bool_) if applied is None
+          else applied.reshape(-1)) & (rk != hopscotch.EMPTY)
+    rd = (jnp.full_like(rk, hopscotch.NO_TTL) if req_deadlines is None
+          else req_deadlines.reshape(-1).astype(jnp.int32))
+    m_req = ((new_keys[:, :, None] == rk[None, None, :])
+             & ap[None, None, :] & empty[:, :, None])
+    any_req = jnp.any(m_req, axis=-1)
+    idx = jnp.arange(rk.shape[0], dtype=jnp.int32)
+    last = jnp.max(jnp.where(m_req, idx[None, None, :], -1), axis=-1)
+    return jnp.where(any_req, rd[jnp.clip(last, 0, None)], out)
+
+
+def sharded_set(mesh: Mesh, axis: str, table_or_resize_state, *args,
+                **kwargs):
+    """Batched chain-offloaded distributed SET — the one entry point.
+
+    The third argument selects the store's mode:
+
+    * device ``keys`` array (steady state) — followed by ``(vals,
+      set_keys, set_vals, neighborhood=8, capacity=None, live=None,
+      max_steps=512, max_search=..., max_moves=..., faults=None,
+      n_writers=1, exp=None, deadlines=None)``; returns ``(SetResult,
+      new_keys, new_vals)``, plus the updated deadline column when
+      ``exp`` is given (TTL mode — ``deadlines`` (S, B) stamps each
+      applied request's expiry; omitted means no-expiry).
+    * a :class:`ResizeState` (mid-growth) — followed by ``(set_keys,
+      set_vals, neighborhood=8, capacity=None, live=None,
+      max_steps=512, max_search=..., max_moves=...)``;
+      watermark-routed over the double frame, returns ``(SetResult,
+      new ResizeState)``.
+    """
+    if isinstance(table_or_resize_state, ResizeState):
+        bound = _bind_args(
+            "sharded_set", ("set_keys", "set_vals", "neighborhood",
+                            "capacity", "live", "max_steps", "max_search",
+                            "max_moves"),
+            args, kwargs)
+        return _set_resize(mesh, axis, table_or_resize_state, **bound)
+    bound = _bind_args(
+        "sharded_set", ("vals", "set_keys", "set_vals", "neighborhood",
+                        "capacity", "live", "max_steps", "max_search",
+                        "max_moves", "faults", "n_writers", "exp",
+                        "deadlines"),
+        args, kwargs)
+    return _set_table(mesh, axis, table_or_resize_state, **bound)
+
+
+def _set_table(mesh: Mesh, axis: str, keys: jnp.ndarray, vals: jnp.ndarray,
+               set_keys: jnp.ndarray, set_vals: jnp.ndarray,
+               neighborhood: int = 8, capacity: Optional[int] = None,
+               live: Optional[jnp.ndarray] = None,
+               max_steps: int = 512,
+               max_search: int = hopscotch.DEFAULT_MAX_SEARCH,
+               max_moves: int = hopscotch.DEFAULT_MAX_MOVES,
+               faults: Optional[faults_mod.FaultPlan] = None,
+               n_writers: int = 1,
+               exp: Optional[jnp.ndarray] = None,
+               deadlines: Optional[jnp.ndarray] = None
+               ) -> Tuple[SetResult, jnp.ndarray, jnp.ndarray]:
+    """Steady-state SET (see :func:`sharded_set`) — displacement included.
 
     set_keys: (S, B_local) int32 keys in 1..2^24-1 (dim 0 sharded; 0 marks
     an unused slot — never dispatched, never committed, reported
@@ -740,9 +1024,11 @@ def sharded_set(mesh: Mesh, axis: str, keys: jnp.ndarray, vals: jnp.ndarray,
     if n_writers < 1:
         raise ValueError(f"n_writers must be >= 1, got {n_writers}")
     if n_writers > 1 and faults is not None:
-        raise ValueError("fault injection is single-writer only: "
-                         "FaultPlan rows address one chain's WQ layout, "
-                         "which the racing writer group does not share")
+        raise WriterFaultConflict(n_writers)
+    if deadlines is not None and exp is None:
+        raise ValueError("deadlines= stamps per-request expiry into the "
+                         "exp column — pass exp= (the store's deadline "
+                         "state) alongside it")
     _check_key_batch(set_keys, what="set", allow_zero=True, live=live)
     n_shards = mesh.shape[axis]
     b_local = set_keys.shape[1]
@@ -754,11 +1040,13 @@ def sharded_set(mesh: Mesh, axis: str, keys: jnp.ndarray, vals: jnp.ndarray,
     real = set_keys != hopscotch.EMPTY
     if capacity == 0:
         zi = jnp.zeros(set_keys.shape, jnp.int32)
-        return (SetResult(
+        res0 = SetResult(
             status=zi, applied=zi.astype(bool), ok=zi.astype(bool),
             dropped=jnp.sum(live & real, axis=1, dtype=jnp.int32),
-            deferred=jnp.sum(~live & real, axis=1, dtype=jnp.int32)),
-            keys, vals)
+            deferred=jnp.sum(~live & real, axis=1, dtype=jnp.int32))
+        if exp is not None:
+            return res0, keys, vals, exp
+        return res0, keys, vals
 
     mapped = _mapped_set(mesh, axis, n_shards, capacity, neighborhood,
                          vals.shape[-1], max_steps, max_search, max_moves,
@@ -772,7 +1060,14 @@ def sharded_set(mesh: Mesh, axis: str, keys: jnp.ndarray, vals: jnp.ndarray,
     applied = ok & ((status == programs.SET_UPDATED)
                     | (status == programs.SET_INSERTED)
                     | (status == programs.SET_DISPLACED))
-    return SetResult(status, applied, ok, dropped, deferred), nk, nv
+    result = SetResult(status, applied, ok, dropped, deferred)
+    if exp is not None:
+        # deadline follow-up is commit-layer state: the writer/displacer
+        # chains may have relocated keys, so re-home the column by key
+        # and stamp the applied requests' own deadlines
+        new_exp = relocate_exp(keys, exp, nk, set_keys, deadlines, applied)
+        return result, nk, nv, new_exp
+    return result, nk, nv
 
 
 def _mapped_set(mesh: Mesh, axis: str, n_shards: int, capacity: int,
@@ -834,6 +1129,184 @@ def _mapped_set(mesh: Mesh, axis: str, n_shards: int, capacity: int,
     spec = P(axis)
     fn = jax.jit(shard_map(
         body, mesh=mesh, in_specs=(spec,) * n_in, out_specs=(spec,) * 6,
+        check_vma=False))
+    return _mapped_cache_put(key, fn)
+
+
+# ---------------------------------------------------------------------------
+# the chain-offloaded DELETE path and the CLOCK sweeper (the remaining
+# Memcached lifecycle verbs: forget on request, forget on expiry)
+# ---------------------------------------------------------------------------
+
+def _del_local(keys, vals, qk, live, *, n_shards, capacity, axis,
+               neighborhood, val_words, max_steps):
+    """Owner-side DELETE serving: the pre-posted deleter chain matches
+    the key across its neighborhood and retires the bucket with the
+    re-read-comparand vacate CAS — same 1-RTT wire pattern as the
+    writer, no escalation stage (a delete never needs to displace)."""
+    q = qk.reshape(-1)
+    dest = shard_of(q, n_shards)
+    n_buckets = keys.shape[1]
+    lv = live.reshape(-1)
+    deleter = programs.build_hopscotch_deleter(n_buckets, val_words,
+                                               neighborhood)
+    payload = deleter.device_payloads(q, hopscotch.bucket_of(q, n_buckets))
+    resp, ok, (nk, nv) = transport.triggered_chain_stateful(
+        _guarded_step(deleter.run_one, max_steps), (keys[0], vals[0]),
+        payload, dest, n_shards, capacity, axis, 1, lv)
+    return resp[:, 0][None], ok[None], nk[None], nv[None]
+
+
+def sharded_delete(mesh: Mesh, axis: str, keys: jnp.ndarray,
+                   vals: jnp.ndarray, del_keys: jnp.ndarray,
+                   neighborhood: int = 8, capacity: Optional[int] = None,
+                   live: Optional[jnp.ndarray] = None, max_steps: int = 512,
+                   exp: Optional[jnp.ndarray] = None):
+    """Batched chain-offloaded distributed DELETE.
+
+    del_keys: (S, B_local) int32 keys (dim 0 sharded; 0 marks an unused
+    slot — never dispatched, status 0).  Each request routes to its
+    owner shard, where the pre-posted **deleter chain**
+    (:func:`repro.core.programs.build_hopscotch_deleter`) matches the
+    key across its H-bucket neighborhood and, on a hit, retires the
+    bucket via ``emit_bucket_vacate`` — a re-read-comparand CAS
+    ``key -> EMPTY`` plus stale-row zeroing, behind per-probe
+    exclusivity.  Returns ``(DeleteResult, new_keys, new_vals)``; with
+    a TTL deadline column ``exp`` (S, n), also its update (a vacated
+    bucket's deadline resets to NO_TTL), as a 4th element.
+    """
+    _check_key_batch(del_keys, what="delete", allow_zero=True, live=live)
+    n_shards = mesh.shape[axis]
+    b_local = del_keys.shape[1]
+    capacity = b_local if capacity is None else capacity
+    if live is None:
+        live = jnp.ones(del_keys.shape, jnp.bool_)
+    real = del_keys != hopscotch.EMPTY
+    if capacity == 0:
+        zi = jnp.zeros(del_keys.shape, jnp.int32)
+        res0 = DeleteResult(
+            status=zi, applied=zi.astype(bool), ok=zi.astype(bool),
+            dropped=jnp.sum(live & real, axis=1, dtype=jnp.int32),
+            deferred=jnp.sum(~live & real, axis=1, dtype=jnp.int32))
+        if exp is not None:
+            return res0, keys, vals, exp
+        return res0, keys, vals
+
+    mapped = _mapped_del(mesh, axis, n_shards, capacity, neighborhood,
+                         vals.shape[-1], max_steps)
+    status, ok, dropped, deferred, nk, nv = mapped(keys, vals, del_keys,
+                                                   live)
+    applied = ok & (status == programs.DEL_DELETED)
+    result = DeleteResult(status, applied, ok, dropped, deferred)
+    if exp is not None:
+        # a vacated bucket carries no deadline; surviving buckets keep
+        # theirs (the deleter never relocates keys)
+        new_exp = jnp.where(nk == hopscotch.EMPTY,
+                            jnp.int32(hopscotch.NO_TTL), exp)
+        return result, nk, nv, new_exp
+    return result, nk, nv
+
+
+def _mapped_del(mesh: Mesh, axis: str, n_shards: int, capacity: int,
+                neighborhood: int, val_words: int, max_steps: int):
+    key = ("del", _mesh_fingerprint(mesh), axis, n_shards, capacity,
+           neighborhood, val_words, max_steps)
+    cached = _mapped_cache_get(key)
+    if cached is not None:
+        return cached
+    path = functools.partial(
+        _del_local, n_shards=n_shards, capacity=capacity, axis=axis,
+        neighborhood=neighborhood, val_words=val_words,
+        max_steps=max_steps)
+
+    def body(keys, vals, qk, live):
+        real = qk != hopscotch.EMPTY
+        live = live & real
+        status, ok, nk, nv = path(keys, vals, qk, live)
+        deferred = jnp.sum(~live & real, dtype=jnp.int32).reshape(1)
+        dropped = (jnp.sum(live, dtype=jnp.int32)
+                   - jnp.sum(ok, dtype=jnp.int32)).reshape(1)
+        return status, ok, dropped, deferred, nk, nv
+
+    spec = P(axis)
+    fn = jax.jit(shard_map(
+        body, mesh=mesh, in_specs=(spec,) * 4, out_specs=(spec,) * 6,
+        check_vma=False))
+    return _mapped_cache_put(key, fn)
+
+
+class SweepReport(NamedTuple):
+    """Outcome of one :func:`sharded_sweep` quantum: per-visited-bucket
+    statuses (``SWEEP_RECLAIMED`` / ``SWEEP_LIVE``), per-shard reclaim
+    counts, and the advanced CLOCK hand."""
+    status: jnp.ndarray      # (S, count) int32
+    reclaimed: jnp.ndarray   # (S,) int32
+    hand: jnp.ndarray        # (S,) int32 — next quantum starts here
+
+    def __repr__(self):
+        if isinstance(self.status, jax.core.Tracer):
+            return f"SweepReport(traced: status={self.status})"
+        return (f"SweepReport(reclaimed="
+                f"{int(np.asarray(self.reclaimed).sum())}"
+                f"/{np.asarray(self.status).size}, "
+                f"hand={np.asarray(self.hand).tolist()})")
+
+
+def _sweep_local(keys, vals, exp, hand, nows, *, count, val_words):
+    """One owner-shard CLOCK quantum: ``count`` laps of the sweeper
+    chain from the hand (loopback QP — the requests originate at the
+    shard that owns the buckets, like the resize migrator)."""
+    n = keys.shape[1]
+    swp = programs.build_clock_sweeper(n, val_words)
+    buckets = (hand[0] + jnp.arange(count, dtype=jnp.int32)) % n
+    pay = swp.device_payloads(buckets, nows[0])
+
+    def step(carry, p):
+        status, tk, tv, te = swp.run_one(*carry, p, swp.fuel)
+        return (tk, tv, te), status[None]
+
+    resp, (nk, nv, ne) = transport.local_chain_stateful(
+        step, (keys[0], vals[0], exp[0]), pay)
+    st = resp[:, 0]
+    reclaimed = jnp.sum(st == programs.SWEEP_RECLAIMED,
+                        dtype=jnp.int32).reshape(1)
+    new_hand = ((hand + count) % n).astype(jnp.int32)
+    return st[None], nk[None], nv[None], ne[None], new_hand, reclaimed
+
+
+def sharded_sweep(mesh: Mesh, axis: str, keys: jnp.ndarray,
+                  vals: jnp.ndarray, exp: jnp.ndarray, hand: jnp.ndarray,
+                  now, count: int = 16):
+    """Advance the CLOCK sweeper by ``count`` buckets per shard.
+
+    Every lap is the **sweeper chain** (:func:`repro.core.programs.
+    build_clock_sweeper`) executed against device state over a loopback
+    QP: the chain reads the visited bucket's deadline, evaluates the
+    expiry predicate in Calc verbs, and an expired bucket is vacated
+    (``emit_bucket_vacate`` + deadline reset to NO_TTL) — the host
+    contributes no compare, so eviction keeps running with the driver
+    dead, exactly like the resize migrator.  ``hand``: (S,) int32
+    per-shard CLOCK hands; ``now``: the clock (int).  Returns
+    ``(SweepReport, new_keys, new_vals, new_exp)`` — adopt all three
+    arrays plus ``report.hand``.
+    """
+    mapped = _mapped_sweep(mesh, axis, count, vals.shape[-1])
+    nows = jnp.full((keys.shape[0],), now, jnp.int32)
+    st, nk, nv, ne, new_hand, reclaimed = mapped(
+        keys, vals, exp, hand.astype(jnp.int32), nows)
+    return SweepReport(st, reclaimed, new_hand), nk, nv, ne
+
+
+def _mapped_sweep(mesh: Mesh, axis: str, count: int, val_words: int):
+    key = ("sweep", _mesh_fingerprint(mesh), axis, count, val_words)
+    cached = _mapped_cache_get(key)
+    if cached is not None:
+        return cached
+    body = functools.partial(_sweep_local, count=count,
+                             val_words=val_words)
+    spec = P(axis)
+    fn = jax.jit(shard_map(
+        body, mesh=mesh, in_specs=(spec,) * 5, out_specs=(spec,) * 6,
         check_vma=False))
     return _mapped_cache_put(key, fn)
 
@@ -1169,9 +1642,24 @@ def sharded_get_migrating(mesh: Mesh, axis: str, rs: ResizeState,
                           queries: jnp.ndarray, neighborhood: int = 8,
                           capacity: Optional[int] = None,
                           live: Optional[jnp.ndarray] = None) -> GetResult:
+    """Deprecated spelling of the mid-growth get — now ``sharded_get(
+    mesh, axis, resize_state, queries, ...)`` (the unified entry point
+    dispatches on the state argument's type).  Thin shim, bit-exact."""
+    warnings.warn(
+        "sharded_get_migrating is deprecated: pass the ResizeState as "
+        "sharded_get's third argument instead",
+        DeprecationWarning, stacklevel=2)
+    return _get_resize(mesh, axis, rs, queries, neighborhood=neighborhood,
+                       capacity=capacity, live=live)
+
+
+def _get_resize(mesh: Mesh, axis: str, rs: ResizeState,
+                queries: jnp.ndarray, neighborhood: int = 8,
+                capacity: Optional[int] = None,
+                live: Optional[jnp.ndarray] = None) -> GetResult:
     """Batched distributed get against a store mid-growth.
 
-    Same contract as :func:`sharded_get` (redn path), but served from
+    Same contract as the steady-state get (redn path), but served from
     the double frame: new-then-old probes, the second gated per request
     on the owner shard's migration watermark.  Bit-exact with "lookup
     the new frame, else the old frame" on the oracle tables.
@@ -1297,16 +1785,29 @@ def _mig_set_local(ok_, ov, nk, nv, wm, qk, qv, live, *, n_shards,
 
 def sharded_set_migrating(mesh: Mesh, axis: str, rs: ResizeState,
                           set_keys: jnp.ndarray, set_vals: jnp.ndarray,
-                          neighborhood: int = 8,
-                          capacity: Optional[int] = None,
-                          live: Optional[jnp.ndarray] = None,
-                          max_steps: int = 512,
-                          max_search: int = hopscotch.DEFAULT_MAX_SEARCH,
-                          max_moves: int = hopscotch.DEFAULT_MAX_MOVES
-                          ) -> Tuple[SetResult, ResizeState]:
+                          **kwargs) -> Tuple[SetResult, ResizeState]:
+    """Deprecated spelling of the mid-growth set — now ``sharded_set(
+    mesh, axis, resize_state, set_keys, set_vals, ...)``.  Thin shim,
+    bit-exact."""
+    warnings.warn(
+        "sharded_set_migrating is deprecated: pass the ResizeState as "
+        "sharded_set's third argument instead",
+        DeprecationWarning, stacklevel=2)
+    return _set_resize(mesh, axis, rs, set_keys, set_vals, **kwargs)
+
+
+def _set_resize(mesh: Mesh, axis: str, rs: ResizeState,
+                set_keys: jnp.ndarray, set_vals: jnp.ndarray,
+                neighborhood: int = 8,
+                capacity: Optional[int] = None,
+                live: Optional[jnp.ndarray] = None,
+                max_steps: int = 512,
+                max_search: int = hopscotch.DEFAULT_MAX_SEARCH,
+                max_moves: int = hopscotch.DEFAULT_MAX_MOVES
+                ) -> Tuple[SetResult, ResizeState]:
     """Batched chain-offloaded SET against a store mid-growth.
 
-    Same contract as :func:`sharded_set`, but routed by the migration
+    Same contract as the steady-state set, but routed by the migration
     watermark over the double frame (see :func:`_mig_set_local`).  A
     key re-written into the new frame while its stale copy awaits
     migration is the *intended* transient: gets probe new-first, and the

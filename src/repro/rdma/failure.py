@@ -148,12 +148,25 @@ class ShardedKVService(_HostDriverLifecycle):
     repairs_applied: int = 0       # fsck repairs across the service lifetime
     # -- concurrent serving (racing writer QPs over shared shard state) ------
     n_writers: int = 1             # writer lanes per shard on the SET path
+    # -- full lifecycle (DELETE + TTL eviction; Memcached parity) ------------
+    exp: object = None             # (S, B) int32 deadlines, or None (no TTL)
+    sweep_hand: object = None      # (S,) int32 CLOCK hand per shard
+    deletes_applied: int = 0       # buckets vacated by the deleter chain
+    sweeps_reclaimed: int = 0      # buckets reclaimed by the sweeper chain
+    chained_growths: int = 0       # 2n frames that dead-ended into a 4n one
+    # resize-window TTL bookkeeping (commit-layer modeling, host-held):
+    # the frame snapshot the exp column is aligned to, and deadlines
+    # stamped while the frames were doubled — folded back at cutover.
+    _exp_keys: object = None
+    _pending_deadlines: dict = dataclasses.field(default_factory=dict)
 
     @classmethod
     def start(cls, items: Sequence[Tuple[int, Sequence[int]]],
               n_shards: int = 1, buckets_per_shard: int = 128,
-              val_words: int = 2, axis: str = "kv") -> "ShardedKVService":
+              val_words: int = 2, axis: str = "kv",
+              ttl: bool = False) -> "ShardedKVService":
         import jax
+        import jax.numpy as jnp
         from jax.sharding import Mesh
 
         kv = kv_store.ShardedKV.build(n_shards, buckets_per_shard, val_words)
@@ -168,31 +181,83 @@ class ShardedKVService(_HostDriverLifecycle):
                     "for this item set)")
         keys, vals = kv.device_arrays()
         mesh = Mesh(np.array(jax.devices()[:n_shards]), (axis,))
-        return cls(kv=kv, mesh=mesh, axis=axis, keys=keys, vals=vals,
-                   driver=HostDriver())
+        svc = cls(kv=kv, mesh=mesh, axis=axis, keys=keys, vals=vals,
+                  driver=HostDriver())
+        if ttl:
+            # bootstrap items carry no TTL; deadlines arrive via
+            # set_many(..., deadlines=...) and are served/evicted by the
+            # TTL get server and the CLOCK sweeper chains
+            svc.exp = jnp.full(keys.shape, programs.NO_TTL, jnp.int32)
+            svc.sweep_hand = jnp.zeros((keys.shape[0],), jnp.int32)
+        return svc
 
     # -- the serving path (pure device state) --------------------------------
-    def get_many(self, queries, **kwargs) -> "kv_store.GetResult":
+    def get_many(self, queries, now=None, **kwargs) -> "kv_store.GetResult":
         """Sharded redn gets: chain programs execute at the owner shards.
         Works with the driver dead — no host state is touched.  While a
         resize is in flight the store serves from the double frame
         (new-then-old probes, watermark-gated) and each call also
         advances the migration by one quantum — "resize *while*
-        serving", with the serving traffic itself driving the growth."""
+        serving", with the serving traffic itself driving the growth.
+
+        ``now`` (TTL services only): the clock.  Steady state, the GET
+        server chain evaluates the expiry compare *in verbs* — an
+        expired resident answers as a miss without any host compare, so
+        lazy expiry keeps working with the driver dead.  During a resize
+        window the double-frame server has no deadline column; expired
+        hits are filtered host-side from the parked deadline snapshot (a
+        documented commit-layer stopgap — the resize window is bounded,
+        steady state is the headline path)."""
         import jax.numpy as jnp
 
         q = jnp.asarray(queries, jnp.int32)
         if q.ndim == 1:
             q = q[None, :]
         if self.resize is not None:
-            res = kv_store.sharded_get_migrating(
+            res = kv_store.sharded_get(
                 self.mesh, self.axis, self.resize, q, **kwargs)
             self._advance_resize()
+            if self.exp is not None and now is not None:
+                res = self._filter_expired(res, q, now)
             return res
+        if self.exp is not None and now is not None:
+            kwargs = dict(kwargs, exp=self.exp, now=now)
         return kv_store.sharded_get(self.mesh, self.axis, self.keys,
                                     self.vals, q, method="redn", **kwargs)
 
-    def set_many(self, set_keys, set_vals, **kwargs) -> "kv_store.SetResult":
+    def _filter_expired(self, res, q, now):
+        """Resize-window TTL stopgap: mask expired hits host-side."""
+        import jax.numpy as jnp
+
+        deadlines = self._deadline_map()
+        if not deadlines:
+            return res
+        qn = np.asarray(q)
+        expired = np.zeros(qn.shape, bool)
+        for k, d in deadlines.items():
+            if d != programs.NO_TTL and d - int(now) <= 0:
+                expired |= qn == k
+        if not expired.any():
+            return res
+        keep = jnp.asarray(~expired)
+        return kv_store.GetResult(
+            res.found & keep,
+            jnp.where(keep[..., None], res.values, 0),
+            res.ok, res.dropped, res.deferred)
+
+    def _deadline_map(self) -> dict:
+        """key -> deadline as of the resize window (snapshot + stamps)."""
+        out = {}
+        if self._exp_keys is not None:
+            kn = np.asarray(self._exp_keys)
+            en = np.asarray(self.exp)
+            mask = kn != 0
+            out.update(zip(kn[mask].tolist(), en[mask].tolist()))
+        out.update(self._pending_deadlines)
+        return out
+
+    def set_many(self, set_keys, set_vals, deadlines=None,
+                 **kwargs) -> "kv_store.SetResult":
         """Batched chain-offloaded sets: the writer chain programs execute
         at the owner shards against the authoritative device arrays, and
         neighborhood-full rows escalate to the displacer chain in the
@@ -211,11 +276,15 @@ class ShardedKVService(_HostDriverLifecycle):
         With ``n_writers`` > 1 the steady-state path serves each shard's
         window through that many *racing* writer lanes
         (:func:`repro.kvstore.store.sharded_set` ``n_writers=``); the
-        resize and fault paths stay serialized — concurrency is a
-        steady-state throughput lever, not a recovery one, and
-        :meth:`set_reliable`'s fsck + re-issue loop is unchanged as the
-        per-writer retry discipline (a lane that loses its CAS race to
-        a torn claim recovers exactly like an interrupted chain).
+        resize path stays serialized, and combining the writer race with
+        ``faults=`` raises :class:`repro.kvstore.store.
+        WriterFaultConflict` — the old behavior silently dropped the
+        writer group and ran a different experiment than asked for.
+
+        ``deadlines`` (TTL services only): (S, B) int32 absolute expiry
+        deadlines aligned with ``set_keys``.  ``None`` stamps NO_TTL —
+        a set without a TTL *clears* any previous one, Memcached's
+        replace-the-TTL semantics.
         """
         import jax.numpy as jnp
 
@@ -224,14 +293,23 @@ class ShardedKVService(_HostDriverLifecycle):
         if qk.ndim == 1:
             qk, qv = qk[None, :], qv[None, :, :]
         if self.resize is not None:
-            res, self.resize = kv_store.sharded_set_migrating(
+            res, self.resize = kv_store.sharded_set(
                 self.mesh, self.axis, self.resize, qk, qv, **kwargs)
             self._advance_resize()
+            self._stamp_pending(res.applied, qk, deadlines)
             return res
-        if self.n_writers > 1 and "faults" not in kwargs:
+        if self.n_writers > 1:
+            if kwargs.get("faults") is not None:
+                raise kv_store.WriterFaultConflict(self.n_writers)
             kwargs = dict(kwargs, n_writers=self.n_writers)
-        res, self.keys, self.vals = kv_store.sharded_set(
-            self.mesh, self.axis, self.keys, self.vals, qk, qv, **kwargs)
+        if self.exp is not None:
+            res, self.keys, self.vals, self.exp = kv_store.sharded_set(
+                self.mesh, self.axis, self.keys, self.vals, qk, qv,
+                exp=self.exp, deadlines=deadlines, **kwargs)
+        else:
+            res, self.keys, self.vals = kv_store.sharded_set(
+                self.mesh, self.axis, self.keys, self.vals, qk, qv,
+                **kwargs)
         if not self.auto_resize:
             return res
         # (materializing status here is a host sync — only pay it when
@@ -240,14 +318,17 @@ class ShardedKVService(_HostDriverLifecycle):
         if not needs.any():
             return res
         # --- auto-escalation: grow, then land the unplaced rows ----------
+        self._park_exp()
         self.resize = kv_store.begin_resize(self.keys, self.vals)
         retry = jnp.asarray(needs)
         # needs-resize rows were necessarily live/admitted, so the retry
         # mask subsumes any caller admission mask
-        rekw = {k: v for k, v in kwargs.items() if k != "live"}
-        res2, self.resize = kv_store.sharded_set_migrating(
+        rekw = {k: v for k, v in kwargs.items()
+                if k not in ("live", "n_writers")}
+        res2, self.resize = kv_store.sharded_set(
             self.mesh, self.axis, self.resize, qk, qv, live=retry,
             **rekw)
+        self._stamp_pending(res2.applied, qk, deadlines)
         self._advance_resize()
         status = jnp.where(retry, res2.status, res.status)
         ok = jnp.where(retry, res2.ok, res.ok)
@@ -255,6 +336,110 @@ class ShardedKVService(_HostDriverLifecycle):
         return kv_store.SetResult(status, applied, ok,
                                   res.dropped + res2.dropped,
                                   res.deferred)
+
+    # -- resize-window TTL bookkeeping (commit-layer, host-held) -------------
+    def _park_exp(self):
+        """Snapshot the frame the exp column is aligned to.  Keys keep
+        their identity across migration/displacement, so the deadlines
+        are re-derived by key match at cutover
+        (:func:`repro.kvstore.store.relocate_exp`)."""
+        if self.exp is not None and self._exp_keys is None:
+            self._exp_keys = self.keys
+
+    def _stamp_pending(self, applied, qk, deadlines):
+        """Record deadlines stamped while the frames were doubled; the
+        cutover folds them over the relocated column (last write wins,
+        None clears — Memcached's replace-the-TTL semantics)."""
+        if self.exp is None:
+            return
+        app = np.asarray(applied)
+        kn = np.asarray(qk)
+        dn = None if deadlines is None else np.asarray(deadlines)
+        for s, b in np.argwhere(app):
+            self._pending_deadlines[int(kn[s, b])] = (
+                programs.NO_TTL if dn is None else int(dn[s, b]))
+
+    # -- the delete path: deleter chain at the owner shards ------------------
+    def delete_many(self, del_keys, **kwargs) -> "kv_store.DeleteResult":
+        """Batched chain-offloaded DELETEs: the deleter chain matches the
+        key across its neighborhood and retires the bucket with the
+        re-read-comparand vacate CAS.  Works with the driver dead.
+
+        While a resize is in flight the delete runs against **both**
+        frames: vacating only the live copy would leave a stale old-frame
+        resident for the migrator to faithfully re-home — resurrecting
+        the deleted key at cutover.  Deleting from both frames leaves the
+        migrator nothing to copy, so a DELETE observed during growth
+        stays deleted after it (the no-resurrection property the
+        lifecycle tests pin)."""
+        import jax.numpy as jnp
+
+        qk = jnp.asarray(del_keys, jnp.int32)
+        if qk.ndim == 1:
+            qk = qk[None, :]
+        if self.resize is not None:
+            rs = self.resize
+            res_new, nk_new, nv_new = kv_store.sharded_delete(
+                self.mesh, self.axis, rs.new_keys, rs.new_vals, qk,
+                **kwargs)
+            res_old, nk_old, nv_old = kv_store.sharded_delete(
+                self.mesh, self.axis, rs.keys, rs.vals, qk, **kwargs)
+            self.resize = rs._replace(keys=nk_old, vals=nv_old,
+                                      new_keys=nk_new, new_vals=nv_new)
+            self._advance_resize()
+            hit_new = res_new.status == programs.DEL_DELETED
+            res = kv_store.DeleteResult(
+                jnp.where(hit_new, res_new.status, res_old.status),
+                res_new.applied | res_old.applied,
+                res_new.ok & res_old.ok,
+                jnp.maximum(res_new.dropped, res_old.dropped),
+                res_new.deferred)
+            if self.exp is not None:
+                kn = np.asarray(qk)
+                for s, b in np.argwhere(np.asarray(res.applied)):
+                    self._pending_deadlines.pop(int(kn[s, b]), None)
+        elif self.exp is not None:
+            res, self.keys, self.vals, self.exp = kv_store.sharded_delete(
+                self.mesh, self.axis, self.keys, self.vals, qk,
+                exp=self.exp, **kwargs)
+        else:
+            res, self.keys, self.vals = kv_store.sharded_delete(
+                self.mesh, self.axis, self.keys, self.vals, qk, **kwargs)
+        self.deletes_applied += int(np.asarray(res.applied).sum())
+        return res
+
+    def delete(self, key: int) -> bool:
+        """One DELETE through the deleter chain; True iff a bucket was
+        vacated (``DEL_MISS`` — deleting an absent key — returns False
+        but is not an error, as in Memcached)."""
+        kv_store.ShardedKV.check_key(key)
+        qk = np.zeros((self.kv.n_shards, 1), np.int32)
+        qk[0, 0] = key
+        res = self.delete_many(qk)
+        return bool(np.asarray(res.applied)[0, 0])
+
+    # -- the eviction path: CLOCK sweeper chain laps -------------------------
+    def sweep(self, now, count: int = 16) -> "kv_store.SweepReport":
+        """Advance the background CLOCK sweeper by ``count`` buckets per
+        shard: the sweeper chain reads each visited bucket's deadline,
+        evaluates the expiry predicate in Calc verbs, and vacates
+        expired buckets (deadline reset to NO_TTL).  Pure chain/device
+        work, driver-dead safe — eviction is a background writer lane,
+        exactly like the resize migrator."""
+        if self.exp is None:
+            raise ValueError(
+                "sweep() needs a TTL-enabled service "
+                "(ShardedKVService.start(..., ttl=True))")
+        if self.resize is not None:
+            raise ValueError(
+                "sweep() cannot run against the doubled frame — drive "
+                "the resize to completion first (drive_resize())")
+        report, self.keys, self.vals, self.exp = kv_store.sharded_sweep(
+            self.mesh, self.axis, self.keys, self.vals, self.exp,
+            self.sweep_hand, now, count=count)
+        self.sweep_hand = report.hand
+        self.sweeps_reclaimed += int(np.asarray(report.reclaimed).sum())
+        return report
 
     # -- incremental growth driver (device chains only; driver-dead safe) ----
     def _advance_resize(self, step: Optional[int] = None):
@@ -266,16 +451,96 @@ class ShardedKVService(_HostDriverLifecycle):
             step=step or self.resize_quantum)
         after = int(np.asarray(self.resize.watermark).min())
         if after == before and int(np.asarray(report.stuck).sum()):
-            stuck = np.asarray(report.stuck)
-            wm = np.asarray(self.resize.watermark)
-            shards = [s for s in range(len(stuck)) if stuck[s] > 0]
             # the watermark parks exactly on the bucket the quantum
-            # could not place — that *is* the stuck bucket
-            raise kv_store.ResizeStuck(shards, [int(wm[s]) for s in shards])
+            # could not place.  PR 5 raised ResizeStuck here — a capacity
+            # dead end the operator had to resolve.  Now the dead end
+            # *chains*: the doubled frame itself grows (2n -> 4n) and the
+            # parked residents land there; only a stuck *inner* growth
+            # still raises.
+            self._chain_growth()
+            return
         if kv_store.resize_done(self.resize):
-            self.keys, self.vals = kv_store.finish_resize(self.resize)
-            self.resize = None
-            self.resizes_completed += 1
+            self._cutover(*kv_store.finish_resize(self.resize))
+
+    def _chain_growth(self):
+        """Second chained growth: the 2n frame dead-ended (a resident is
+        unplaceable even displaced), so grow *it* — the migrator chains
+        drain 2n into a fresh 4n frame, then the still-parked old-frame
+        residents land in 4n through the writer chain.  Every step is
+        chain execution against device state; :class:`repro.kvstore.
+        store.ResizeStuck` survives only for a stuck inner growth."""
+        import jax.numpy as jnp
+
+        rs = self.resize
+        ok_np = np.asarray(rs.keys)
+        ov_np = np.asarray(rs.vals)
+        inner = kv_store.begin_resize(rs.new_keys, rs.new_vals)
+        while not kv_store.resize_done(inner):
+            before = int(np.asarray(inner.watermark).min())
+            inner, report = kv_store.sharded_resize(
+                self.mesh, self.axis, inner, step=self.resize_quantum)
+            after = int(np.asarray(inner.watermark).min())
+            if after == before and int(np.asarray(report.stuck).sum()):
+                stuck = np.asarray(report.stuck)
+                wm = np.asarray(inner.watermark)
+                shards = [s for s in range(len(stuck)) if stuck[s] > 0]
+                raise kv_store.ResizeStuck(
+                    shards, [int(wm[s]) for s in shards],
+                    "chained growth stuck: resident unplaceable even in "
+                    "the quadrupled frame (shards "
+                    f"{[int(s) for s in shards]})")
+        keys4, vals4 = kv_store.finish_resize(inner)
+        self.resizes_completed += 1          # the inner 2n -> 4n growth
+        # re-issue the parked old-frame residents through the writer
+        # chain against the quadrupled frame (zero-key slots are dead)
+        n_shards = ok_np.shape[0]
+        rows = [np.flatnonzero(ok_np[s] != 0) for s in range(n_shards)]
+        width = max([len(r) for r in rows] + [1])
+        qk = np.zeros((n_shards, width), np.int32)
+        qv = np.zeros((n_shards, width, ov_np.shape[-1]), np.int32)
+        for s, idx in enumerate(rows):
+            qk[s, :len(idx)] = ok_np[s, idx]
+            qv[s, :len(idx)] = ov_np[s, idx]
+        qkj = jnp.asarray(qk)
+        res, keys4, vals4 = kv_store.sharded_set(
+            self.mesh, self.axis, keys4, vals4, qkj, jnp.asarray(qv),
+            live=qkj != 0)
+        status = np.asarray(res.status)
+        landed = np.isin(status, (programs.SET_UPDATED,
+                                  programs.SET_INSERTED,
+                                  programs.SET_DISPLACED))
+        if ((qk != 0) & ~landed).any():
+            bad = np.argwhere((qk != 0) & ~landed)
+            raise kv_store.ResizeStuck(
+                [int(s) for s, _ in bad], [0 for _ in bad],
+                "chained growth stuck: parked resident did not land in "
+                "the quadrupled frame (statuses "
+                f"{status[(qk != 0) & ~landed].tolist()})")
+        self.chained_growths += 1
+        self._cutover(keys4, vals4)
+
+    def _cutover(self, keys, vals):
+        """Adopt a finished frame; on TTL services, re-derive the
+        deadline column (key match against the parked snapshot, then
+        the resize-window stamps, last write wins)."""
+        if self.exp is not None:
+            import jax.numpy as jnp
+
+            snap = self._exp_keys if self._exp_keys is not None \
+                else self.keys
+            exp = kv_store.relocate_exp(snap, self.exp, keys)
+            if self._pending_deadlines:
+                kn = np.asarray(keys)
+                en = np.array(exp)
+                for k, d in self._pending_deadlines.items():
+                    en[kn == k] = d
+                exp = jnp.asarray(en)
+            self.exp = exp
+            self._exp_keys = None
+            self._pending_deadlines = {}
+        self.keys, self.vals = keys, vals
+        self.resize = None
+        self.resizes_completed += 1
 
     def drive_resize(self):
         """Run the in-flight migration to completion (cutover included).

@@ -275,6 +275,36 @@ def local_chain_stateful(step_fn: Callable, carry, payload: jnp.ndarray,
     return resp, carry
 
 
+def local_chain_group(group_fn: Callable, carry, payload: jnp.ndarray,
+                      n_lanes: int):
+    """Loopback analogue of :func:`triggered_chain_group`.
+
+    Maintenance lanes that originate at the owning shard (the CLOCK
+    sweeper's laps, a local compaction pass) race against foreground
+    writer lanes over the same shared state, but need no dispatch/
+    combine pair: the request stream is partitioned into laps of
+    ``n_lanes`` consecutive rows and each lap is delivered to the
+    group's pre-posted lanes in one
+    :meth:`repro.core.programs.MultiWriterGroup.run_group` call, laps
+    serializing through the scan carry exactly like
+    :func:`local_chain_stateful`.  Zero-padded rows reach the lanes and
+    must be self-guarding.
+
+    ``group_fn(carry, lap_rows (n_lanes, W)) -> (carry, resp
+    (n_lanes, resp_words))``.  Returns ``(responses (B, resp_words),
+    final_carry)`` with responses aligned to the input rows.
+    """
+    rows = payload.shape[0]
+    pad = (-rows) % n_lanes
+    flat = payload
+    if pad:
+        flat = jnp.concatenate(
+            [flat, jnp.zeros((pad, flat.shape[1]), flat.dtype)])
+    laps = flat.reshape(-1, n_lanes, flat.shape[1])
+    carry, resp = lax.scan(group_fn, carry, laps)
+    return resp.reshape(-1, resp.shape[-1])[:rows], carry
+
+
 def triggered_chain_engine(engine, state, recv_wq: int, resp_region: int,
                            resp_words: int, payload: jnp.ndarray,
                            dest: jnp.ndarray, n_shards: int, capacity: int,

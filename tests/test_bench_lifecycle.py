@@ -1,0 +1,32 @@
+"""Lifecycle workload scenario (benchmarks/lifecycle.py)."""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import lifecycle  # noqa: E402
+
+
+def test_lifecycle_round_self_checks_smoke():
+    """One small mixed run: sets/deletes/sweeps bit-exact with the host
+    oracle, TTL reads match lookup_ttl, and the driver stays dead."""
+    m = lifecycle.run_lifecycle(batch=10, rounds=2, seed=11)
+    assert all(m["checks"].values()), m["checks"]
+    assert m["driver_dead_throughout"]
+
+
+@pytest.mark.slow
+def test_lifecycle_benchmark_long_run(tmp_path):
+    """The full run records the lifecycle rows and checks into the
+    BENCH json."""
+    out = tmp_path / "BENCH_chains.json"
+    results = lifecycle.main(out_path=str(out), long=True)
+    assert out.exists()
+    lc = results["lifecycle"]
+    assert lc["mixed"]["reclaimed_total"] > 0
+    assert lc["sweeper_throughput"]["buckets_per_s"] > 0
+    for name, ok in results["checks"].items():
+        if name.startswith("lifecycle"):
+            assert ok, name

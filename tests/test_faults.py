@@ -702,8 +702,21 @@ def test_chain_interrupted_raised_with_clean_store():
 
 
 def test_resize_stuck_is_typed_with_parked_bucket():
-    """A no-progress resize quantum raises ResizeStuck carrying the
-    parked (shard, bucket) — not a generic RuntimeError."""
+    """ResizeStuck carries the parked (shard, bucket) pairs and stays a
+    RuntimeError for back-compat.  (It now only fires when a *chained*
+    growth dead-ends too — a no-progress quantum on the doubled frame
+    escalates into a second growth instead; see the test below.)"""
+    err = store.ResizeStuck([0], [3])
+    assert isinstance(err, RuntimeError)      # back-compat for callers
+    assert err.stuck == [(0, 3)]
+    assert "shard 0 bucket 3" in str(err)
+
+
+def test_resize_dead_end_chains_second_growth():
+    """PR 5's nuance, closed: a resident unplaceable even in the doubled
+    frame no longer raises — the doubled frame itself grows (2n -> 4n,
+    drained by the migrator chains) and the parked resident lands there
+    through the writer chain.  Every key survives."""
     n = 8
     k0 = store.keys_homed_at(0, 1, n)[0]
     svc = failure.ShardedKVService.start([(k0, [5, 5])], n_shards=1,
@@ -720,12 +733,14 @@ def test_resize_stuck_is_typed_with_parked_bucket():
     svc.resize = store.ResizeState(
         jnp.asarray(svc.keys), jnp.asarray(svc.vals),
         jnp.asarray(nk), jnp.asarray(nv), jnp.zeros((1,), jnp.int32))
-    with pytest.raises(store.ResizeStuck) as ei:
-        svc._advance_resize()
-    err = ei.value
-    assert isinstance(err, RuntimeError)      # back-compat for callers
-    assert err.stuck == [(0, 0)]
-    assert "shard 0 bucket 0" in str(err)
+    svc.crash_host()                          # §5.6: chains only
+    svc._advance_resize()
+    assert svc.resize is None
+    assert svc.chained_growths == 1
+    assert svc.keys.shape[1] == 4 * n         # quadrupled frame adopted
+    all_keys = [k0] + [int(k) for k in nk[0]]
+    res = svc.get_many(np.asarray([all_keys], np.int32))
+    assert np.asarray(res.found).all()
 
 
 # --- satellite: readable statuses and results --------------------------------

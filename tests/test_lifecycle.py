@@ -1,0 +1,515 @@
+"""Full Memcached lifecycle: DELETE + TTL eviction, and the unified API.
+
+The claim under test (ISSUE 10's tentpole): with the host driver dead
+from the start, a key can be set, served, expire, be reclaimed by the
+background CLOCK sweeper, be deleted, and be re-inserted — entirely via
+pre-posted chain programs against device state, bit-exact with the host
+oracles (``hopscotch.delete_many`` / ``lookup_ttl`` / ``sweep_expired``).
+
+The nastiest races ride along:
+
+* delete vs set over shared state, proven linearizable by the same
+  exhaustive 2-writer cut-point sweep that proved the insert race
+  (``tests/test_faults.py``) — every cut bit-exact with one of the two
+  sequential oracles, fsck-clean;
+* delete racing the migrator on a half-migrated bucket — the stale
+  old-frame copy must not resurrect the deleted key at cutover;
+* a GET observing a bucket mid-vacate — the torn vacate (EMPTY key,
+  stale deadline) is classified and repaired by fsck, and is never a
+  ghost hit.
+
+Plus the API-redesign satellites: the unified ``sharded_get`` /
+``sharded_set`` dispatchers with bit-exact deprecation shims, the
+``repro.kvstore`` public surface, and the typed
+``n_writers``/``faults`` exclusivity error.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import analysis, machine, programs
+from repro.core import faults as faults_mod
+from repro.kvstore import fsck, hopscotch, store
+from repro.rdma import failure, isolation
+
+TERMINAL_SET = (programs.SET_UPDATED, programs.SET_INSERTED,
+                programs.SET_DISPLACED)
+
+
+def _one_shard_mesh():
+    return Mesh(np.array(jax.devices()[:1]), ("kv",))
+
+
+def _seeded(n=16, v=2, h=8, items=((1, (11, 12)), (2, (21, 22)),
+                                   (7, (71, 72)))):
+    """A host oracle table plus its device image."""
+    t = hopscotch.make_table(n, v, h)
+    st = hopscotch.insert_many(t, [k for k, _ in items],
+                               [list(val) for _, val in items])
+    assert all(int(s) in TERMINAL_SET for s in st)
+    return t, jnp.asarray(t.keys)[None], jnp.asarray(t.values)[None]
+
+
+# --- verifier admission ------------------------------------------------------
+
+@pytest.mark.parametrize("name", [
+    "hopscotch_deleter", "clock_sweeper", "hopscotch_server_ttl",
+    "multi_writer_del_group", "multi_writer_sweep_group"])
+def test_lifecycle_programs_admitted_by_verifier(name):
+    """The new chain programs pass the PR 7 static admission gate (at
+    most declared-family waivers — a failed pass is a build error)."""
+    assert analysis.verify_builder(name).ok(), name
+
+
+# --- DELETE: deleter chain bit-exact with the host oracle --------------------
+
+def test_sharded_delete_bit_exact_with_host_oracle():
+    t, keys, vals = _seeded()
+    mesh = _one_shard_mesh()
+    dels = [1, 5, 7]                      # hit, miss, hit
+    res, nk, nv = store.sharded_delete(mesh, "kv", keys, vals,
+                                       jnp.asarray([dels], jnp.int32))
+    want = hopscotch.delete_many(t, dels)  # mutates t in order
+    np.testing.assert_array_equal(np.asarray(res.status)[0], want)
+    np.testing.assert_array_equal(np.asarray(nk)[0], t.keys)
+    np.testing.assert_array_equal(np.asarray(nv)[0], t.values)
+    assert np.asarray(res.applied)[0].tolist() == [True, False, True]
+
+
+def test_sharded_delete_resets_deadline_column():
+    _, keys, vals = _seeded()
+    exp = jnp.where(keys == 1, 123, hopscotch.NO_TTL).astype(jnp.int32)
+    mesh = _one_shard_mesh()
+    res, nk, nv, ne = store.sharded_delete(
+        mesh, "kv", keys, vals, jnp.asarray([[1]], jnp.int32), exp=exp)
+    assert bool(np.asarray(res.applied)[0, 0])
+    # no torn vacate left behind: the vacated bucket's deadline is reset
+    assert fsck.check_invariants(nk, nv, neighborhood=8, exp=ne).clean
+    assert (np.asarray(ne) == hopscotch.NO_TTL).all()
+
+
+# --- TTL GET: expiry compare evaluated in Calc verbs -------------------------
+
+def test_ttl_get_bit_exact_with_lookup_ttl():
+    t, keys, vals = _seeded()
+    exp = np.full(t.keys.shape, hopscotch.NO_TTL, np.int32)
+    exp[t.keys == 7] = 100                # key 7 expires at t=100
+    mesh = _one_shard_mesh()
+    q = jnp.asarray([[1, 2, 7, 9]], jnp.int32)
+    for now in (50, 100, 150):
+        res = store.sharded_get(mesh, "kv", keys, vals, q,
+                                exp=jnp.asarray(exp)[None], now=now)
+        want_f, want_v = hopscotch.lookup_ttl(
+            jnp.asarray(t.keys), jnp.asarray(t.values),
+            jnp.asarray(exp), q[0], now, 8)
+        np.testing.assert_array_equal(np.asarray(res.found)[0],
+                                      np.asarray(want_f), err_msg=str(now))
+        np.testing.assert_array_equal(np.asarray(res.values)[0],
+                                      np.asarray(want_v), err_msg=str(now))
+    # the lapsed deadline answered as a miss, not a ghost hit
+    res = store.sharded_get(mesh, "kv", keys, vals, q,
+                            exp=jnp.asarray(exp)[None], now=150)
+    assert np.asarray(res.found)[0].tolist() == [True, True, False, False]
+
+
+def test_ttl_get_requires_both_exp_and_now():
+    _, keys, vals = _seeded()
+    mesh = _one_shard_mesh()
+    q = jnp.asarray([[1]], jnp.int32)
+    with pytest.raises(ValueError, match="exp"):
+        store.sharded_get(mesh, "kv", keys, vals, q,
+                          exp=jnp.zeros_like(keys))
+    with pytest.raises(ValueError, match="now"):
+        store.sharded_get(mesh, "kv", keys, vals, q, now=5)
+
+
+def test_ttl_set_stamps_and_clears_deadlines():
+    _, keys, vals = _seeded()
+    exp = jnp.where(keys == 7, 100, hopscotch.NO_TTL).astype(jnp.int32)
+    mesh = _one_shard_mesh()
+    # stamp a new key with a deadline, and re-set key 1 WITHOUT one
+    res, nk, nv, ne = store.sharded_set(
+        mesh, "kv", keys, vals, jnp.asarray([[9, 1]], jnp.int32),
+        jnp.asarray([[[91, 92], [13, 14]]], jnp.int32),
+        exp=exp, deadlines=jnp.asarray([[500, 0]], jnp.int32))
+    ne = np.asarray(ne)
+    nk0 = np.asarray(nk)[0]
+    assert ne[0][nk0 == 9] == 500
+    assert ne[0][nk0 == 7] == 100          # untouched key keeps its TTL
+    # Memcached replace-the-TTL semantics are exercised via deadlines
+    # row 0 above; a set with deadlines=None clears instead:
+    res2, nk2, nv2, ne2 = store.sharded_set(
+        mesh, "kv", nk, nv, jnp.asarray([[9]], jnp.int32),
+        jnp.asarray([[[93, 94]]], jnp.int32), exp=ne)
+    ne2 = np.asarray(ne2)
+    assert ne2[0][np.asarray(nk2)[0] == 9] == hopscotch.NO_TTL
+
+
+# --- CLOCK sweeper: chain-driven reclaim bit-exact with the oracle -----------
+
+def test_sharded_sweep_bit_exact_with_sweep_expired():
+    t, keys, vals = _seeded()
+    exp = np.full(t.keys.shape, hopscotch.NO_TTL, np.int32)
+    exp[t.keys == 2] = 40
+    exp[t.keys == 7] = 90
+    mesh = _one_shard_mesh()
+    hand = jnp.zeros((1,), jnp.int32)
+    rep, nk, nv, ne = store.sharded_sweep(
+        mesh, "kv", keys, vals, jnp.asarray(exp)[None], hand, now=100,
+        count=16)
+    want_st, want_exp = hopscotch.sweep_expired(t, exp, 100, 0, 16)
+    np.testing.assert_array_equal(np.asarray(rep.status)[0], want_st)
+    np.testing.assert_array_equal(np.asarray(nk)[0], t.keys)
+    np.testing.assert_array_equal(np.asarray(nv)[0], t.values)
+    np.testing.assert_array_equal(np.asarray(ne)[0], want_exp)
+    assert int(np.asarray(rep.reclaimed)[0]) == 2
+    assert np.asarray(rep.hand).tolist() == [0]      # 16 % 16: wrapped
+    assert fsck.check_invariants(nk, nv, neighborhood=8, exp=ne).clean
+
+
+def test_sweeper_lap_under_fair_quotas_with_racing_set():
+    """The sweeper as a background *writer lane*: one SET lane and one
+    SWEEP lane interleave over the shared image under a fair_quotas
+    schedule — both quiesce terminal, the expired bucket is reclaimed,
+    the new key lands, and the image is fsck-clean."""
+    n, v, h = 16, 2, 4
+    group = programs.build_multi_writer_group(
+        n, v, neighborhood=h, n_writers=2, lane_kinds=("set", "sweep"))
+    t, _, _ = _seeded(n, v, h)
+    exp = np.full(n, hopscotch.NO_TTL, np.int32)
+    victim_bucket = int(np.flatnonzero(t.keys == 7)[0])
+    exp[victim_bucket] = 50
+    pay_set = group.device_payloads(
+        jnp.asarray([9]), jnp.asarray([hopscotch.bucket_of(9, n)]),
+        jnp.asarray([[91, 92]]))[0]
+    pay_swp = group.device_sweep_payloads(
+        jnp.asarray([victim_bucket]), now=100)[0]
+    pay_swp = jnp.pad(pay_swp, (0, pay_set.shape[0] - pay_swp.shape[0]))
+    sched = isolation.fair_quotas([1.0, 1.0], n_rounds=group.fuel)
+    st, nk, nv, ne = group.run_group(
+        jnp.asarray(t.keys), jnp.asarray(t.values),
+        jnp.stack([pay_set, pay_swp]), sched, group.fuel,
+        exp=jnp.asarray(exp))
+    assert int(st[0]) in TERMINAL_SET
+    assert int(st[1]) == programs.SWEEP_RECLAIMED
+    nk, ne = np.asarray(nk), np.asarray(ne)
+    assert (nk == 9).any() and not (nk == 7).any()
+    assert ne[victim_bucket] == hopscotch.NO_TTL
+    assert fsck.check_invariants(nk[None], np.asarray(nv)[None],
+                                 neighborhood=h, exp=ne[None]).clean
+
+
+# --- delete vs set: exhaustive 2-writer cut-point sweep ----------------------
+#
+# Mirrors the insert-race sweep in tests/test_faults.py: a SET lane
+# (inserting a fresh key) and a DELETE lane (vacating a resident of the
+# same neighborhood) race over one shared image.  The two sequential
+# orders legitimately differ — delete-first frees the home bucket, so
+# the insert lands *there*; set-first lands in the last free slot — and
+# every cut must commit bit-exactly one of them, fsck-clean.
+
+def _del_vs_set_scenario():
+    n, v, h = 16, 2, 4
+    group = programs.build_multi_writer_group(
+        n, v, neighborhood=h, n_writers=2, lane_kinds=("set", "delete"))
+    homed = store.keys_homed_at(3, 4, n)
+    keys0 = np.zeros(n, np.int32)
+    vals0 = np.zeros((n, v), np.int32)
+    for b, k in zip((3, 4, 5), homed[:3]):   # one free slot (bucket 6)
+        keys0[b] = k
+        vals0[b] = [k & 0xFF, b]
+    return group, h, keys0, vals0, homed[3], homed[0]
+
+
+def _del_vs_set_oracles(h, keys0, vals0, set_key, del_key):
+    n = len(keys0)
+    w = programs.build_hopscotch_writer(n, len(vals0[0]), neighborhood=h)
+    d = programs.build_hopscotch_deleter(n, len(vals0[0]), neighborhood=h)
+
+    def run_set(k, v):
+        pay = w.device_payloads(
+            jnp.asarray([set_key]),
+            jnp.asarray([hopscotch.bucket_of(set_key, n)]),
+            jnp.asarray([[set_key & 0xFF, 99]]))[0]
+        st, k, v = w.run_one(k, v, pay, w.fuel)
+        assert int(st) in TERMINAL_SET
+        return k, v
+
+    def run_del(k, v):
+        pay = d.device_payloads(
+            jnp.asarray([del_key]),
+            jnp.asarray([hopscotch.bucket_of(del_key, n)]))[0]
+        st, k, v = d.run_one(k, v, pay, d.fuel)
+        assert int(st) == programs.DEL_DELETED
+        return k, v
+
+    outs = {}
+    for name, steps in (("set-del", (run_set, run_del)),
+                        ("del-set", (run_del, run_set))):
+        k, v = jnp.asarray(keys0), jnp.asarray(vals0)
+        for step in steps:
+            k, v = step(k, v)
+        outs[name] = (np.asarray(k), np.asarray(v))
+    return outs
+
+
+def _sweep_del_vs_set(cuts):
+    group, h, keys0, vals0, set_key, del_key = _del_vs_set_scenario()
+    oracles = _del_vs_set_oracles(h, keys0, vals0, set_key, del_key)
+    n = len(keys0)
+    assert oracles["set-del"][0].tolist() != oracles["del-set"][0].tolist()
+    pay_set = group.device_payloads(
+        jnp.asarray([set_key]),
+        jnp.asarray([hopscotch.bucket_of(set_key, n)]),
+        jnp.asarray([[set_key & 0xFF, 99]]))[0]
+    pay_del = group.device_delete_payloads(
+        jnp.asarray([del_key]),
+        jnp.asarray([hopscotch.bucket_of(del_key, n)]))[0]
+    pay_del = jnp.pad(pay_del, (0, pay_set.shape[0] - pay_del.shape[0]))
+    pay = jnp.stack([pay_set, pay_del])
+    k0, v0 = jnp.asarray(keys0), jnp.asarray(vals0)
+    diverged = []
+    for cut in cuts:
+        sched = machine.Schedule.cut(jnp.int32(cut))
+        st, k, v = group.run_group(k0, v0, pay, sched, group.fuel)
+        st, k, v = np.asarray(st), np.asarray(k), np.asarray(v)
+        assert int(st[0]) in TERMINAL_SET, (cut, st)
+        assert int(st[1]) == programs.DEL_DELETED, (cut, st)
+        rep = fsck.check_invariants(k[None], v[None], neighborhood=h)
+        assert rep.clean, (cut, rep)
+        hit = any((k == ok).all() and (v == ov).all()
+                  for ok, ov in oracles.values())
+        if not hit:
+            diverged.append(cut)
+    assert diverged == [], f"non-linearizable cuts: {diverged}"
+
+
+def test_delete_vs_set_cutpoint_sweep_smoke():
+    group, *_ = _del_vs_set_scenario()
+    fuel = group.writer_fuel
+    _sweep_del_vs_set(sorted(set(list(range(0, fuel + 1, 7)) + [fuel])))
+
+
+@pytest.mark.slow
+def test_delete_vs_set_cutpoint_sweep_full():
+    group, *_ = _del_vs_set_scenario()
+    _sweep_del_vs_set(range(group.writer_fuel + 1))
+
+
+# --- the two nastiest lifecycle races ----------------------------------------
+
+def test_delete_racing_migrator_no_resurrection():
+    """DELETE lands on a half-migrated store: the key's stale old-frame
+    copy must not be re-homed by the migrator after the delete — a
+    deleted key stays deleted through the cutover."""
+    n = 16
+    homed = store.keys_homed_at(3, 4, n)
+    svc = failure.ShardedKVService.start(
+        [(int(k), [int(k) & 0xFF, 9]) for k in homed],
+        n_shards=1, buckets_per_shard=n, val_words=2)
+    svc.resize = store.begin_resize(svc.keys, svc.vals)
+    svc.resize_quantum = 2
+    svc._advance_resize()                  # some buckets migrated, some not
+    assert 0 < int(np.asarray(svc.resize.watermark)[0]) < n
+    victim = int(homed[0])                 # home bucket 3: not yet migrated
+    res = svc.delete_many(np.asarray([[victim]], np.int32))
+    assert bool(np.asarray(res.applied)[0, 0])
+    svc.drive_resize()
+    assert svc.resize is None
+    g = svc.get_many(np.asarray([[victim] + [int(k) for k in homed[1:]]],
+                                np.int32))
+    found = np.asarray(g.found)[0]
+    assert not found[0], "deleted key resurrected by the migrator"
+    assert found[1:].all()                 # survivors all re-homed
+
+
+def test_get_mid_vacate_is_never_a_ghost_hit():
+    """A GET observing a bucket mid-vacate (claim CAS retired the key,
+    stale-row zeroing not yet executed): the response is a miss, and
+    fsck classifies the torn vacate and repairs it."""
+    t, keys, vals = _seeded()
+    exp = np.full((1,) + t.keys.shape, hopscotch.NO_TTL, np.int32)
+    b = int(np.flatnonzero(t.keys == 7)[0])
+    # hand-craft the torn point: key word already EMPTY, value row and
+    # deadline still in place
+    keys = keys.at[0, b].set(hopscotch.EMPTY)
+    exp[0, b] = 123
+    exp = jnp.asarray(exp)
+    mesh = _one_shard_mesh()
+    res = store.sharded_get(mesh, "kv", keys, vals,
+                            jnp.asarray([[7]], jnp.int32), exp=exp, now=50)
+    assert not bool(np.asarray(res.found)[0, 0])     # no ghost hit
+    report = fsck.check_invariants(keys, vals, neighborhood=8, exp=exp)
+    kinds = [v.kind for v in report.violations]
+    assert "torn-vacate" in kinds
+    assert report.repairable
+    keys2, vals2, exp2, actions = fsck.repair(keys, vals, report,
+                                              neighborhood=8, exp=exp)
+    assert fsck.check_invariants(keys2, vals2, neighborhood=8,
+                                 exp=exp2).clean
+    assert int(np.asarray(exp2)[0, b]) == hopscotch.NO_TTL
+
+
+# --- §5.6 extended: the whole lifecycle with the driver dead -----------------
+
+def test_full_lifecycle_with_driver_dead_from_start():
+    """set -> get -> expire -> sweeper reclaim -> delete -> re-insert,
+    every verb a chain execution against device state, host driver dead
+    before the first request; bit-exact with the host oracle table."""
+    svc = failure.ShardedKVService.start(
+        [(1, [11, 11]), (2, [22, 22])], n_shards=1, buckets_per_shard=16,
+        val_words=2, ttl=True)
+    svc.crash_host()
+    oracle = hopscotch.make_table(16, 2, 8)
+    hopscotch.insert_many(oracle, [1, 2], [[11, 11], [22, 22]])
+    oexp = np.full(16, hopscotch.NO_TTL, np.int32)
+
+    def check(now):
+        q = [1, 2, 5]
+        g = svc.get_many(np.asarray([q], np.int32), now=now)
+        want_f, want_v = hopscotch.lookup_ttl(
+            jnp.asarray(oracle.keys), jnp.asarray(oracle.values),
+            jnp.asarray(oexp), jnp.asarray(q), now, 8)
+        np.testing.assert_array_equal(np.asarray(g.found)[0],
+                                      np.asarray(want_f))
+        np.testing.assert_array_equal(np.asarray(g.values)[0],
+                                      np.asarray(want_v))
+
+    # set (with TTL)
+    svc.set_many(np.asarray([[5]], np.int32), np.asarray([[[55, 56]]],
+                 np.int32), deadlines=np.asarray([[100]], np.int32))
+    st = hopscotch.insert_many(oracle, [5], [[55, 56]])
+    oexp[oracle.keys == 5] = 100
+    assert int(st[0]) in TERMINAL_SET
+    check(now=50)                          # get: hit
+    check(now=150)                         # expired: lazy miss
+    # sweeper reclaim
+    rep = svc.sweep(now=150, count=16)
+    _, oexp = hopscotch.sweep_expired(oracle, oexp, 150, 0, 16)
+    assert int(np.asarray(rep.reclaimed).sum()) == 1
+    np.testing.assert_array_equal(np.asarray(svc.keys)[0], oracle.keys)
+    np.testing.assert_array_equal(np.asarray(svc.exp)[0], oexp)
+    # delete
+    assert svc.delete(1)
+    hopscotch.delete_many(oracle, [1])
+    check(now=160)
+    # re-insert
+    svc.set_many(np.asarray([[1]], np.int32),
+                 np.asarray([[[77, 78]]], np.int32))
+    hopscotch.insert_many(oracle, [1], [[77, 78]])
+    check(now=170)
+    np.testing.assert_array_equal(np.asarray(svc.keys)[0], oracle.keys)
+    np.testing.assert_array_equal(np.asarray(svc.vals)[0], oracle.values)
+    assert not svc.host_alive()            # dead the whole time
+
+
+# --- unified dispatchers + deprecation shims ---------------------------------
+
+def test_get_shim_isolated_bit_exact_and_deprecated():
+    _, keys, vals = _seeded()
+    mesh = _one_shard_mesh()
+    q = jnp.asarray([[1, 2, 7, 9]], jnp.int32)
+    clients = jnp.asarray([[0, 0, 1, 1]], jnp.int32)
+    bkt = isolation.init(2, burst=2.0)
+    args = dict(now_us=10.0, rate_per_us=0.1, burst=2.0)
+    res_new, b_new = store.sharded_get(
+        mesh, "kv", keys, vals, q,
+        isolation=store.Admission(clients, bkt, **args))
+    with pytest.warns(DeprecationWarning, match="sharded_get_isolated"):
+        res_old, b_old = store.sharded_get_isolated(
+            mesh, "kv", keys, vals, q, clients, bkt, **args)
+    for a, b in zip(res_new, res_old):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(b_new.tokens),
+                                  np.asarray(b_old.tokens))
+
+
+def test_get_set_shims_migrating_bit_exact_and_deprecated():
+    _, keys, vals = _seeded()
+    mesh = _one_shard_mesh()
+    rs = store.begin_resize(keys, vals)
+    q = jnp.asarray([[1, 2, 9]], jnp.int32)
+    res_new = store.sharded_get(mesh, "kv", rs, q)
+    with pytest.warns(DeprecationWarning, match="sharded_get_migrating"):
+        res_old = store.sharded_get_migrating(mesh, "kv", rs, q)
+    for a, b in zip(res_new, res_old):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    sk = jnp.asarray([[9]], jnp.int32)
+    sv = jnp.asarray([[[91, 92]]], jnp.int32)
+    set_new, rs_new = store.sharded_set(mesh, "kv", rs, sk, sv)
+    with pytest.warns(DeprecationWarning, match="sharded_set_migrating"):
+        set_old, rs_old = store.sharded_set_migrating(mesh, "kv", rs, sk, sv)
+    for a, b in zip(set_new, set_old):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(rs_new, rs_old):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --- typed n_writers/faults exclusivity (ROADMAP open item from PR 8) --------
+
+def test_sharded_set_n_writers_and_faults_is_typed_error():
+    _, keys, vals = _seeded()
+    mesh = _one_shard_mesh()
+    rows = np.full((1, 1, faults_mod.FIELDS), faults_mod.NONE, np.int32)
+    rows[0, 0] = np.asarray(faults_mod.FaultPlan.cas_fail_at(0).as_rows(),
+                            np.int32)
+    plan = faults_mod.FaultPlan.from_row(jnp.asarray(rows))
+    with pytest.raises(store.WriterFaultConflict) as ei:
+        store.sharded_set(mesh, "kv", keys, vals,
+                          jnp.asarray([[9]], jnp.int32),
+                          jnp.asarray([[[1, 2]]], jnp.int32),
+                          n_writers=2, faults=plan)
+    err = ei.value
+    assert isinstance(err, ValueError)          # typed, still a ValueError
+    assert "n_writers" in str(err) and "faults" in str(err)
+    assert err.n_writers == 2
+
+
+def test_service_set_many_surfaces_writer_fault_conflict():
+    """The service no longer silently drops the writer group when a
+    FaultPlan rides along — the conflict is surfaced, typed."""
+    svc = failure.ShardedKVService.start([(1, [1, 1])], n_shards=1,
+                                         buckets_per_shard=16, val_words=2)
+    svc.n_writers = 2
+    rows = np.full((1, 1, faults_mod.FIELDS), faults_mod.NONE, np.int32)
+    rows[0, 0] = np.asarray(faults_mod.FaultPlan.cas_fail_at(0).as_rows(),
+                            np.int32)
+    plan = faults_mod.FaultPlan.from_row(jnp.asarray(rows))
+    with pytest.raises(store.WriterFaultConflict):
+        svc.set_many(np.asarray([[7]], np.int32),
+                     np.asarray([[[7, 7]]], np.int32), faults=plan)
+    # and the plain multi-writer path still serves
+    res = svc.set_many(np.asarray([[7]], np.int32),
+                       np.asarray([[[7, 7]]], np.int32))
+    assert int(np.asarray(res.status)[0, 0]) in TERMINAL_SET
+
+
+# --- the public surface ------------------------------------------------------
+
+def test_kvstore_public_surface():
+    import repro.kvstore as kvstore
+
+    for name in ("GetResult", "SetResult", "DeleteResult", "SweepReport",
+                 "Admission", "WriterFaultConflict", "STATUS_NAMES",
+                 "status_name", "HopscotchTable", "ShardedKVService"):
+        assert hasattr(kvstore, name), name
+    assert kvstore.ShardedKVService is failure.ShardedKVService
+    assert kvstore.status_name(programs.DEL_DELETED) == "DEL_DELETED"
+    assert kvstore.status_name(programs.SWEEP_RECLAIMED) == "SWEEP_RECLAIMED"
+
+
+def test_delete_result_shares_histogram_repr_idiom():
+    z = jnp.zeros((1,), jnp.int32)
+    dres = store.DeleteResult(
+        jnp.asarray([[programs.DEL_DELETED, programs.DEL_MISS]]),
+        jnp.asarray([[True, False]]), jnp.asarray([[True, True]]), z, z)
+    sres = store.SetResult(
+        jnp.asarray([[programs.SET_INSERTED, programs.SET_UPDATED]]),
+        jnp.asarray([[True, True]]), jnp.asarray([[True, True]]), z, z)
+    assert "DEL_DELETED=1" in repr(dres) and "DEL_MISS=1" in repr(dres)
+    assert "SET_INSERTED=1" in repr(sres)
+    # one shared helper, not a third hand-rolled copy
+    assert "ok 2/2" in repr(dres) and "ok 2/2" in repr(sres)
